@@ -1,0 +1,49 @@
+"""Fig 7: effective checkpoint throughput vs model size, per engine.
+
+Effective throughput = checkpoint bytes / time training is *blocked*
+(save prologue + capture barrier before the next update) — the paper's
+application-facing metric. Trained for several iterations checkpointing
+every iteration, like the paper's stress setup.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+from .common import (ENGINE_ORDER, TempDir, bench_cfg, make_trainer,
+                     manager_for, save_results, state_nbytes)
+
+
+def run(quick: bool = False) -> List[dict]:
+    scales = [(2, 256), (2, 512)] if quick else [(2, 256), (2, 512), (4, 768)]
+    iters = 4 if quick else 8
+    rows = []
+    for n_layers, d in scales:
+        cfg = bench_cfg(n_layers, d)
+        for mode in ENGINE_ORDER:
+            with TempDir() as ckpt_dir:
+                mgr = manager_for(mode, ckpt_dir)
+                tr = make_trainer(cfg, mgr)
+                nbytes = state_nbytes(tr.state())
+                recs = tr.run(iters, ckpt_interval=1)
+                mgr.drain()
+                blocked = sum(r.ckpt_stall_s for r in recs
+                              if r.ckpt_requested or r.ckpt_stall_s > 0)
+                n_ckpts = sum(1 for r in recs if r.ckpt_requested)
+                mgr.close()
+            thpt = (nbytes * n_ckpts) / max(blocked, 1e-9)
+            rows.append({"model": cfg.name, "state_mb": nbytes / 2**20,
+                         "engine": mode, "n_ckpts": n_ckpts,
+                         "blocked_s": blocked,
+                         "effective_gbps": thpt / 1e9})
+    save_results("fig07_throughput", rows)
+    return rows
+
+
+def summarize(rows) -> List[str]:
+    out = []
+    for r in rows:
+        out.append(f"fig07/{r['model']}/{r['engine']},"
+                   f"{r['blocked_s']*1e6/max(r['n_ckpts'],1):.0f},"
+                   f"eff_thpt={r['effective_gbps']:.2f}GB/s")
+    return out

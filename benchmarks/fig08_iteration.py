@@ -1,0 +1,40 @@
+"""Fig 8: average training iteration time under per-iteration checkpointing.
+
+Splits per-iteration time into training vs checkpoint-induced stall, per
+engine. DataStates should reduce the checkpoint component to near zero.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+from .common import (ENGINE_ORDER, TempDir, bench_cfg, make_trainer,
+                     manager_for, save_results)
+
+
+def run(quick: bool = False) -> List[dict]:
+    cfg = bench_cfg(2, 512)
+    iters = 4 if quick else 10
+    rows = []
+    # baseline without checkpointing
+    tr0 = make_trainer(cfg, None)
+    base = tr0.run(iters)
+    base_iter = sorted(r.iter_s for r in base)[len(base) // 2]
+    for mode in ENGINE_ORDER:
+        with TempDir() as d:
+            mgr = manager_for(mode, d)
+            tr = make_trainer(cfg, mgr)
+            recs = tr.run(iters, ckpt_interval=1)
+            mgr.close()
+        iter_mean = sum(r.iter_s for r in recs[1:]) / (len(recs) - 1)
+        stall_mean = sum(r.ckpt_stall_s for r in recs[1:]) / (len(recs) - 1)
+        rows.append({"engine": mode, "iter_s": iter_mean,
+                     "train_s": base_iter, "ckpt_stall_s": stall_mean,
+                     "overhead_frac": max(iter_mean - base_iter, 0) / base_iter})
+    save_results("fig08_iteration", rows, meta={"baseline_iter_s": base_iter})
+    return rows
+
+
+def summarize(rows) -> List[str]:
+    return [f"fig08/iter_time/{r['engine']},{r['iter_s']*1e6:.0f},"
+            f"stall={r['ckpt_stall_s']*1e3:.1f}ms" for r in rows]

@@ -1,0 +1,40 @@
+"""Fig 9: end-to-end training time for N iterations, per-iteration ckpts.
+
+Also captures the paper's no-I/O-tail claim: the final wait for outstanding
+flushes is reported separately.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+from .common import (ENGINE_ORDER, TempDir, bench_cfg, make_trainer,
+                     manager_for, save_results)
+
+
+def run(quick: bool = False) -> List[dict]:
+    cfg = bench_cfg(2, 512)
+    iters = 5 if quick else 15   # the paper uses 15 iterations
+    rows = []
+    for mode in ENGINE_ORDER:
+        with TempDir() as d:
+            mgr = manager_for(mode, d)
+            tr = make_trainer(cfg, mgr)
+            t0 = time.perf_counter()
+            tr.run(iters, ckpt_interval=1)
+            t_loop = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            mgr.wait_for_persist()
+            t_tail = time.perf_counter() - t0
+            mgr.close()
+        rows.append({"engine": mode, "iters": iters,
+                     "e2e_s": t_loop + t_tail, "loop_s": t_loop,
+                     "io_tail_s": t_tail})
+    save_results("fig09_end_to_end", rows)
+    return rows
+
+
+def summarize(rows) -> List[str]:
+    return [f"fig09/e2e/{r['engine']},{r['e2e_s']*1e6:.0f},"
+            f"tail={r['io_tail_s']*1e3:.0f}ms" for r in rows]

@@ -1,0 +1,76 @@
+"""Fig 14: node-level flush throughput vs payload size, per engine, plus an
+"ideal" host-only pwrite baseline (the peak-capability reference line)."""
+
+from __future__ import annotations
+
+import os
+import time
+from typing import List
+
+import jax.numpy as jnp
+import numpy as np
+
+from .common import (ENGINE_ORDER, TempDir, manager_for, save_results,
+                     THROTTLE_MBPS)
+
+
+def run(quick: bool = False) -> List[dict]:
+    sizes_mb = [8, 32] if quick else [8, 32, 128]
+    rows = []
+    for mb in sizes_mb:
+        n = mb * (1 << 20) // 4
+        state = {"model": {"t": jnp.arange(n, dtype=jnp.float32)},
+                 "meta": {"step": 0}}
+        # ideal: host->file writes of an existing host buffer from 4
+        # parallel writers (the paper's 4 ranks/node microbench), 4 MiB
+        # chunks at the same per-thread throttle the engines' flush threads
+        # see — the peak-capability line (no staging, no serialization).
+        host = np.arange(n, dtype=np.float32)
+        chunk = 4 << 20
+        n_writers = 4
+        with TempDir() as d:
+            import threading
+
+            def writer(widx: int) -> None:
+                lo = widx * host.nbytes // n_writers
+                hi = (widx + 1) * host.nbytes // n_writers
+                fd = os.open(os.path.join(d, f"ideal{widx}.bin"),
+                             os.O_WRONLY | os.O_CREAT | os.O_TRUNC)
+                view = memoryview(host).cast("B")
+                for off in range(lo, hi, chunk):
+                    t_c = time.perf_counter()
+                    end = min(off + chunk, hi)
+                    os.pwrite(fd, view[off:end], off - lo)
+                    left = (end - off) / (THROTTLE_MBPS * 1e6) \
+                        - (time.perf_counter() - t_c)
+                    if left > 0:
+                        time.sleep(left)
+                os.close(fd)
+
+            t0 = time.perf_counter()
+            ts = [threading.Thread(target=writer, args=(i,))
+                  for i in range(n_writers)]
+            for t in ts:
+                t.start()
+            for t in ts:
+                t.join()
+            ideal = host.nbytes / (time.perf_counter() - t0)
+        rows.append({"size_mb": mb, "engine": "ideal-host-only",
+                     "gbps": ideal / 1e9})
+        for mode in ENGINE_ORDER:
+            with TempDir() as d:
+                mgr = manager_for(mode, d, cache_mb=max(2 * mb, 64))
+                t0 = time.perf_counter()
+                fut = mgr.save(0, state)
+                fut.wait_persisted()
+                dt = time.perf_counter() - t0
+                mgr.close()
+            rows.append({"size_mb": mb, "engine": mode,
+                         "gbps": fut.stats.total_bytes / dt / 1e9})
+    save_results("fig14_flush", rows, meta={"throttle_mbps": THROTTLE_MBPS})
+    return rows
+
+
+def summarize(rows) -> List[str]:
+    return [f"fig14/{r['size_mb']}MB/{r['engine']},0,"
+            f"{r['gbps']:.2f}GB/s" for r in rows]

@@ -1,0 +1,57 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig07,...]
+
+Prints ``name,us_per_call,derived`` CSV per benchmark row and writes full
+JSON records to experiments/bench/.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from . import (fig04_serialization, fig07_throughput, fig08_iteration,
+               fig09_end_to_end, fig12_dp_scaling, fig13_frequency,
+               fig14_flush, fig15_timeline, table1_heterogeneity,
+               table3_breakdown)
+
+MODULES = {
+    "fig04": fig04_serialization,
+    "fig07": fig07_throughput,
+    "fig08": fig08_iteration,
+    "fig09": fig09_end_to_end,
+    "fig12": fig12_dp_scaling,
+    "fig13": fig13_frequency,
+    "fig14": fig14_flush,
+    "fig15": fig15_timeline,
+    "table1": table1_heterogeneity,
+    "table3": table3_breakdown,
+}
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset, e.g. fig07,table3")
+    args = ap.parse_args(argv)
+    names = (args.only.split(",") if args.only else list(MODULES))
+    print("name,us_per_call,derived")
+    for name in names:
+        mod = MODULES[name]
+        t0 = time.perf_counter()
+        try:
+            rows = mod.run(quick=args.quick)
+            for line in mod.summarize(rows):
+                print(line)
+        except Exception as e:  # noqa: BLE001
+            print(f"{name}/ERROR,0,{type(e).__name__}: {e}")
+            raise
+        finally:
+            sys.stderr.write(f"[{name}: {time.perf_counter()-t0:.1f}s]\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Table I: 3D checkpoint heterogeneity of a real checkpoint from the
+training runtime — file counts, tensor bytes by precision, non-tensor bytes.
+"""
+
+from __future__ import annotations
+
+import glob
+import os
+from typing import List
+
+from repro.core import FileReader
+
+from .common import TempDir, bench_cfg, make_trainer, manager_for, save_results
+
+
+def run(quick: bool = False) -> List[dict]:
+    cfg = bench_cfg(2, 512)
+    with TempDir() as d:
+        mgr = manager_for("datastates", d)
+        tr = make_trainer(cfg, mgr)
+        tr.run(1, ckpt_interval=1)
+        mgr.wait_for_persist()
+        files = sorted(glob.glob(os.path.join(d, "global_step1", "*.dsllm")))
+        by_dtype = {}
+        non_tensor_bytes = 0
+        n_tensors = 0
+        for f in files:
+            r = FileReader(f)
+            for e in r.tensors.values():
+                by_dtype[e.dtype] = by_dtype.get(e.dtype, 0) + e.nbytes
+                n_tensors += 1
+            non_tensor_bytes += sum(o.nbytes for o in r.objects.values())
+        mgr.close()
+    rows = [{"n_files": len(files), "n_tensors": n_tensors,
+             "bytes_by_dtype": by_dtype,
+             "non_tensor_bytes": non_tensor_bytes}]
+    save_results("table1_heterogeneity", rows)
+    return rows
+
+
+def summarize(rows) -> List[str]:
+    r = rows[0]
+    fp32 = r["bytes_by_dtype"].get("float32", 0)
+    bf16 = r["bytes_by_dtype"].get("bfloat16", 0)
+    return [f"table1/heterogeneity,0,files={r['n_files']} "
+            f"tensors={r['n_tensors']} fp32={fp32>>20}MB bf16={bf16>>20}MB "
+            f"objects={r['non_tensor_bytes']}B"]

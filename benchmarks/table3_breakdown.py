@@ -1,0 +1,42 @@
+"""Table III: per-checkpoint sub-operation breakdown per engine:
+metadata/serialize vs GPU→host staging vs host→file flush, and which of
+those block training."""
+
+from __future__ import annotations
+
+from typing import List
+
+from .common import (ENGINE_ORDER, TempDir, bench_cfg, make_trainer,
+                     manager_for, save_results, state_nbytes)
+
+
+def run(quick: bool = False) -> List[dict]:
+    cfg = bench_cfg(2, 512)
+    rows = []
+    for mode in ENGINE_ORDER:
+        with TempDir() as d:
+            mgr = manager_for(mode, d)
+            tr = make_trainer(cfg, mgr)
+            tr.run(2, ckpt_interval=2)
+            mgr.wait_for_persist()
+            fut = [f for f in mgr._inflight][-1]
+            s = fut.stats
+            rows.append({
+                "engine": mode,
+                "bytes": s.total_bytes,
+                "serialize_s": s.serialize_s,
+                "stage_s": s.stage_s,
+                "flush_s": s.flush_s,
+                "blocking_s": s.blocking_s,
+                "capture_latency_s": s.capture_latency_s,
+                "persist_latency_s": s.persist_latency_s,
+            })
+            mgr.close()
+    save_results("table3_breakdown", rows)
+    return rows
+
+
+def summarize(rows) -> List[str]:
+    return [f"table3/{r['engine']},{r['blocking_s']*1e6:.0f},"
+            f"ser={r['serialize_s']*1e3:.1f}ms stage={r['stage_s']*1e3:.1f}ms "
+            f"flush={r['flush_s']*1e3:.1f}ms" for r in rows]

@@ -1,0 +1,58 @@
+"""Beyond-paper feature: differential + quantized checkpointing.
+
+The paper's future-work section proposes data reduction (differential
+checkpointing, compression) to lower storage cost at high checkpoint
+rates. This example exercises our implementation: device-side delta
+encoding (Pallas kernel, validated in interpret mode) against the previous
+snapshot, zstd compression, and optional int8/bf16 quantization — then
+shows the storage savings for a slowly-changing optimizer state.
+
+    PYTHONPATH=src python examples/differential_checkpointing.py
+"""
+
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, smoke_variant
+from repro.core.reduction import DifferentialCheckpointer
+from repro.training.loop import Trainer
+
+
+def main() -> int:
+    cfg = smoke_variant(get_config("llama3.2-1b"))
+    tr = Trainer(cfg, batch=2, seq_len=64)
+
+    with tempfile.TemporaryDirectory() as d:
+        diff = DifferentialCheckpointer(d, keyframe_every=4)
+        sizes = []
+        for step in range(1, 7):
+            tr.run(1)
+            info = diff.save(step, tr.params)
+            sizes.append(info)
+            kind = "keyframe" if info["keyframe"] else "delta   "
+            print(f"  step {step}: {kind} {info['compressed_bytes']/1e6:7.3f} MB "
+                  f"(raw {info['raw_bytes']/1e6:.3f} MB, "
+                  f"ratio {info['ratio']:.1f}x)")
+
+        # restore the last step and verify bit-exactness
+        restored = diff.restore(6)
+        leaves, _ = jax.tree_util.tree_flatten_with_path(tr.params)
+        for path, leaf in leaves:
+            k = jax.tree_util.keystr(path)
+            a = np.asarray(leaf).view(np.uint8)
+            b = restored[k].view(np.uint8)
+            np.testing.assert_array_equal(a, b)
+        print("differential restore is bit-exact across keyframe+deltas ✓")
+
+        key_mb = np.mean([s["compressed_bytes"] for s in sizes if s["keyframe"]]) / 1e6
+        del_mb = np.mean([s["compressed_bytes"] for s in sizes if not s["keyframe"]]) / 1e6
+        print(f"mean keyframe {key_mb:.3f} MB vs mean delta {del_mb:.3f} MB "
+              f"→ {key_mb/max(del_mb,1e-9):.1f}x smaller increments")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

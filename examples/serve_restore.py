@@ -1,0 +1,51 @@
+"""Serve a model from a training checkpoint: batched prefill + decode.
+
+Trains briefly, checkpoints, then restores the parameters into a serving
+engine and runs greedy generation over a batch of variable prompts —
+the suspend/resume + deployment use-case from the paper's introduction.
+
+    PYTHONPATH=src python examples/serve_restore.py
+"""
+
+import tempfile
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, smoke_variant
+from repro.core import CheckpointManager
+from repro.serving.engine import greedy_generate
+from repro.training.loop import Trainer
+
+
+def main() -> int:
+    cfg = smoke_variant(get_config("starcoder2-7b"))
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, mode="datastates")
+        tr = Trainer(cfg, batch=4, seq_len=64, manager=mgr)
+        tr.run(4, ckpt_interval=4)
+        mgr.wait_for_persist()
+        print(f"trained {tr.step} steps, checkpoint persisted")
+
+        # --- restore the *model only* into a serving process --------------
+        template = {"model": tr.params}  # serving needs no optimizer state
+        params = mgr.restore(template)["model"]
+        mgr.close()
+
+        rng = np.random.default_rng(0)
+        batch = 4
+        prompts = jnp.asarray(
+            rng.integers(1, cfg.vocab, size=(batch, 12)), jnp.int32)
+        out = greedy_generate(cfg, params, {"tokens": prompts}, n_new=16)
+        print(f"served batch of {batch} prompts → completions "
+              f"{tuple(out.shape)}:")
+        for i in range(batch):
+            print(f"  req {i}: prompt={np.asarray(prompts[i])[:6]}... "
+                  f"completion={np.asarray(out[i])[:8]}...")
+        assert out.shape == (batch, 16)
+        print("batched serve-from-checkpoint ✓")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

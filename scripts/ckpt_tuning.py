@@ -1,0 +1,82 @@
+"""Checkpoint-engine tuning sweep (§Perf, checkpoint side): chunk size ×
+flush threads vs effective blocking throughput, DataStates engine.
+
+    PYTHONPATH=src python scripts/ckpt_tuning.py
+
+Hypothesis grid: larger chunks amortize per-chunk dispatch overhead until
+they defeat pipelining (fewer in-flight units than threads); more threads
+help until the (throttled) storage path saturates. Records to
+experiments/perf/ckpt_tuning.json.
+"""
+
+import json
+import os
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import CheckpointManager
+
+PAYLOAD_MB = 256
+THROTTLE = 600.0  # MB/s per thread — emulated PFS share
+
+
+def make_state(mb: int):
+    n = mb * (1 << 20) // 4
+    rng = np.random.default_rng(0)
+    host = rng.normal(size=(n // 2,)).astype(np.float32)
+    dev = jnp.asarray(rng.normal(size=(n // 2,)).astype(np.float32))
+    return {"host": host, "dev": dev,
+            "meta": {"step": 1, "cfg": {"lr": 1e-4}}}
+
+
+def run_one(state, chunk_mb: int, threads: int) -> dict:
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, mode="datastates",
+                                host_cache_bytes=1 << 30,
+                                chunk_bytes=chunk_mb << 20,
+                                flush_threads=threads,
+                                throttle_mbps=THROTTLE)
+        t0 = time.perf_counter()
+        fut = mgr.save(1, state)
+        blocking = time.perf_counter() - t0
+        t1 = time.perf_counter()
+        fut.wait_captured()
+        capture = time.perf_counter() - t1
+        fut.wait_persisted()
+        persist = time.perf_counter() - t0
+        mgr.close()
+    nbytes = sum(x.nbytes for x in jax.tree_util.tree_leaves(state)
+                 if hasattr(x, "nbytes"))
+    return {"chunk_mb": chunk_mb, "threads": threads,
+            "blocking_s": blocking, "capture_s": capture,
+            "persist_s": persist,
+            "blocking_tput_gbps": nbytes / max(blocking + capture, 1e-9) / 1e9,
+            "persist_tput_gbps": nbytes / max(persist, 1e-9) / 1e9}
+
+
+def main():
+    state = make_state(PAYLOAD_MB)
+    rows = []
+    print(f"{'chunk':>6}{'thr':>4}{'block(ms)':>11}{'capture(ms)':>12}"
+          f"{'persist(s)':>11}{'persist GB/s':>13}")
+    for chunk_mb in (1, 4, 16, 64):
+        for threads in (1, 2, 4, 8):
+            r = run_one(state, chunk_mb, threads)
+            rows.append(r)
+            print(f"{chunk_mb:>6}{threads:>4}{r['blocking_s']*1e3:>11.1f}"
+                  f"{r['capture_s']*1e3:>12.1f}{r['persist_s']:>11.2f}"
+                  f"{r['persist_tput_gbps']:>13.2f}")
+    out = os.path.join("experiments", "perf", "ckpt_tuning.json")
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump({"payload_mb": PAYLOAD_MB, "throttle_mbps": THROTTLE,
+                   "rows": rows}, f, indent=2)
+    print("wrote", out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,123 @@
+"""Generate the §Dry-run and §Roofline sections of EXPERIMENTS.md from
+experiments/dryrun/*.json.
+
+    PYTHONPATH=src python scripts/experiments_report.py > /tmp/sections.md
+"""
+
+import glob
+import json
+import os
+
+HBM = 819e9
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+ARCHS = ["dbrx-132b", "rwkv6-7b", "starcoder2-7b", "recurrentgemma-2b",
+         "musicgen-medium", "gemma3-27b", "llama3.2-1b", "paligemma-3b",
+         "llama4-maverick-400b-a17b", "command-r-35b", "llama2-7b"]
+
+
+def load(arch, shape, pod):
+    p = f"experiments/dryrun/{arch}_{shape}_{pod}.json"
+    if not os.path.exists(p):
+        return None
+    with open(p) as f:
+        return json.load(f)
+
+
+def mem_lb(r):
+    m = r["roofline"]["memory"]
+    if "argument_size_in_bytes" not in m:
+        return None
+    return (m["argument_size_in_bytes"] + m["output_size_in_bytes"]
+            - m["alias_size_in_bytes"]) / HBM
+
+
+def fmt(x, unit="ms"):
+    if x is None:
+        return "—"
+    v = x * 1e3
+    return f"{v:,.1f}" if v < 10_000 else f"{v:,.0f}"
+
+
+def dryrun_section():
+    print("## §Dry-run — multi-pod compile proof\n")
+    print("Every (architecture × input shape) lowered + compiled with"
+          " `jax.jit(...).lower().compile()` against BOTH production meshes:"
+          " single-pod `16×16 (data, model)` = 256 chips and multi-pod"
+          " `2×16×16 (pod, data, model)` = 512 chips. ✓ = compiled;"
+          " `skip` = documented long-context skip (DESIGN.md §4); numbers"
+          " are compile seconds.\n")
+    print("| arch | shape | 16×16 | 2×16×16 | per-dev GiB (rolled, 512-chip) |")
+    print("|---|---|---|---|---|")
+    n_ok = n_skip = n_miss = 0
+    for a in ARCHS:
+        for s in SHAPES:
+            rp, rm = load(a, s, "pod"), load(a, s, "multipod")
+            cells = []
+            byt = "—"
+            for r in (rp, rm):
+                if r is None:
+                    cells.append("⏳")
+                    n_miss += 1
+                elif r.get("skipped"):
+                    cells.append("skip")
+                    n_skip += 1
+                else:
+                    cells.append(f"✓ {r['compile_s']:.0f}s")
+                    n_ok += 1
+            # fit-proof column: the ROLLED (multipod) compile — production
+            # runs use scan+remat; the unrolled single-pod build exists only
+            # for true FLOP counting and its temp bytes are not meaningful.
+            if rm and not rm.get("skipped"):
+                m = rm["roofline"]["memory"]
+                tot = (m.get("argument_size_in_bytes", 0)
+                       + m.get("temp_size_in_bytes", 0)
+                       + m.get("output_size_in_bytes", 0)
+                       - m.get("alias_size_in_bytes", 0))
+                byt = f"{tot/2**30:.2f}"
+            print(f"| {a} | {s} | {cells[0]} | {cells[1]} | {byt} |")
+    print(f"\n**{n_ok} compiles OK, {n_skip//1} skips documented, "
+          f"{n_miss} pending.** Skips: `long_500k` on pure full-attention"
+          " archs (dbrx, musicgen, llama3.2, paligemma, command-r) — "
+          "sub-quadratic attention required; runs on SSM/hybrid/windowed"
+          " archs (rwkv6, recurrentgemma, starcoder2, gemma3, llama4) per"
+          " DESIGN.md §4.\n")
+
+
+def roofline_section():
+    print("## §Roofline — single-pod (16×16, 256 chips) terms\n")
+    print("v5e constants: 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s/link ICI."
+          " `mem_ub` = cost-analysis bytes (upper bound: XLA:CPU bf16"
+          " emulation inflates it); `mem_lb` = args+outputs−aliases"
+          " (guaranteed traffic). `dominant` uses the conservative ub;"
+          " `eff` = MODEL_FLOPS/HLO_FLOPs (useful-compute fraction).\n")
+    print("| arch | shape | compute | mem_lb | mem_ub | collective | "
+          "dominant | eff | note |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for a in ARCHS:
+        for s in SHAPES:
+            r = load(a, s, "pod")
+            if r is None:
+                print(f"| {a} | {s} | ⏳ | | | | | | |")
+                continue
+            if r.get("skipped"):
+                print(f"| {a} | {s} | — | — | — | — | skip | — | "
+                      f"full-attention arch |")
+                continue
+            t = r["roofline"]["terms"]
+            lb = mem_lb(r)
+            dom = r["roofline"]["dominant"].replace("_s", "")
+            eff = r["roofline"]["useful_flops_ratio"]
+            # realistic bottleneck: max(compute, mem_lb, collective)
+            cand = {"compute": t["compute_s"], "memory": lb or 0,
+                    "collective": t["collective_s"]}
+            real = max(cand, key=cand.get)
+            note = f"lb-dominant: {real}"
+            print(f"| {a} | {s} | {fmt(t['compute_s'])} | {fmt(lb)} | "
+                  f"{fmt(t['memory_s'])} | {fmt(t['collective_s'])} | "
+                  f"{dom} | {eff:.2f} | {note} |")
+    print()
+
+
+if __name__ == "__main__":
+    dryrun_section()
+    roofline_section()

@@ -1,0 +1,79 @@
+"""Perf hillclimb runner: compile variants of one (arch × shape) pair and
+compare roofline terms against the baseline.
+
+    PYTHONPATH=src python scripts/hillclimb.py --arch llama3.2-1b \
+        --shape decode_32k --label kvblock2048 --set attn_kv_block=2048
+
+Each invocation runs ONE variant in a fresh process (XLA device-count flag
+must be set before jax imports — dryrun.py handles that) and appends the
+record to experiments/perf/<arch>_<shape>.jsonl. ``--label baseline``
+(or ``--mode tp_zero1 --label paper``) records reference points.
+"""
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--label", required=True)
+    ap.add_argument("--mode", default="2d")
+    ap.add_argument("--set", action="append", default=[])
+    ap.add_argument("--no-donate", action="store_true")
+    ap.add_argument("--hypothesis", default="",
+                    help="recorded alongside the result")
+    args = ap.parse_args()
+
+    out_dir = os.path.join(ROOT, "experiments", "perf")
+    os.makedirs(out_dir, exist_ok=True)
+    tmp_json = os.path.join(out_dir, f".{args.arch}_{args.shape}_{args.label}.json")
+
+    cmd = [sys.executable, "-m", "repro.launch.dryrun",
+           "--arch", args.arch, "--shape", args.shape,
+           "--mode", args.mode, "--out", tmp_json]
+    for s in args.set:
+        cmd += ["--set", s]
+    if args.no_donate:
+        cmd += ["--no-donate"]
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    r = subprocess.run(cmd, env=env, cwd=ROOT)
+    if r.returncode != 0:
+        print(f"variant {args.label} FAILED to compile", file=sys.stderr)
+        return 1
+
+    with open(tmp_json) as f:
+        rec = json.load(f)
+    os.remove(tmp_json)
+    rec["label"] = args.label
+    rec["hypothesis"] = args.hypothesis
+    log = os.path.join(out_dir, f"{args.arch}_{args.shape}.jsonl")
+    with open(log, "a") as f:
+        f.write(json.dumps(rec) + "\n")
+
+    # print comparison against every prior entry
+    entries = [json.loads(l) for l in open(log)]
+    base = entries[0]
+    bt = base["roofline"]["terms"]
+    print(f"\n{'label':<22}{'compute':>10}{'memory':>10}{'collective':>12}"
+          f"{'dominant':<14}{'Δdom vs base':>13}")
+    for e in entries:
+        t = e["roofline"]["terms"]
+        dom = e["roofline"]["dominant"]
+        delta = (t[base["roofline"]["dominant"]]
+                 / max(bt[base["roofline"]["dominant"]], 1e-12) - 1) * 100
+        print(f"{e['label']:<22}{t['compute_s']:>10.3f}{t['memory_s']:>10.3f}"
+              f"{t['collective_s']:>12.3f}  {dom.replace('_s',''):<12}"
+              f"{delta:>+12.1f}%")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

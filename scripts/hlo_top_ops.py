@@ -1,0 +1,95 @@
+"""Debug: compile one (arch × shape) variant and print the largest-result
+HLO ops + fusion count — the 'profile' for dry-run hillclimbing.
+
+    PYTHONPATH=src python scripts/hlo_top_ops.py --arch X --shape Y \
+        [--set k=v ...] [--mode 2d] [--top 25]
+"""
+
+import argparse
+import collections
+import re
+import sys
+
+sys.argv_backup = list(sys.argv)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mode", default="2d")
+    ap.add_argument("--top", type=int, default=25)
+    ap.add_argument("--set", action="append", default=[])
+    args = ap.parse_args()
+
+    from repro.launch import dryrun as D
+    from repro.launch.analysis import shape_bytes
+
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        overrides[k] = (v.lower() == "true" if v.lower() in ("true", "false")
+                        else int(v) if v.lstrip("-").isdigit() else v)
+
+    import io
+    import contextlib
+    import json
+    import jax
+    from repro.configs import INPUT_SHAPES, get_config
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch import analysis
+    from repro.sharding import context as shctx
+    from repro.optim.adamw import AdamWConfig
+    from repro.serving.engine import make_decode_step, make_prefill_step
+    from repro.training.loop import make_train_step
+
+    shape = INPUT_SHAPES[args.shape]
+    kvb = min(4096, max(1024, shape.seq_len // 8))
+    kw = {"sharding_mode": args.mode, "analysis_unroll": True,
+          "attn_kv_block": kvb}
+    kw.update(overrides)
+    cfg = get_config(args.arch, **kw)
+    mesh = make_production_mesh(multi_pod=False)
+    with shctx.activate(mesh):
+        long_ctx = (shape.kind == "decode" and shape.seq_len > 100_000)
+        shctx.set_seq_axis("data" if long_ctx else None)
+        try:
+            specs, in_sh, meta = D.input_specs(cfg, shape, mesh)
+            if shape.kind == "train":
+                step, dn = make_train_step(cfg, AdamWConfig()), (0, 1)
+            elif shape.kind == "prefill":
+                step, dn = make_prefill_step(cfg), ()
+            else:
+                step, dn = make_decode_step(cfg), (2,)
+            compiled = jax.jit(step, in_shardings=in_sh,
+                               donate_argnums=dn).lower(*specs).compile()
+        finally:
+            shctx.set_seq_axis(None)
+
+    text = compiled.as_text()
+    rows = []
+    by_op = collections.Counter()
+    for line in text.splitlines():
+        m = re.match(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\(",
+                     line)
+        if not m:
+            continue
+        name, type_str, op = m.groups()
+        b = shape_bytes(type_str)
+        if b:
+            rows.append((b, op, name, type_str[:70]))
+            by_op[op] += b
+    rows.sort(reverse=True)
+    print("== top ops by result bytes ==")
+    for b, op, name, t in rows[: args.top]:
+        print(f"{b/1e6:10.1f} MB  {op:<22} {name[:40]:<42} {t}")
+    print("\n== total result bytes by op kind (top 15) ==")
+    for op, b in by_op.most_common(15):
+        print(f"{b/1e9:10.2f} GB  {op}")
+    c = analysis.cost_dict(compiled)
+    print(f"\ncost_analysis: flops={c.get('flops',0):.3e} "
+          f"bytes={c.get('bytes accessed',0):.3e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+"""Assemble the §Roofline table from experiments/dryrun/*.json.
+
+    PYTHONPATH=src python scripts/roofline_report.py [--pod pod] [--md]
+
+Reads every single-pod dry-run record, prints the three roofline terms,
+the dominant bottleneck, MODEL_FLOPS/HLO_FLOPs, and a one-line "what
+would move the dominant term" note per (arch × shape).
+"""
+
+import argparse
+import glob
+import json
+import os
+
+NOTES = {
+    ("compute_s",): "compute-bound: already near the best case; further "
+                    "gains need lower-precision matmuls or fewer layers",
+    ("memory_s",): "HBM-bound: reduce bytes moved — less remat recompute, "
+                   "fused ops, or larger per-device tiles (less padding)",
+    ("collective_s",): "ICI-bound: reshard to cut all-gather/all-reduce "
+                       "volume or overlap collectives with compute",
+}
+
+
+def load(pod: str):
+    recs = []
+    for p in sorted(glob.glob(f"experiments/dryrun/*_{pod}.json")):
+        with open(p) as f:
+            r = json.load(f)
+        recs.append(r)
+    return recs
+
+
+def fmt_s(x):
+    if x >= 1:
+        return f"{x:7.2f}s"
+    return f"{x*1e3:6.1f}ms"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pod", default="pod", choices=["pod", "multipod"])
+    ap.add_argument("--md", action="store_true", help="markdown table")
+    args = ap.parse_args()
+    recs = load(args.pod)
+    shape_order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2,
+                   "long_500k": 3}
+    recs.sort(key=lambda r: (r["arch"], shape_order.get(r["shape"], 9)))
+
+    if args.md:
+        print("| arch | shape | compute | memory | collective | dominant | "
+              "useful FLOPs | note |")
+        print("|---|---|---|---|---|---|---|---|")
+    else:
+        print(f"{'arch':<26}{'shape':<13}{'compute':>10}{'memory':>10}"
+              f"{'collect.':>10}  {'dominant':<13}{'useful':>7}")
+
+    for r in recs:
+        if r.get("skipped"):
+            line = (f"| {r['arch']} | {r['shape']} | — | — | — | skipped | — "
+                    f"| {r['reason'][:60]} |") if args.md else \
+                   (f"{r['arch']:<26}{r['shape']:<13}  SKIPPED: "
+                    f"{r['reason'][:70]}")
+            print(line)
+            continue
+        t = r["roofline"]["terms"]
+        dom = r["roofline"]["dominant"]
+        ratio = r["roofline"]["useful_flops_ratio"]
+        note = NOTES[(dom,)]
+        if args.md:
+            print(f"| {r['arch']} | {r['shape']} | {fmt_s(t['compute_s'])} | "
+                  f"{fmt_s(t['memory_s'])} | {fmt_s(t['collective_s'])} | "
+                  f"{dom.replace('_s','')} | {ratio:.2f} | {note} |")
+        else:
+            print(f"{r['arch']:<26}{r['shape']:<13}{fmt_s(t['compute_s']):>10}"
+                  f"{fmt_s(t['memory_s']):>10}{fmt_s(t['collective_s']):>10}"
+                  f"  {dom.replace('_s',''):<13}{ratio:>7.2f}")
+
+    done = sum(1 for r in recs if not r.get("skipped"))
+    skipped = sum(1 for r in recs if r.get("skipped"))
+    print(f"\n{done} compiled + {skipped} documented skips "
+          f"({args.pod} mesh)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""Architecture configs. Importing this package registers all configs."""
+from .base import (INPUT_SHAPES, InputShape, LayerGroups, ModelConfig,
+                   get_config, list_configs, pattern_groups, register,
+                   smoke_variant, uniform_groups)
+
+# import all arch modules so the registry is populated
+from . import (dbrx_132b, rwkv6_7b, starcoder2_7b, recurrentgemma_2b,
+               musicgen_medium, gemma3_27b, llama3_2_1b, paligemma_3b,
+               llama4_maverick_400b_a17b, command_r_35b, llama2_7b)
+
+__all__ = ["INPUT_SHAPES", "InputShape", "LayerGroups", "ModelConfig",
+           "get_config", "list_configs", "pattern_groups", "register",
+           "smoke_variant", "uniform_groups"]

@@ -1,0 +1,213 @@
+"""Model/config system.
+
+``ModelConfig`` is the single declarative description a model is built from.
+Layer stacks are expressed as *layer groups*: ``((pattern, count), ...)`` where
+``pattern`` is a tuple of block-type strings and ``count`` repetitions of that
+pattern are executed under one ``lax.scan`` with stacked parameters (keeps the
+HLO small and compile times bounded). Block types:
+
+``full``        self-attention, full causal                      + FFN
+``window``      sliding-window causal self-attention             + FFN
+``chunked``     chunked (block-local) causal self-attention      + FFN
+``*_moe``       same attention, FFN replaced by MoE
+``xattn``       full self-attention + cross-attention (memory)   + FFN
+``rec``         RG-LRU recurrent block (Griffin/RecurrentGemma)
+``rwkv``        RWKV6 time-mix + channel-mix block
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional, Tuple
+
+LayerGroups = Tuple[Tuple[Tuple[str, ...], int], ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+INPUT_SHAPES: Dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    arch_type: str                   # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int                     # 0 for attention-free (rwkv)
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    layer_groups: LayerGroups
+    head_dim: int = 0                # 0 -> d_model // n_heads
+    rope_theta: float = 10_000.0
+    window: int = 0                  # sliding-window size for "window" blocks
+    chunk: int = 0                   # chunk size for "chunked" blocks
+    use_bias: bool = False
+    tie_embeddings: bool = False
+    norm: str = "rmsnorm"            # rmsnorm | layernorm
+    act: str = "silu"                # silu (gated) | gelu (gated) | gelu_mlp
+    # --- MoE ---
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    moe_group_size: int = 256        # tokens per dispatch group
+    shared_expert: bool = False
+    router_aux_coef: float = 0.01
+    # --- recurrent (rwkv / rg-lru) ---
+    rwkv_head_size: int = 64
+    rwkv_chunk: int = 16
+    rwkv_decay_lora: int = 64
+    lru_width: int = 0               # 0 -> d_model
+    conv_width: int = 4
+    # --- modality frontends (stubs: precomputed embeddings) ---
+    n_prefix_embeds: int = 0         # vlm: SigLIP patch embeds prepended
+    n_memory_embeds: int = 0         # audio: cross-attention memory length
+    n_codebooks: int = 0             # audio: parallel codebook streams
+    # --- source citation ---
+    source: str = ""
+    # --- runtime ---
+    dtype: str = "bfloat16"
+    sharding_mode: str = "2d"        # "2d" (beyond-paper) | "tp_zero1" (paper)
+    remat: bool = True
+    analysis_unroll: bool = False  # unroll scans so cost_analysis counts true FLOPs
+    attn_kv_block: int = 1024      # KV block size for blocked attention
+    # beyond-paper §Perf: shard the decode KV cache on the sequence dim over
+    # the 'model' axis (keeps heads/hd whole → no per-layer cache all-gather;
+    # softmax over the sharded seq dim costs only tiny stat collectives).
+    decode_kv_seq_shard: bool = False
+    # beyond-paper §Perf: DeepSpeed-Ulysses-style sequence-parallel attention
+    # — shard the *sequence* dim over 'model' inside attention (all-to-all on
+    # entry/exit) instead of splitting KV heads / head_dim, which forces
+    # partial-logit all-reduces every flash block when KV-heads < mesh size.
+    ulysses_attention: bool = False
+    # beyond-paper §Perf: Megatron-style sequence parallelism — keep the
+    # residual stream sequence-sharded over 'model' between blocks, so TP
+    # boundary collectives become reduce-scatter + all-gather (about half
+    # the volume of the classic full all-reduce pair).
+    seq_parallel_residual: bool = False
+    max_decode_len: int = 0          # 0 -> use input shape seq_len
+    long_context_ok: bool = False    # may run long_500k
+
+    @property
+    def hd(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // max(self.n_heads, 1)
+
+    @property
+    def d_rnn(self) -> int:
+        return self.lru_width or self.d_model
+
+    def n_params(self) -> int:
+        """Approximate parameter count (used for 6ND model-FLOPs)."""
+        from repro.models.model import count_params_analytic
+        return count_params_analytic(self)
+
+    def n_active_params(self) -> int:
+        from repro.models.model import count_params_analytic
+        return count_params_analytic(self, active_only=True)
+
+
+def uniform_groups(block: str, n_layers: int, scan_span: int = 0
+                   ) -> LayerGroups:
+    """All layers identical: one scan group."""
+    return (((block,), n_layers),)
+
+
+def pattern_groups(pattern: Tuple[str, ...], n_layers: int) -> LayerGroups:
+    """Repeat ``pattern``; a remainder prefix of the pattern becomes a second
+    group (e.g. gemma3: 62 = 10*(5 local + 1 global) + 2 local)."""
+    p = len(pattern)
+    reps, rem = divmod(n_layers, p)
+    groups: LayerGroups = ()
+    if reps:
+        groups += ((tuple(pattern), reps),)
+    if rem:
+        groups += ((tuple(pattern[:rem]), 1),)
+    return groups
+
+
+_REGISTRY: Dict[str, ModelConfig] = {}
+
+
+def register(cfg: ModelConfig) -> ModelConfig:
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get_config(name: str, **overrides) -> ModelConfig:
+    # import side-effect: populate registry
+    from repro import configs as _c  # noqa: F401
+    import importlib
+    if name not in _REGISTRY:
+        try:
+            importlib.import_module(f"repro.configs.{name.replace('-', '_').replace('.', '_')}")
+        except ImportError:
+            pass
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_REGISTRY)}")
+    cfg = _REGISTRY[name]
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    return cfg
+
+
+def list_configs() -> Tuple[str, ...]:
+    import importlib, pkgutil
+    import repro.configs as pkg
+    for m in pkgutil.iter_modules(pkg.__path__):
+        if m.name not in ("base",):
+            importlib.import_module(f"repro.configs.{m.name}")
+    return tuple(sorted(_REGISTRY))
+
+
+def smoke_variant(cfg: ModelConfig) -> ModelConfig:
+    """Reduced same-family variant: 2 layers, d_model<=512, <=4 experts."""
+    d = min(cfg.d_model, 256)
+    heads = 4 if cfg.n_heads else 0
+    kv = min(cfg.n_kv_heads, heads) or (1 if heads else 0)
+    if heads and cfg.n_kv_heads > 1:
+        kv = 2
+    # preserve the layer-type mix in 2 layers
+    first_pattern = cfg.layer_groups[0][0]
+    types = []
+    for g_pattern, _cnt in cfg.layer_groups:
+        for t in g_pattern:
+            if t not in types:
+                types.append(t)
+    pattern = tuple(types[:2]) if len(types) >= 2 else (first_pattern[0],) * 2
+    return dataclasses.replace(
+        cfg,
+        name=cfg.name + "-smoke",
+        n_layers=len(pattern),
+        d_model=d,
+        n_heads=heads,
+        n_kv_heads=kv,
+        head_dim=0,
+        d_ff=min(cfg.d_ff, 512),
+        vocab=min(cfg.vocab, 512),
+        layer_groups=((pattern, 1),),
+        n_experts=min(cfg.n_experts, 4) if cfg.n_experts else 0,
+        top_k=min(cfg.top_k, 2) if cfg.top_k else 0,
+        window=min(cfg.window, 16) if cfg.window else 0,
+        chunk=min(cfg.chunk, 16) if cfg.chunk else 0,
+        lru_width=0,
+        moe_group_size=16,
+        n_prefix_embeds=min(cfg.n_prefix_embeds, 4),
+        n_memory_embeds=min(cfg.n_memory_embeds, 4),
+        rwkv_chunk=4,
+        remat=False,
+    )

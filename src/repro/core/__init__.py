@@ -1,0 +1,31 @@
+"""DataStates-LLM core: composable state providers + lazy async checkpointing."""
+
+from .checkpoint import CheckpointManager, ENGINES, step_dir
+from .engine import (CheckpointError, CheckpointFuture, CheckpointStats,
+                     DataMovementEngine, FilePlan)
+from .host_cache import CacheFullError, HostCache, Reservation
+from .layout import FileLayout, FileReader, FileWriter, TensorEntry, ObjectEntry
+from .state_provider import (Chunk, CompositeStateProvider,
+                             ObjectStateProvider, StateProvider,
+                             TensorStateProvider)
+from .baselines import (BaseCheckpointEngine, DataStatesEngine,
+                        DataStatesOldEngine, SnapshotThenFlushEngine,
+                        SyncSerializedEngine, load_snapshot_rank,
+                        load_sync_rank)
+from .distributed import ShardRecord, group_by_rank, normalize_index, plan_shards
+from .consolidate import consolidate_step_dir
+
+__all__ = [
+    "CheckpointManager", "ENGINES", "step_dir",
+    "CheckpointError", "CheckpointFuture", "CheckpointStats",
+    "DataMovementEngine", "FilePlan",
+    "CacheFullError", "HostCache", "Reservation",
+    "FileLayout", "FileReader", "FileWriter", "TensorEntry", "ObjectEntry",
+    "Chunk", "CompositeStateProvider", "ObjectStateProvider",
+    "StateProvider", "TensorStateProvider",
+    "BaseCheckpointEngine", "DataStatesEngine", "DataStatesOldEngine",
+    "SnapshotThenFlushEngine", "SyncSerializedEngine",
+    "load_snapshot_rank", "load_sync_rank",
+    "ShardRecord", "group_by_rank", "normalize_index", "plan_shards",
+    "consolidate_step_dir",
+]

@@ -1,0 +1,285 @@
+"""Checkpoint manager: lazy non-blocking capture + globally consistent restore.
+
+The manager is the training-runtime-facing API (paper §V-B — the "drop-in
+engine"). It owns an engine (DataStates or one of the baselines), plans the
+per-rank shard composition, and exposes the two consistency points of the
+lazy protocol (paper §V-A2, Fig 6(c,d)):
+
+* ``save(step, state)`` — returns immediately after the blocking prologue
+  (planning + coalesced reservation + async D2H launch);
+* ``wait_for_capture()`` — the barrier the training loop calls **before the
+  optimizer update** of the following iteration: the update mutates (donates)
+  the very buffers being snapshotted, so it may only run once all device
+  state has left the device.
+
+Restore is elastic: shards are reassembled to *any* requested sharding (the
+stored shard boundaries come from the training layout at save time; restore
+intersects them with the target layout, so mesh-shape changes between save
+and restore are supported — a beyond-paper capability).
+"""
+
+from __future__ import annotations
+
+import glob
+import os
+import re
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from .baselines import (BaseCheckpointEngine, DataStatesEngine,
+                        DataStatesOldEngine, SnapshotThenFlushEngine,
+                        SyncSerializedEngine)
+from .distributed import (ShardRecord, group_by_rank, normalize_index,
+                          plan_shards, _path_str)
+from .engine import CheckpointFuture
+from .layout import FileReader
+
+ENGINES = {
+    "datastates": DataStatesEngine,          # this paper
+    "datastates-old": DataStatesOldEngine,   # HPDC'24 prior work
+    "snapshot": SnapshotThenFlushEngine,     # TorchSnapshot-style
+    "sync": SyncSerializedEngine,            # DeepSpeed default (torch.save)
+}
+
+
+def step_dir(directory: str, step: int) -> str:
+    return os.path.join(directory, f"global_step{step}")
+
+
+class _StoredShard:
+    """One stored shard of a logical array, format-agnostic: its region in
+    the global array plus a thunk that materializes the shard's data."""
+
+    __slots__ = ("index", "read")
+
+    def __init__(self, index, read):
+        self.index = tuple(tuple(p) for p in index)
+        self.read = read
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, mode: str = "datastates",
+                 host_cache_bytes: int = 1 << 30,
+                 flush_threads: int = 4,
+                 chunk_bytes: int = 4 << 20,
+                 throttle_mbps: Optional[float] = None):
+        if mode not in ENGINES:
+            raise ValueError(f"unknown engine mode {mode!r}; "
+                             f"choose from {sorted(ENGINES)}")
+        self.directory = directory
+        self.mode = mode
+        os.makedirs(directory, exist_ok=True)
+        self.engine: BaseCheckpointEngine = ENGINES[mode](
+            host_cache_bytes=host_cache_bytes,
+            flush_threads=flush_threads,
+            chunk_bytes=chunk_bytes,
+            throttle_mbps=throttle_mbps)
+        self._inflight: List[CheckpointFuture] = []
+
+    # ------------------------------------------------------------------ save
+    def save(self, step: int, state: Any, blocking: bool = False
+             ) -> CheckpointFuture:
+        """Request a checkpoint of ``state`` (any pytree of jax/np arrays +
+        Python objects). Returns after the engine's blocking prologue only."""
+        future = CheckpointFuture(step, step_dir(self.directory, step))
+        t0 = time.perf_counter()
+        future.stats.t_request = t0
+        records, objects = plan_shards(state, group="state")
+        objects["__checkpoint_meta__"] = {"step": step, "mode": self.mode,
+                                          "n_shards": len(records)}
+        by_rank = group_by_rank(records)
+        os.makedirs(future.directory, exist_ok=True)
+        self.engine.save(future.directory, by_rank, objects, future)
+        future.stats.blocking_s = time.perf_counter() - t0
+        self._inflight.append(future)
+        self._inflight = [f for f in self._inflight if not f.persisted] \
+            + [f for f in self._inflight if f.persisted][-1:]
+        if blocking:
+            future.wait_persisted()
+        return future
+
+    # -------------------------------------------------------- barriers
+    def wait_for_capture(self) -> float:
+        """Consistency barrier before the (buffer-donating) optimizer update.
+
+        Returns the time actually spent blocked — this is the *direct stall*
+        the paper measures in Fig 8."""
+        t0 = time.perf_counter()
+        for f in self._inflight:
+            f.wait_captured()
+        return time.perf_counter() - t0
+
+    def wait_for_persist(self) -> float:
+        t0 = time.perf_counter()
+        for f in self._inflight:
+            f.wait_persisted()
+        return time.perf_counter() - t0
+
+    # ------------------------------------------------------------- restore
+    def latest_step(self) -> Optional[int]:
+        steps = []
+        for d in glob.glob(os.path.join(self.directory, "global_step*")):
+            m = re.search(r"global_step(\d+)$", d)
+            if m:
+                steps.append(int(m.group(1)))
+        return max(steps) if steps else None
+
+    def restore(self, template: Any, step: Optional[int] = None) -> Any:
+        """Rebuild ``template``-shaped state from a stored checkpoint.
+
+        ``template`` leaves may be concrete arrays or ``ShapeDtypeStruct``s
+        carrying a ``.sharding``; array leaves are reassembled shard-by-shard
+        (elastic — target sharding need not match the stored one)."""
+        if step is None:
+            step = self.latest_step()
+            if step is None:
+                raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        sdir = step_dir(self.directory, step)
+        tensor_index, object_index = self._index_step_dir(sdir)
+
+        leaves, treedef = jax.tree_util.tree_flatten_with_path(template)
+        out = []
+        for path, leaf in leaves:
+            pstr = f"state/{_path_str(path)}"
+            if isinstance(leaf, (jax.Array, jax.ShapeDtypeStruct)) or \
+                    isinstance(leaf, np.ndarray):
+                if pstr not in tensor_index:
+                    raise KeyError(f"tensor {pstr!r} not found in checkpoint "
+                                   f"(have {sorted(tensor_index)[:5]}...)")
+                out.append(self._assemble(leaf, tensor_index[pstr]))
+            else:
+                if pstr in object_index:
+                    out.append(object_index[pstr]())
+                else:
+                    out.append(leaf)  # keep template value (e.g. static field)
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    # Restore is format-universal: it reads back checkpoints written by any
+    # engine (native .dsllm, TorchSnapshot-style chunk manifests, or the
+    # DeepSpeed-default pickled object graph), so a run can switch engines
+    # between save and resume.
+    @staticmethod
+    def _index_step_dir(sdir: str):
+        """Build {leaf_path -> [_StoredShard]} and {obj_path -> thunk} from
+        whatever checkpoint format lives in ``sdir``."""
+        import pickle
+
+        tensor_index: Dict[str, List[_StoredShard]] = {}
+        object_index: Dict[str, Any] = {}
+
+        dsllm = sorted(glob.glob(os.path.join(sdir, "*.dsllm")))
+        if dsllm:
+            for p in dsllm:
+                rd = FileReader(p)
+                for name, entry in rd.tensors.items():
+                    base = name.split("@[", 1)[0]
+                    tensor_index.setdefault(base, []).append(_StoredShard(
+                        entry.index,
+                        (lambda r=rd, n=entry.name: r.read_tensor(n))))
+                for oname in rd.objects:
+                    object_index[oname] = \
+                        (lambda r=rd, n=oname: r.read_object(n))
+            return tensor_index, object_index
+
+        manifests = sorted(glob.glob(os.path.join(sdir, "manifest_rank*.pkl")))
+        snapshot_objects = os.path.join(sdir, "objects.pkl")
+        if manifests or os.path.exists(snapshot_objects):
+            # TorchSnapshot-style chunk files
+            from .baselines import load_snapshot_rank
+            for mpath in manifests:
+                with open(mpath, "rb") as f:
+                    manifest = pickle.load(f)
+                rank = int(re.search(r"manifest_rank(\d+)", mpath).group(1))
+                for t in manifest["tensors"]:
+                    base = t["name"].split("@[", 1)[0]
+
+                    def read(d=os.path.dirname(mpath), r=rank, n=t["name"]):
+                        return load_snapshot_rank(d, r)[n]
+                    tensor_index.setdefault(base, []).append(
+                        _StoredShard(tuple(t["index"]), read))
+            opath = os.path.join(sdir, "objects.pkl")
+            if os.path.exists(opath):
+                with open(opath, "rb") as f:
+                    objects = pickle.load(f)
+                for oname, val in objects.items():
+                    object_index[oname] = (lambda v=val: v)
+            return tensor_index, object_index
+
+        pkls = sorted(glob.glob(os.path.join(sdir, "*.pkl")))
+        if pkls:  # sync (torch.save-style) pickled object graph per rank
+            from .baselines import load_sync_rank
+            for p in pkls:
+                graph = load_sync_rank(p)
+                for name, rec in graph.items():
+                    if name == "__objects__":
+                        for oname, val in rec.items():
+                            object_index[oname] = (lambda v=val: v)
+                        continue
+                    base = name.split("@[", 1)[0]
+                    tensor_index.setdefault(base, []).append(_StoredShard(
+                        tuple(rec["index"]), (lambda r=rec: r["data"])))
+            return tensor_index, object_index
+
+        raise FileNotFoundError(f"no checkpoint files in {sdir}")
+
+    @staticmethod
+    def _assemble(leaf, stored: List["_StoredShard"]):
+        """Reassemble one logical array from stored shard entries."""
+        shape = tuple(leaf.shape)
+        dtype = leaf.dtype
+
+        def read_region(region: Tuple[Tuple[int, int], ...]) -> np.ndarray:
+            tgt_shape = tuple(b - a for a, b in region)
+            buf = np.empty(tgt_shape, dtype=dtype)
+            filled = 0
+            for entry in stored:
+                s_idx = entry.index
+                # intersection of stored shard with requested region
+                inter = tuple((max(a, c), min(b, d))
+                              for (a, b), (c, d) in zip(region, s_idx))
+                if any(lo >= hi for lo, hi in inter):
+                    continue
+                src = entry.read()
+                src_sl = tuple(slice(lo - c, hi - c)
+                               for (lo, hi), (c, _d) in zip(inter, s_idx))
+                dst_sl = tuple(slice(lo - a, hi - a)
+                               for (lo, hi), (a, _b) in zip(inter, region))
+                buf[dst_sl] = src[src_sl]
+                filled += int(np.prod([hi - lo for lo, hi in inter]))
+            if filled < int(np.prod(tgt_shape)):
+                raise ValueError(
+                    f"checkpoint does not cover requested region {region}")
+            return buf
+
+        if isinstance(leaf, np.ndarray):
+            return read_region(tuple((0, d) for d in shape))
+
+        sharding = getattr(leaf, "sharding", None)
+        if sharding is None:
+            full = read_region(tuple((0, d) for d in shape))
+            return jax.numpy.asarray(full)
+
+        def cb(index):
+            region = normalize_index(index, shape)
+            return read_region(region)
+
+        return jax.make_array_from_callback(shape, sharding, cb)
+
+    # -------------------------------------------------------------- misc
+    def drain(self) -> None:
+        self.wait_for_persist()
+        self.engine.drain()
+
+    def close(self) -> None:
+        self.drain()
+        self.engine.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False

@@ -1,0 +1,121 @@
+"""Distributed shard planning: map a sharded pytree onto per-rank files.
+
+Reproduces the checkpoint composition of Fig 1(c,d): every device ("rank")
+owns the shards resident on it; replicated shards (pure DP replicas) are
+written once, by the lowest-id owner (the paper's DeepSpeed setup likewise
+writes each logical shard exactly once). The shard boundaries are whatever
+the training layout dictates — the planner never reshards (paper §IV-C).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+
+PathShard = Tuple[str, Tuple[Tuple[int, int], ...]]  # (leaf path, shard index)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def normalize_index(index, shape) -> Tuple[Tuple[int, int], ...]:
+    """Convert a shard's tuple-of-slices index into ((start, stop), ...)."""
+    out = []
+    for sl, dim in zip(index, shape):
+        start = 0 if sl.start is None else int(sl.start)
+        stop = dim if sl.stop is None else int(sl.stop)
+        out.append((start, stop))
+    return tuple(out)
+
+
+@dataclasses.dataclass
+class ShardRecord:
+    """One device shard of one pytree leaf, assigned to an owning rank."""
+
+    leaf_path: str
+    tensor_name: str            # unique name within the rank file
+    rank: int                   # owning device id
+    index: Tuple[Tuple[int, int], ...]
+    global_shape: Tuple[int, ...]
+    shape: Tuple[int, ...]
+    dtype: str
+    nbytes: int
+    data: Any                   # jax single-device array or numpy array
+    device_resident: bool
+
+
+def _is_array_leaf(leaf) -> bool:
+    return isinstance(leaf, (jax.Array, np.ndarray))
+
+
+def plan_shards(tree, group: str) -> Tuple[List[ShardRecord], Dict[str, Any]]:
+    """Flatten ``tree``; return shard records for arrays + dict of host objects.
+
+    Replicated shards are deduplicated to their lowest-device-id owner.
+    """
+    records: List[ShardRecord] = []
+    objects: Dict[str, Any] = {}
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    for path, leaf in leaves:
+        pstr = f"{group}/{_path_str(path)}"
+        if isinstance(leaf, jax.Array):
+            seen: Dict[Tuple, int] = {}
+            for shard in leaf.addressable_shards:
+                idx = normalize_index(shard.index, leaf.shape)
+                if idx in seen:
+                    continue  # replica; lowest device id wins (sorted below)
+                seen[idx] = shard.device.id
+            # second pass: keep the lowest-id owner per unique index
+            owners: Dict[Tuple, Tuple[int, Any]] = {}
+            for shard in leaf.addressable_shards:
+                idx = normalize_index(shard.index, leaf.shape)
+                cur = owners.get(idx)
+                if cur is None or shard.device.id < cur[0]:
+                    owners[idx] = (shard.device.id, shard.data)
+            for idx, (dev_id, data) in sorted(owners.items()):
+                shape = tuple(b - a for a, b in idx)
+                dtype = str(leaf.dtype)
+                nbytes = int(np.prod(shape)) * np.dtype(dtype).itemsize \
+                    if shape else np.dtype(dtype).itemsize
+                suffix = ",".join(f"{a}:{b}" for a, b in idx)
+                records.append(ShardRecord(
+                    leaf_path=pstr,
+                    tensor_name=f"{pstr}@[{suffix}]",
+                    rank=dev_id, index=idx,
+                    global_shape=tuple(leaf.shape),
+                    shape=shape, dtype=dtype, nbytes=int(nbytes),
+                    data=data, device_resident=True))
+        elif isinstance(leaf, np.ndarray):
+            idx = tuple((0, d) for d in leaf.shape)
+            suffix = ",".join(f"{a}:{b}" for a, b in idx)
+            records.append(ShardRecord(
+                leaf_path=pstr, tensor_name=f"{pstr}@[{suffix}]",
+                rank=0, index=idx, global_shape=tuple(leaf.shape),
+                shape=tuple(leaf.shape), dtype=str(leaf.dtype),
+                nbytes=int(leaf.nbytes), data=leaf, device_resident=False))
+        else:
+            objects[pstr] = leaf
+    return records, objects
+
+
+def group_by_rank(records: Sequence[ShardRecord]
+                  ) -> Dict[int, List[ShardRecord]]:
+    by_rank: Dict[int, List[ShardRecord]] = {}
+    for r in records:
+        by_rank.setdefault(r.rank, []).append(r)
+    return by_rank

@@ -1,0 +1,413 @@
+"""Streamlined multi-tier data-movement engine (paper §V-A1, §V-A2, §V-A4).
+
+The engine consumes chunk streams from composable state providers and moves
+them across tiers using separate physical paths in parallel:
+
+* a **staging lane** (models the device→host DMA copy engine): drains a queue
+  of device-resident tensors into their pre-reserved pinned-cache slices,
+  chunk by chunk, notifying the provider so downstream flushing can begin
+  before a tensor has fully landed;
+* **producer lanes** (one per checkpoint file): iterate the composite
+  provider's chunk stream — tensors first, then lazily-serialized objects —
+  and enqueue write ops;
+* a **flush pool** (models liburing/O_DIRECT writers): positional
+  ``os.pwrite`` workers, multiple files in flight, GIL-released.
+
+Completion is tracked per request as two phases (paper Fig 6(c,d)):
+``captured`` (all device state has left the device — safe to mutate, i.e. the
+optimizer update may run) and ``persisted`` (all files durable, footer
+written).
+"""
+
+from __future__ import annotations
+
+import os
+import queue
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .host_cache import HostCache
+from .layout import FileWriter
+from .state_provider import (Chunk, CompositeStateProvider,
+                             TensorStateProvider, DEFAULT_CHUNK_BYTES)
+
+
+class CheckpointError(RuntimeError):
+    pass
+
+
+class CheckpointStats:
+    """Wall-clock phase timings, used by the benchmark harness."""
+
+    def __init__(self) -> None:
+        self.t_request: float = 0.0         # save() entered
+        self.blocking_s: float = 0.0        # time training was blocked in save()
+        self.t_captured: float = 0.0
+        self.t_persisted: float = 0.0
+        self.bytes_tensors: int = 0
+        self.bytes_objects: int = 0
+        self.n_files: int = 0
+        self.n_tensors: int = 0
+        self.serialize_s: float = 0.0       # object serialization time
+        self.stage_s: float = 0.0           # device->host staging time
+        self.flush_s: float = 0.0           # cumulative pwrite time
+        self.extra: Dict[str, Any] = {}
+
+    @property
+    def capture_latency_s(self) -> float:
+        return self.t_captured - self.t_request
+
+    @property
+    def persist_latency_s(self) -> float:
+        return self.t_persisted - self.t_request
+
+    @property
+    def total_bytes(self) -> int:
+        return self.bytes_tensors + self.bytes_objects
+
+
+class CheckpointFuture:
+    """Two-phase completion handle for one checkpoint request."""
+
+    def __init__(self, step: int, directory: str):
+        self.step = step
+        self.directory = directory
+        self.stats = CheckpointStats()
+        self._captured = threading.Event()
+        self._persisted = threading.Event()
+        self._error: Optional[BaseException] = None
+
+    # -- engine side ---------------------------------------------------------
+    def _set_captured(self) -> None:
+        self.stats.t_captured = time.perf_counter()
+        self._captured.set()
+
+    def _set_persisted(self) -> None:
+        self.stats.t_persisted = time.perf_counter()
+        self._persisted.set()
+
+    def _set_error(self, exc: BaseException) -> None:
+        self._error = exc
+        self._captured.set()
+        self._persisted.set()
+
+    # -- user side -----------------------------------------------------------
+    @property
+    def captured(self) -> bool:
+        return self._captured.is_set()
+
+    @property
+    def persisted(self) -> bool:
+        return self._persisted.is_set()
+
+    def _check(self) -> None:
+        if self._error is not None:
+            raise CheckpointError(
+                f"checkpoint step={self.step} failed") from self._error
+
+    def wait_captured(self, timeout: Optional[float] = None) -> None:
+        if not self._captured.wait(timeout):
+            raise TimeoutError("capture did not complete in time")
+        self._check()
+
+    def wait_persisted(self, timeout: Optional[float] = None) -> None:
+        if not self._persisted.wait(timeout):
+            raise TimeoutError("persist did not complete in time")
+        self._check()
+
+
+class FilePlan:
+    """One checkpoint file: a composite provider + destination path."""
+
+    def __init__(self, path: str, composite: CompositeStateProvider,
+                 meta: Optional[Dict[str, Any]] = None):
+        self.path = path
+        self.composite = composite
+        self.meta = meta or {}
+
+
+class _WriteOp:
+    __slots__ = ("writer", "chunk", "file_state", "throttle", "on_written")
+
+    def __init__(self, writer, chunk, file_state, throttle, on_written=None):
+        self.writer = writer
+        self.chunk = chunk
+        self.file_state = file_state
+        self.throttle = throttle
+        self.on_written = on_written
+
+
+class _FileState:
+    """Per-file pending-op accounting to decide when to finalize."""
+
+    def __init__(self, plan: FilePlan, writer: FileWriter,
+                 on_done: Callable[[], None], future: "CheckpointFuture"):
+        self.plan = plan
+        self.writer = writer
+        self.on_done = on_done
+        self.future = future
+        self.lock = threading.Lock()
+        self.pending = 0
+        self.producer_done = False
+        # partial object payload assembly (chunked log appends)
+        self.object_parts: Dict[str, List[bytes]] = {}
+        # release tracking for tensor providers
+        self.tensor_last_seen: Dict[str, TensorStateProvider] = {}
+
+    def op_started(self) -> None:
+        with self.lock:
+            self.pending += 1
+
+    def op_finished(self) -> bool:
+        with self.lock:
+            self.pending -= 1
+            done = self.producer_done and self.pending == 0
+        if done:
+            self.on_done()
+        return done
+
+    def producer_finished(self) -> None:
+        with self.lock:
+            done = self.pending == 0
+            self.producer_done = True
+        if done:
+            self.on_done()
+
+
+class DataMovementEngine:
+    """The full DataStates-LLM engine (lazy capture + streamlined flush)."""
+
+    def __init__(self, host_cache_bytes: int = 2 << 30,
+                 flush_threads: int = 4,
+                 producer_threads: int = 2,
+                 chunk_bytes: int = DEFAULT_CHUNK_BYTES,
+                 throttle_mbps: Optional[float] = None):
+        self.host_cache = HostCache(host_cache_bytes)
+        self.chunk_bytes = chunk_bytes
+        self.throttle_mbps = throttle_mbps
+        self.trace: Optional[list] = None  # [(lane, name, t0, t1), ...]
+        self._flush_q: "queue.Queue[Optional[_WriteOp]]" = queue.Queue()
+        self._stage_q: "queue.Queue[Optional[Tuple]]" = queue.Queue()
+        self._producer_q: "queue.Queue[Optional[Tuple]]" = queue.Queue()
+        self._shutdown = False
+        self._flush_threads = [
+            threading.Thread(target=self._flush_worker, daemon=True,
+                             name=f"dsllm-flush-{i}")
+            for i in range(flush_threads)]
+        self._stage_thread = threading.Thread(
+            target=self._stage_worker, daemon=True, name="dsllm-stage")
+        self._producer_threads = [
+            threading.Thread(target=self._producer_worker, daemon=True,
+                             name=f"dsllm-producer-{i}")
+            for i in range(producer_threads)]
+        for t in (*self._flush_threads, self._stage_thread,
+                  *self._producer_threads):
+            t.start()
+
+    # ------------------------------------------------------------------ API
+    def submit(self, files: Sequence[FilePlan],
+               capture_items: Sequence[Tuple[TensorStateProvider, Any]],
+               future: CheckpointFuture) -> None:
+        """Kick off one checkpoint request.
+
+        ``capture_items`` are (provider, device_array) pairs needing D2H
+        staging. This call performs only the *blocking* prologue: coalesced
+        cache reservation (back-pressure lives here) and async-copy launch —
+        everything else proceeds on background lanes.
+        """
+        stats = future.stats
+        # --- coalesced reservation: all shards of the checkpoint up front
+        # (pre-allocated, pre-pinned pool; §V-A1). Fail fast if one full
+        # checkpoint version can never fit: the paper sizes the cache to
+        # hold at least one version per node (§VI-C2, 80 GB/node) — waiting
+        # here would deadlock (nothing is flushing yet, so nothing frees).
+        total = sum(p.nbytes for p, _ in capture_items)
+        if total > self.host_cache.capacity:
+            raise CheckpointError(
+                f"checkpoint device payload ({total/2**20:.0f} MiB) exceeds "
+                f"host cache ({self.host_cache.capacity/2**20:.0f} MiB); "
+                f"raise host_cache_bytes — the cache must hold one full "
+                f"checkpoint version (paper §VI-C2)")
+        for provider, _arr in capture_items:
+            provider.bind_reservation(self.host_cache.reserve(provider.nbytes))
+        # --- launch non-blocking D2H for every device shard (lazy capture;
+        # overlaps with the next iteration's forward/backward, §V-A2).
+        for _provider, arr in capture_items:
+            try:
+                arr.copy_to_host_async()
+            except AttributeError:
+                pass  # plain numpy / non-jax arrays
+        for plan in files:
+            stats.n_files += 1
+            comp = plan.composite
+            stats.n_tensors += len(comp.tensor_providers)
+            stats.bytes_tensors += sum(p.nbytes for p in comp.tensor_providers)
+
+        pending_files = {"n": len(files)}
+        lock = threading.Lock()
+
+        def file_done() -> None:
+            with lock:
+                pending_files["n"] -= 1
+                last = pending_files["n"] == 0
+            if last and not future.persisted:
+                future._set_persisted()
+
+        capture_pending = {"n": len(capture_items)}
+
+        def one_staged() -> None:
+            with lock:
+                capture_pending["n"] -= 1
+                done = capture_pending["n"] == 0
+            if done and not future.captured:
+                future._set_captured()
+
+        if not capture_items:
+            future._set_captured()
+        for provider, arr in capture_items:
+            self._stage_q.put((provider, arr, one_staged, future))
+        for plan in files:
+            self._producer_q.put((plan, file_done, future))
+        if not files:
+            future._set_persisted()
+
+    def drain(self) -> None:
+        """Wait for all queued work (tests/benchmarks)."""
+        self._stage_q.join()
+        self._producer_q.join()
+        self._flush_q.join()
+
+    def close(self) -> None:
+        self._shutdown = True
+        for _ in self._producer_threads:
+            self._producer_q.put(None)
+        self._stage_q.put(None)
+        for _ in self._flush_threads:
+            self._flush_q.put(None)
+
+    # ------------------------------------------------------------ workers
+    def _stage_worker(self) -> None:
+        """The D2H lane: drains device shards into their cache reservations."""
+        while True:
+            item = self._stage_q.get()
+            if item is None:
+                self._stage_q.task_done()
+                return
+            provider, arr, one_staged, future = item
+            try:
+                t0 = time.perf_counter()
+                trace = self.trace
+                # np.asarray blocks until the async device->host copy of this
+                # shard has completed, then views/copies the host buffer.
+                src = np.asarray(arr).reshape(-1).view(np.uint8)
+                dst = provider.reservation.array(np.uint8, (provider.nbytes,))
+                n = provider.nbytes
+                step = self.chunk_bytes
+                for pos in range(0, n, step):
+                    end = min(pos + step, n)
+                    dst[pos:end] = src[pos:end]
+                    if provider.stream_intra_tensor:
+                        provider.notify_staged(end)  # flush the staged head
+                provider.notify_staged(n)
+                t1 = time.perf_counter()
+                future.stats.stage_s += t1 - t0
+                if trace is not None:
+                    trace.append(("stage", provider.name, t0, t1))
+                one_staged()
+            except BaseException as exc:  # noqa: BLE001
+                future._set_error(exc)
+            finally:
+                self._stage_q.task_done()
+
+    def _producer_worker(self) -> None:
+        """Iterate one file's chunk stream and enqueue write ops."""
+        while True:
+            item = self._producer_q.get()
+            if item is None:
+                self._producer_q.task_done()
+                return
+            plan, file_done, future = item
+            try:
+                self._produce_file(plan, file_done, future)
+            except BaseException as exc:  # noqa: BLE001
+                future._set_error(exc)
+            finally:
+                self._producer_q.task_done()
+
+    def _produce_file(self, plan: FilePlan, file_done, future) -> None:
+        layout = plan.composite.plan_layout()
+        writer = FileWriter(plan.path, layout)
+        for k, v in plan.meta.items():
+            writer.set_meta(k, v)
+        state = _FileState(plan, writer, on_done=lambda: self._finalize_file(
+            writer, file_done, future), future=future)
+        providers = {p.name: p for p in plan.composite.tensor_providers}
+        for chunk in plan.composite.chunks():
+            if chunk.kind == "object":
+                # assemble chunked payload; single contiguous log append
+                parts = state.object_parts.setdefault(chunk.name, [])
+                parts.append(bytes(chunk.data))
+                if chunk.last:
+                    payload = b"".join(state.object_parts.pop(chunk.name))
+                    future.stats.bytes_objects += len(payload)
+                    state.op_started()
+                    self._flush_q.put(_WriteOp(
+                        writer,
+                        Chunk(name=chunk.name, kind="object", data=payload,
+                              codec=chunk.codec, last=True),
+                        state, self.throttle_mbps))
+            else:
+                state.op_started()
+                on_written = None
+                if chunk.last:
+                    p = providers.get(chunk.name)
+                    if p is not None and p.device_resident:
+                        on_written = p.release  # evict from pinned cache
+                self._flush_q.put(_WriteOp(writer, chunk, state,
+                                           self.throttle_mbps, on_written))
+        state.producer_finished()
+
+    def _finalize_file(self, writer: FileWriter, file_done, future) -> None:
+        try:
+            writer.finalize()
+        except BaseException as exc:  # noqa: BLE001
+            future._set_error(exc)
+            return
+        file_done()
+
+    def _flush_worker(self) -> None:
+        """liburing-style positional writers; GIL released inside pwrite."""
+        while True:
+            op = self._flush_q.get()
+            if op is None:
+                self._flush_q.task_done()
+                return
+            try:
+                t0 = time.perf_counter()
+                chunk = op.chunk
+                if chunk.kind == "object":
+                    op.writer.append_object(chunk.name, chunk.data,
+                                            codec=chunk.codec)
+                else:
+                    op.writer.write_at(chunk.offset, chunk.data)
+                if op.throttle:
+                    nb = len(chunk.data) if isinstance(chunk.data, bytes) \
+                        else chunk.data.nbytes
+                    target = nb / (op.throttle * 1e6)
+                    elapsed = time.perf_counter() - t0
+                    if target > elapsed:
+                        time.sleep(target - elapsed)
+                t1 = time.perf_counter()
+                op.file_state.future.stats.flush_s += t1 - t0
+                if self.trace is not None:
+                    self.trace.append(("flush", op.chunk.name, t0, t1))
+                if op.on_written is not None:
+                    op.on_written()
+                op.file_state.op_finished()
+            except BaseException as exc:  # noqa: BLE001
+                op.file_state.future._set_error(exc)
+            finally:
+                self._flush_q.task_done()

@@ -1,0 +1,104 @@
+"""Pre-allocated, pre-pinned host staging cache (paper §V-A1, §V-C).
+
+On the target TPU system this is committed host memory the device runtime can
+DMA into; here it is a single pre-allocated byte buffer with a blocking
+first-fit interval allocator. Pre-allocation removes per-checkpoint alloc
+overheads; the blocking behaviour implements the paper's back-pressure rule —
+"if the host memory reserved for checkpointing is full, the next checkpoint
+request waits for previous tensors to get evicted after they are flushed".
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+
+class CacheFullError(RuntimeError):
+    pass
+
+
+class Reservation:
+    """A byte range inside the cache, exposed as a zero-copy memoryview."""
+
+    __slots__ = ("start", "nbytes", "_cache", "_released")
+
+    def __init__(self, start: int, nbytes: int, cache: "HostCache"):
+        self.start = start
+        self.nbytes = nbytes
+        self._cache = cache
+        self._released = False
+
+    @property
+    def view(self) -> memoryview:
+        return self._cache._buf_view[self.start:self.start + self.nbytes]
+
+    def array(self, dtype, shape) -> np.ndarray:
+        """Zero-copy ndarray view over this reservation."""
+        return np.frombuffer(self.view, dtype=dtype).reshape(shape)
+
+    def release(self) -> None:
+        if not self._released:
+            self._released = True
+            self._cache._free(self)
+
+
+class HostCache:
+    """Blocking first-fit allocator over one pre-allocated pinned buffer."""
+
+    def __init__(self, capacity_bytes: int):
+        self.capacity = int(capacity_bytes)
+        # The "pinned" pool. One allocation for the lifetime of the engine.
+        self._buf = np.zeros(self.capacity, dtype=np.uint8)
+        self._buf_view = memoryview(self._buf)
+        self._lock = threading.Lock()
+        self._freed = threading.Condition(self._lock)
+        # Sorted list of allocated (start, end) intervals.
+        self._allocated: List[Tuple[int, int]] = []
+        self.peak_usage = 0
+        self.total_reserved = 0  # lifetime bytes, for stats
+
+    # -- internals -----------------------------------------------------------
+    def _find_gap(self, nbytes: int) -> Optional[int]:
+        prev_end = 0
+        for start, end in self._allocated:
+            if start - prev_end >= nbytes:
+                return prev_end
+            prev_end = end
+        if self.capacity - prev_end >= nbytes:
+            return prev_end
+        return None
+
+    def _free(self, res: Reservation) -> None:
+        with self._lock:
+            self._allocated.remove((res.start, res.start + res.nbytes))
+            self._freed.notify_all()
+
+    # -- public --------------------------------------------------------------
+    def used_bytes(self) -> int:
+        with self._lock:
+            return sum(e - s for s, e in self._allocated)
+
+    def reserve(self, nbytes: int, timeout: Optional[float] = None
+                ) -> Reservation:
+        """Reserve ``nbytes``; blocks until space frees up (back-pressure)."""
+        nbytes = int(nbytes)
+        if nbytes > self.capacity:
+            raise CacheFullError(
+                f"request of {nbytes} B exceeds cache capacity {self.capacity} B")
+        with self._lock:
+            while True:
+                start = self._find_gap(nbytes)
+                if start is not None:
+                    break
+                if not self._freed.wait(timeout=timeout):
+                    raise CacheFullError(
+                        f"timed out waiting for {nbytes} B of cache space")
+            self._allocated.append((start, start + nbytes))
+            self._allocated.sort()
+            self.total_reserved += nbytes
+            self.peak_usage = max(self.peak_usage,
+                                  sum(e - s for s, e in self._allocated))
+        return Reservation(start, nbytes, self)

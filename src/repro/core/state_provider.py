@@ -1,0 +1,239 @@
+"""Composable state providers (paper §V-A3).
+
+A *state provider* (SP) encapsulates per-data-structure knowledge — residency
+(device vs. host), type (byte-addressable tensor vs. Python object), layout,
+and (de)serialization needs — and exposes a uniform, stream-oriented view to
+the data-movement engine: an iterator of :class:`Chunk` byte ranges. The
+engine stays agnostic to heterogeneity and only optimizes multi-tier I/O.
+
+* :class:`TensorStateProvider` — zero-copy. Host-resident tensors stream
+  memoryviews of their own buffers; device-resident tensors stream views of
+  their staged copy in the pinned :class:`~repro.core.host_cache.HostCache`
+  reservation, chunk by chunk as D2H staging progresses (so flushing of a
+  tensor overlaps with staging of its own tail — paper §V-A4 / Fig 15).
+* :class:`ObjectStateProvider` — serializes Python objects (pickle/msgpack)
+  lazily at stream time; its chunks carry no fixed offset and are appended
+  log-structured (paper §V-A5).
+* :class:`CompositeStateProvider` — hierarchical composition: plans the
+  fixed-offset tensor region for one file, orders the stream tensors-first
+  (largest first) so object serialization overlaps with bulk tensor I/O.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import pickle
+import threading
+from typing import Any, Callable, Iterator, List, Optional, Sequence, Tuple
+
+import msgpack
+import numpy as np
+
+from .host_cache import HostCache, Reservation
+from .layout import FileLayout, align_up
+
+DEFAULT_CHUNK_BYTES = 16 * 1024 * 1024
+
+
+@dataclasses.dataclass
+class Chunk:
+    """One byte range to persist. ``offset is None`` → log-append."""
+
+    name: str
+    kind: str                      # "tensor" | "object"
+    data: Any                      # memoryview | bytes
+    offset: Optional[int] = None   # fixed file offset; None = append
+    codec: str = "raw"
+    last: bool = False             # last chunk of this logical item
+
+
+class StateProvider:
+    """Base: a named producer of checkpoint chunks."""
+
+    name: str
+
+    def chunks(self) -> Iterator[Chunk]:
+        raise NotImplementedError
+
+    def nbytes_hint(self) -> Optional[int]:
+        """Size if known a priori (tensors), else None (serialized objects)."""
+        return None
+
+
+class TensorStateProvider(StateProvider):
+    """Zero-copy SP for a byte-addressable tensor (host or device resident).
+
+    For device arrays, :meth:`bind_reservation` attaches the pinned-cache
+    reservation and :meth:`notify_staged` is called by the staging thread as
+    bytes land; :meth:`chunks` yields each chunk as soon as its bytes are
+    staged, enabling flush/staging overlap within a single large tensor.
+    """
+
+    def __init__(self, name: str, *, dtype: str, shape: Tuple[int, ...],
+                 nbytes: int,
+                 host_array: Optional[np.ndarray] = None,
+                 global_shape: Optional[Tuple[int, ...]] = None,
+                 index: Optional[Tuple[Tuple[int, int], ...]] = None,
+                 chunk_bytes: int = DEFAULT_CHUNK_BYTES,
+                 stream_intra_tensor: bool = True):
+        self.name = name
+        self.dtype = dtype
+        self.shape = tuple(shape)
+        self.nbytes = int(nbytes)
+        self.global_shape = global_shape
+        self.index = index
+        self.chunk_bytes = chunk_bytes
+        # False = legacy engines: flush only once the whole tensor is staged.
+        self.stream_intra_tensor = stream_intra_tensor
+        self.offset: Optional[int] = None  # assigned by composite layout plan
+        # host-resident path
+        self._host_array = host_array
+        # device-resident path
+        self._reservation: Optional[Reservation] = None
+        self._staged = 0
+        self._cond = threading.Condition()
+        self._released = False
+
+    # -- residency wiring ----------------------------------------------------
+    @property
+    def device_resident(self) -> bool:
+        return self._host_array is None
+
+    def bind_reservation(self, res: Reservation) -> None:
+        self._reservation = res
+
+    @property
+    def reservation(self) -> Optional[Reservation]:
+        return self._reservation
+
+    def notify_staged(self, nbytes_total: int) -> None:
+        """Staging thread reports cumulative bytes landed in the cache."""
+        with self._cond:
+            self._staged = nbytes_total
+            self._cond.notify_all()
+
+    def release(self) -> None:
+        """Free the cache reservation once all chunks are flushed."""
+        with self._cond:
+            if self._released:
+                return
+            self._released = True
+        if self._reservation is not None:
+            self._reservation.release()
+
+    # -- StateProvider -------------------------------------------------------
+    def nbytes_hint(self) -> Optional[int]:
+        return self.nbytes
+
+    def _byte_view(self) -> memoryview:
+        if self._host_array is not None:
+            arr = np.ascontiguousarray(self._host_array)
+            return memoryview(arr).cast("B")
+        assert self._reservation is not None, (
+            f"device tensor {self.name} streamed before staging was bound")
+        return self._reservation.view
+
+    def chunks(self) -> Iterator[Chunk]:
+        view = self._byte_view()
+        n = self.nbytes
+        pos = 0
+        while pos < n:
+            end = min(pos + self.chunk_bytes, n)
+            if self._host_array is None:
+                # Wait until staging has landed these bytes (partial-tensor
+                # overlap: flush the head while the tail is still in DMA).
+                with self._cond:
+                    while self._staged < end:
+                        self._cond.wait()
+            yield Chunk(name=self.name, kind="tensor", data=view[pos:end],
+                        offset=self.offset + pos if self.offset is not None else None,
+                        last=end >= n)
+            pos = end
+
+
+class ObjectStateProvider(StateProvider):
+    """SP for non-tensor Python state (dicts, RNG seeds, config, ...).
+
+    Serialization happens lazily inside :meth:`chunks` — i.e. on the engine's
+    producer thread, *after* tensor chunks have been enqueued — so it overlaps
+    with bulk tensor I/O instead of blocking the training loop (§V-A5).
+    """
+
+    def __init__(self, name: str, obj: Any, codec: str = "pickle",
+                 chunk_bytes: int = DEFAULT_CHUNK_BYTES,
+                 preserialized: Optional[bytes] = None):
+        self.name = name
+        self._obj = obj
+        self.codec = codec
+        self.chunk_bytes = chunk_bytes
+        self._preserialized = preserialized
+        self.serialized_nbytes: Optional[int] = (
+            len(preserialized) if preserialized is not None else None)
+
+    def serialize(self) -> bytes:
+        if self._preserialized is not None:  # legacy blocking-upfront engines
+            return self._preserialized
+        if self.codec == "pickle":
+            payload = pickle.dumps(self._obj, protocol=pickle.HIGHEST_PROTOCOL)
+        elif self.codec == "msgpack":
+            payload = msgpack.packb(self._obj, use_bin_type=True)
+        else:
+            raise ValueError(f"unknown codec {self.codec}")
+        self.serialized_nbytes = len(payload)
+        return payload
+
+    def chunks(self) -> Iterator[Chunk]:
+        payload = self.serialize()
+        n = len(payload)
+        if n == 0:
+            yield Chunk(name=self.name, kind="object", data=b"",
+                        codec=self.codec, last=True)
+            return
+        for pos in range(0, n, self.chunk_bytes):
+            end = min(pos + self.chunk_bytes, n)
+            yield Chunk(name=self.name, kind="object",
+                        data=payload[pos:end], codec=self.codec,
+                        last=end >= n)
+
+
+class CompositeStateProvider(StateProvider):
+    """Hierarchical composition of SPs targeting one checkpoint file.
+
+    Responsibilities (paper §V-A3): (a) compute sizes/offsets for the fixed
+    region, (b) group/order chunks for the persistent layout, (c) stream
+    tensors first — largest first — so the engine is busy with bulk I/O while
+    object serialization proceeds.
+    """
+
+    def __init__(self, name: str, providers: Sequence[StateProvider]):
+        self.name = name
+        self.tensor_providers: List[TensorStateProvider] = [
+            p for p in providers if isinstance(p, TensorStateProvider)]
+        self.object_providers: List[ObjectStateProvider] = [
+            p for p in providers if isinstance(p, ObjectStateProvider)]
+        composites = [p for p in providers if isinstance(p, CompositeStateProvider)]
+        for c in composites:  # hierarchical merge
+            self.tensor_providers.extend(c.tensor_providers)
+            self.object_providers.extend(c.object_providers)
+        self._layout: Optional[FileLayout] = None
+
+    def plan_layout(self) -> FileLayout:
+        """Fix tensor offsets (largest-first order = stream order)."""
+        if self._layout is None:
+            self.tensor_providers.sort(key=lambda p: -p.nbytes)
+            specs = [(p.name, p.nbytes, p.dtype, p.shape, p.global_shape, p.index)
+                     for p in self.tensor_providers]
+            self._layout = FileLayout.plan(specs)
+            for p, entry in zip(self.tensor_providers, self._layout.tensors):
+                p.offset = entry.offset
+        return self._layout
+
+    def nbytes_hint(self) -> Optional[int]:
+        return sum(p.nbytes for p in self.tensor_providers)
+
+    def chunks(self) -> Iterator[Chunk]:
+        self.plan_layout()
+        for p in self.tensor_providers:   # bulk zero-copy I/O first
+            yield from p.chunks()
+        for p in self.object_providers:   # serialization overlapped w/ flush
+            yield from p.chunks()

@@ -1,0 +1,22 @@
+"""Pallas TPU kernels for checkpoint-path compute hot-spots.
+
+The paper's core contribution is I/O-side, so the checkpoint engine itself is
+pure host/JAX code. These kernels implement the *device-side* compute the
+paper defers to future work (integrity verification, data reduction for
+checkpoints) plus the attention hot-spot of the model zoo:
+
+* ``flash_attention`` — TPU twin of the pure-XLA blocked attention in
+  ``repro.models.layers`` (MXU-tiled, VMEM-resident blocks).
+* ``checksum`` — blocked integrity checksum over tensor shards, computed on
+  device before staging so corrupted transfers are detectable.
+* ``quantize`` — fp32→bf16/int8 quantize-pack for compressed checkpoints.
+* ``delta`` — differential checkpointing: subtract/XOR vs previous snapshot.
+
+Each has a jit'd wrapper in :mod:`repro.kernels.ops` (with
+``interpret=True`` fallback on CPU) and a pure-jnp oracle in
+:mod:`repro.kernels.ref`; tests sweep shapes/dtypes against the oracle.
+"""
+
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,56 @@
+"""Blocked integrity checksum kernel (Pallas TPU).
+
+Computes a position-weighted modular checksum over a flat u32 view of a
+tensor shard: ``sum_i (x_i * (a + i mod M)) mod 2^32``. Position weighting
+catches reordered blocks, which a plain sum would miss. The grid walks
+VMEM-sized blocks of the flattened input; each step accumulates into a (1,1)
+SMEM-resident partial in the output ref (grid iterations on TPU are
+sequential, so the accumulation is race-free).
+
+VMEM budget: BLOCK u32 elements (default 64k = 256 KiB) — comfortably inside
+the ~16 MiB/core VMEM with room for double buffering.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 65_536          # u32 elements per grid step (256 KiB VMEM)
+WEIGHT_MOD = 65_521     # largest prime < 2^16 (adler-style)
+WEIGHT_BASE = 65_599
+
+
+def _checksum_kernel(x_ref, out_ref):
+    step = pl.program_id(0)
+    x = x_ref[...].astype(jnp.uint32)
+    n = x.shape[0]
+    idx = (jax.lax.iota(jnp.uint32, n)
+           + jnp.uint32(step) * jnp.uint32(n))
+    w = jnp.uint32(WEIGHT_BASE) + (idx % jnp.uint32(WEIGHT_MOD))
+    partial = jnp.sum(x * w, dtype=jnp.uint32)
+
+    @pl.when(step == 0)
+    def _init():
+        out_ref[0, 0] = jnp.uint32(0)
+
+    out_ref[0, 0] = out_ref[0, 0] + partial
+
+
+def checksum_u32(x_flat_u32: jax.Array, *, block: int = BLOCK,
+                 interpret: bool = True) -> jax.Array:
+    """x_flat_u32: 1-D uint32 (pre-padded to a multiple of ``block``)."""
+    n = x_flat_u32.shape[0]
+    assert n % block == 0, f"pad input to a multiple of {block}"
+    grid = (n // block,)
+    return pl.pallas_call(
+        _checksum_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.uint32),
+        interpret=interpret,
+    )(x_flat_u32)[0, 0]

@@ -1,0 +1,106 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+``interpret`` defaults to True on CPU (this container) and False on real TPU
+backends; the kernels themselves are written for the TPU target (BlockSpec
+VMEM tiling, MXU-shaped dots).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import checksum as _checksum
+from . import delta as _delta
+from . import flash_attention as _fa
+from . import quantize as _quant
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jax.Array, multiple: int) -> jax.Array:
+    n = x.shape[0]
+    pad = (-n) % multiple
+    if pad:
+        x = jnp.pad(x, (0, pad))
+    return x
+
+
+def as_u32(x) -> jax.Array:
+    """Flat uint32 view (zero-padding the byte tail)."""
+    b = jnp.asarray(x).reshape(-1).view(jnp.uint8)
+    b = _pad_to(b, 4)
+    return b.view(jnp.uint32)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def tensor_checksum(x, block: int = _checksum.BLOCK,
+                    interpret: bool | None = None) -> jax.Array:
+    """Position-weighted u32 checksum of any array's bytes."""
+    interp = _default_interpret() if interpret is None else interpret
+    u = _pad_to(as_u32(x), block)
+    return _checksum.checksum_u32(u, block=block, interpret=interp)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def downcast_bf16(x, interpret: bool | None = None) -> jax.Array:
+    interp = _default_interpret() if interpret is None else interpret
+    return _quant.downcast_bf16(x, interpret=interp)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def quantize_int8(x, interpret: bool | None = None):
+    interp = _default_interpret() if interpret is None else interpret
+    return _quant.quantize_int8(x, interpret=interp)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def dequantize_int8(q, scales, interpret: bool | None = None) -> jax.Array:
+    interp = _default_interpret() if interpret is None else interpret
+    return _quant.dequantize_int8(q, scales, interpret=interp)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def delta_xor(cur, prev, block: int = _delta.BLOCK,
+              interpret: bool | None = None) -> jax.Array:
+    interp = _default_interpret() if interpret is None else interpret
+    c = _pad_to(as_u32(cur), block)
+    p = _pad_to(as_u32(prev), block)
+    return _delta.delta_xor(c, p, block=block, interpret=interp)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def delta_f32(cur, prev, block: int = _delta.BLOCK,
+              interpret: bool | None = None) -> jax.Array:
+    interp = _default_interpret() if interpret is None else interpret
+    c = _pad_to(jnp.asarray(cur, jnp.float32).reshape(-1), block)
+    p = _pad_to(jnp.asarray(prev, jnp.float32).reshape(-1), block)
+    return _delta.delta_f32(c, p, block=block, interpret=interp)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "kind", "window", "chunk", "q_block", "kv_block", "interpret"))
+def flash_attention(q, k, v, kind: str = "full", window: int = 0,
+                    chunk: int = 0, q_block: int = _fa.Q_BLOCK,
+                    kv_block: int = _fa.KV_BLOCK,
+                    interpret: bool | None = None) -> jax.Array:
+    """q: (B, S, H, hd); k/v: (B, T, KV, hd). GQA folded into heads."""
+    interp = _default_interpret() if interpret is None else interpret
+    B, S, H, hd = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    rep = H // KV
+    kr = jnp.repeat(k, rep, axis=2) if rep > 1 else k
+    vr = jnp.repeat(v, rep, axis=2) if rep > 1 else v
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    kf = kr.transpose(0, 2, 1, 3).reshape(B * H, T, hd)
+    vf = vr.transpose(0, 2, 1, 3).reshape(B * H, T, hd)
+    out = _fa.flash_attention_bh(qf, kf, vf, kind=kind, window=window,
+                                 chunk=chunk, q_block=q_block,
+                                 kv_block=kv_block, interpret=interp)
+    return out.reshape(B, H, S, hd).transpose(0, 2, 1, 3)

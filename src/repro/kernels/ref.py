@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .checksum import WEIGHT_BASE, WEIGHT_MOD
+
+
+def checksum_ref(x_flat_u32) -> np.uint32:
+    x = np.asarray(x_flat_u32, dtype=np.uint64)
+    idx = np.arange(x.shape[0], dtype=np.uint64)
+    w = (np.uint64(WEIGHT_BASE) + (idx % np.uint64(WEIGHT_MOD)))
+    return np.uint32((x * w).sum() & np.uint64(0xFFFFFFFF))
+
+
+def downcast_bf16_ref(x):
+    return jnp.asarray(x).astype(jnp.bfloat16)
+
+
+def quantize_int8_ref(x):
+    x = jnp.asarray(x, jnp.float32)
+    amax = jnp.max(jnp.abs(x), axis=1, keepdims=True)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8_ref(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def delta_xor_ref(cur_u32, prev_u32):
+    return jnp.bitwise_xor(jnp.asarray(cur_u32), jnp.asarray(prev_u32))
+
+
+def delta_f32_ref(cur, prev):
+    return jnp.asarray(cur) - jnp.asarray(prev)
+
+
+def flash_attention_ref(q, k, v, *, kind: str = "full", window: int = 0,
+                        chunk: int = 0):
+    """q/k/v: (BH, S|T, hd). Masked softmax attention, fp32 math."""
+    BH, S, hd = q.shape
+    T = k.shape[1]
+    logits = jnp.einsum("bsh,bth->bst", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / (hd ** 0.5)
+    i = jnp.arange(S)[:, None]
+    j = jnp.arange(T)[None, :]
+    mask = j <= i
+    if kind == "window":
+        mask &= j > i - window
+    elif kind == "chunked":
+        mask &= (i // chunk) == (j // chunk)
+    logits = jnp.where(mask[None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bst,bth->bsh", p, v.astype(jnp.float32)).astype(q.dtype)

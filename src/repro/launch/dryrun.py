@@ -1,0 +1,243 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any jax import (device count locks on
+# first backend init). Only the dry-run sees 512 placeholder devices.
+if os.environ.get("REPRO_DRYRUN_DEVICES"):  # debugging escape hatch
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                               + os.environ["REPRO_DRYRUN_DEVICES"])
+
+"""Multi-pod dry-run: lower + compile every (arch × input-shape × mesh)
+combination against the production mesh, print memory/cost analysis, and
+emit the roofline record consumed by EXPERIMENTS.md.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun \
+        --arch llama3.2-1b --shape train_4k [--multi-pod] \
+        [--mode 2d|tp_zero1] [--out experiments/dryrun/...json]
+"""
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import INPUT_SHAPES, get_config
+from repro.launch import analysis
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as M
+from repro.optim.adamw import AdamWConfig, init_opt_state
+from repro.serving.engine import cache_template, make_decode_step, \
+    make_prefill_step
+from repro.sharding import context as shctx
+from repro.sharding.partition import (batch_pspecs, cache_pspecs, opt_pspecs,
+                                      param_pspecs, shardings_for)
+from repro.training.loop import make_train_step
+
+
+def batch_template(cfg, shape) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input — no allocation."""
+    B = shape.global_batch
+    if shape.kind == "decode":
+        S = 1
+    else:
+        S = shape.seq_len
+    tshape = (B, S) + ((cfg.n_codebooks,) if cfg.n_codebooks else ())
+    t: Dict[str, jax.ShapeDtypeStruct] = {
+        "tokens": jax.ShapeDtypeStruct(tshape, jnp.int32)}
+    if cfg.n_prefix_embeds and shape.kind != "decode":
+        t["prefix_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_prefix_embeds, cfg.d_model), jnp.float32)
+    if cfg.n_memory_embeds and shape.kind != "decode":
+        t["memory_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_memory_embeds, cfg.d_model), jnp.float32)
+    return t
+
+
+def input_specs(cfg, shape, mesh) -> Tuple[Tuple, Tuple, Dict[str, Any]]:
+    """(args, in_shardings, meta) for the step this shape lowers."""
+    params_shape = jax.eval_shape(
+        lambda: M.init_params(cfg, jax.random.PRNGKey(0)))
+    pspec = param_pspecs(cfg, params_shape, mesh)
+    pshard = shardings_for(pspec, mesh)
+    params_sds = jax.tree_util.tree_map(
+        lambda sds, sh: jax.ShapeDtypeStruct(sds.shape, sds.dtype, sharding=sh),
+        params_shape, pshard)
+    bt = batch_template(cfg, shape)
+    bspec = batch_pspecs(cfg, shape.kind, bt, mesh)
+    bshard = {k: NamedSharding(mesh, s) for k, s in bspec.items()}
+    batch_sds = {k: jax.ShapeDtypeStruct(v.shape, v.dtype, sharding=bshard[k])
+                 for k, v in bt.items()}
+
+    if shape.kind == "train":
+        opt_shape = jax.eval_shape(lambda p: init_opt_state(p), params_shape)
+        ospec = opt_pspecs(cfg, params_shape, mesh)
+        oshard = shardings_for(ospec, mesh)
+        opt_sds = jax.tree_util.tree_map(
+            lambda sds, sh: jax.ShapeDtypeStruct(sds.shape, sds.dtype,
+                                                 sharding=sh),
+            opt_shape, oshard)
+        args = (params_sds, opt_sds, batch_sds)
+        shardings = (pshard, oshard, bshard)
+        return args, shardings, {"step": "train"}
+
+    if shape.kind == "prefill":
+        return (params_sds, batch_sds), (pshard, bshard), {"step": "prefill"}
+
+    # decode: one new token against a seq_len-deep cache
+    long_ctx = shape.seq_len > 100_000
+    ct = cache_template(cfg, shape.global_batch, shape.seq_len)
+    cspec = cache_pspecs(cfg, ct, mesh, long_context=long_ctx)
+    cshard = shardings_for(cspec, mesh)
+    cache_sds = jax.tree_util.tree_map(
+        lambda sds, sh: jax.ShapeDtypeStruct(sds.shape, sds.dtype, sharding=sh),
+        ct, cshard)
+    pos_sds = jax.ShapeDtypeStruct((), jnp.int32)
+    args = (params_sds, batch_sds["tokens"], cache_sds, pos_sds)
+    shardings = (pshard, bshard["tokens"], cshard, None)
+    return args, shardings, {"step": "decode", "long_context": long_ctx}
+
+
+def model_flops_global(cfg, shape) -> float:
+    """MODEL_FLOPS = 6·N·D (train) / 2·N·D (inference), N = active params."""
+    n_active = cfg.n_active_params()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch  # decode: one token per seq
+
+
+def run_dryrun(arch: str, shape_name: str, *, multi_pod: bool = False,
+               mode: str = "2d", donate: bool = True,
+               overrides: Dict[str, Any] = None,
+               verbose: bool = True) -> Dict[str, Any]:
+    shape = INPUT_SHAPES[shape_name]
+    # Single-pod runs unroll scans so cost_analysis counts true FLOPs (the
+    # roofline table is single-pod only). Multi-pod runs prove the "pod"
+    # axis lowers/compiles — no roofline — so they keep rolled scans, which
+    # compiles several times faster on this 1-core container.
+    unroll = not multi_pod
+    kvb = min(4096, max(1024, shape.seq_len // 8))
+    kw = {"sharding_mode": mode, "analysis_unroll": unroll,
+          "attn_kv_block": kvb}
+    kw.update(overrides or {})
+    cfg = get_config(arch, **kw)
+    record_overrides = dict(overrides or {})
+    if shape.kind == "decode" and shape.seq_len > 100_000 \
+            and not cfg.long_context_ok:
+        return {"arch": arch, "shape": shape_name, "skipped": True,
+                "reason": "pure full-attention architecture; long_500k "
+                          "requires sub-quadratic attention (DESIGN.md §4)"}
+    debug_mesh = os.environ.get("REPRO_DRYRUN_MESH")
+    if debug_mesh:  # e.g. "4,4" or "2,4,4" — small-scale debugging only
+        dims = tuple(int(x) for x in debug_mesh.split(","))
+        axes = ("pod", "data", "model")[-len(dims):]
+        mesh = jax.make_mesh(dims, axes,
+                             axis_types=(jax.sharding.AxisType.Auto,) * len(dims))
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = int(np.prod(mesh.devices.shape))
+    record: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "mode": mode,
+        "mesh": "x".join(map(str, mesh.devices.shape)),
+        "axes": list(mesh.axis_names), "n_devices": n_dev,
+        "overrides": record_overrides,
+    }
+    t0 = time.time()
+    with shctx.activate(mesh):
+        long_ctx = (shape.kind == "decode" and shape.seq_len > 100_000)
+        shctx.set_seq_axis("data" if long_ctx else None)
+        shctx.set_batch_axes(("data", "model") if mode == "fsdp" else None)
+        try:
+            args, in_shardings, meta = input_specs(cfg, shape, mesh)
+            record.update(meta)
+            if shape.kind == "train":
+                step = make_train_step(cfg, AdamWConfig())
+                donate_argnums = (0, 1) if donate else ()
+            elif shape.kind == "prefill":
+                step = make_prefill_step(cfg)
+                donate_argnums = ()
+            else:
+                step = make_decode_step(cfg)
+                donate_argnums = (2,) if donate else ()
+            jitted = jax.jit(step, in_shardings=in_shardings,
+                             donate_argnums=donate_argnums)
+            lowered = jitted.lower(*args)
+            record["lower_s"] = time.time() - t0
+            t1 = time.time()
+            compiled = lowered.compile()
+            record["compile_s"] = time.time() - t1
+            hlo = compiled.as_text()
+            record["roofline"] = analysis.roofline(
+                compiled, n_devices=n_dev,
+                model_flops_global=model_flops_global(cfg, shape),
+                hlo_text=hlo)
+            record["n_params"] = cfg.n_params()
+            record["n_active_params"] = cfg.n_active_params()
+            if verbose:
+                mem = record["roofline"]["memory"]
+                print(f"[{arch} × {shape_name} × {record['mesh']}] "
+                      f"compile={record['compile_s']:.1f}s")
+                print("  memory_analysis:", json.dumps(mem))
+                print("  cost_analysis terms:",
+                      json.dumps(record["roofline"]["terms"]))
+                print("  dominant:", record["roofline"]["dominant"],
+                      f"useful_flops_ratio="
+                      f"{record['roofline']['useful_flops_ratio']:.3f}")
+        finally:
+            shctx.set_seq_axis(None)
+            shctx.set_batch_axes(None)
+    return record
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True, choices=sorted(INPUT_SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--mode", default="2d",
+                    choices=["2d", "tp_zero1", "fsdp"])
+    ap.add_argument("--no-donate", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--set", action="append", default=[],
+                    metavar="KEY=VALUE",
+                    help="ModelConfig override, e.g. --set attn_kv_block=2048"
+                         " --set remat=false (repeatable)")
+    args = ap.parse_args(argv)
+    overrides: Dict[str, Any] = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        if v.lower() in ("true", "false"):
+            overrides[k] = v.lower() == "true"
+        else:
+            try:
+                overrides[k] = int(v)
+            except ValueError:
+                try:
+                    overrides[k] = float(v)
+                except ValueError:
+                    overrides[k] = v
+    rec = run_dryrun(args.arch, args.shape, multi_pod=args.multi_pod,
+                     mode=args.mode, donate=not args.no_donate,
+                     overrides=overrides)
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(rec, f, indent=2)
+        print("wrote", args.out)
+    if rec.get("skipped"):
+        print(f"SKIPPED: {rec['reason']}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,439 @@
+"""Shared neural layers: norms, RoPE, GQA attention (full / sliding-window /
+chunked / prefix-LM), cross-attention, gated FFNs.
+
+Everything is functional: params are nested dicts of ``jnp`` arrays; init
+functions build them, apply functions consume them. Activation sharding
+constraints go through :func:`repro.sharding.context.constrain` so the same
+code runs un-meshed (smoke tests) and under the production mesh (dry-run).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sharding.context import constrain
+from jax.sharding import PartitionSpec as P
+
+
+# --------------------------------------------------------------------- norms
+def init_norm(cfg, d: int) -> Dict[str, Any]:
+    if cfg.norm == "layernorm":
+        return {"scale": jnp.ones((d,), jnp.float32),
+                "bias": jnp.zeros((d,), jnp.float32)}
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def apply_norm(cfg, p, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if "bias" in p:  # layernorm
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    else:  # rmsnorm
+        ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * p["scale"]
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------- rope
+def rope_frequencies(hd: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float
+               ) -> jnp.ndarray:
+    """x: (..., S, H, hd); positions: (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                      # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (...,S,hd/2)
+    cos = jnp.cos(angles)[..., :, None, :]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------- masks
+def make_mask(seq_len: int, kind: str, *, window: int = 0, chunk: int = 0,
+              n_prefix: int = 0) -> jnp.ndarray:
+    """(S, S) boolean attention mask. ``n_prefix`` positions attend
+    bidirectionally (prefix-LM, PaliGemma)."""
+    i = jnp.arange(seq_len)[:, None]
+    j = jnp.arange(seq_len)[None, :]
+    causal = j <= i
+    if kind == "full":
+        m = causal
+    elif kind == "window":
+        assert window > 0
+        m = causal & (j > i - window)
+    elif kind == "chunked":
+        assert chunk > 0
+        m = causal & ((i // chunk) == (j // chunk))
+    else:
+        raise ValueError(kind)
+    if n_prefix:
+        m = m | ((i < n_prefix) & (j < n_prefix))
+    return m
+
+
+# ----------------------------------------------------------------- attention
+def init_attention(cfg, rng, *, cross: bool = False) -> Dict[str, Any]:
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    k_q, k_k, k_v, k_o = jax.random.split(rng, 4)
+    s = 1.0 / math.sqrt(d)
+    dt = jnp.dtype(cfg.dtype)
+    p = {
+        "wq": (jax.random.normal(k_q, (d, H * hd)) * s).astype(dt),
+        "wk": (jax.random.normal(k_k, (d, KV * hd)) * s).astype(dt),
+        "wv": (jax.random.normal(k_v, (d, KV * hd)) * s).astype(dt),
+        "wo": (jax.random.normal(k_o, (H * hd, d)) * (s / math.sqrt(2 * cfg.n_layers))).astype(dt),
+    }
+    if cfg.use_bias:
+        p["bq"] = jnp.zeros((H * hd,), dt)
+        p["bk"] = jnp.zeros((KV * hd,), dt)
+        p["bv"] = jnp.zeros((KV * hd,), dt)
+        p["bo"] = jnp.zeros((d,), dt)
+    return p
+
+
+def _proj(x, w, b=None):
+    y = x @ w
+    if b is not None:
+        y = y + b
+    return y
+
+
+def _sdpa(q, k, v, mask) -> jnp.ndarray:
+    """q: (B,S,H,hd), k/v: (B,T,KV,hd); GQA via head grouping."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    rep = H // KV
+    qg = q.reshape(B, S, KV, rep, hd)
+    logits = jnp.einsum("bskrh,btkh->bkrst", qg, k) / math.sqrt(hd)
+    logits = logits.astype(jnp.float32)
+    if mask is not None:
+        logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkrst,btkh->bskrh", probs, v)
+    return out.reshape(B, S, H * hd)
+
+
+def _allowed(qpos, kpos, kind: str, window: int, chunk: int, n_prefix: int):
+    """(Sq, Sk) boolean visibility between absolute positions."""
+    i = qpos[:, None]
+    j = kpos[None, :]
+    m = j <= i
+    if kind == "window":
+        m = m & (j > i - window)
+    elif kind == "chunked":
+        m = m & ((i // chunk) == (j // chunk))
+    if n_prefix:
+        m = m | ((i < n_prefix) & (j < n_prefix))
+    return m
+
+
+_DIRECT_SDPA_MAX_SEQ = 2048  # above this, use the online-softmax blocked path
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def _flash(q, k, v, kind, window, chunk, n_prefix, kv_block, unroll):
+    out, _stats = _flash_fwd_impl(q, k, v, kind, window, chunk, n_prefix,
+                                  kv_block, unroll)
+    return out
+
+
+def _flash_fwd_impl(q, k, v, kind, window, chunk, n_prefix, kv_block, unroll):
+    """Online-softmax forward. q: (B,S,KV,rep,hd) pre-scaled f32;
+    k/v: (B,S,KV,hd). Returns out (B,S,KV,rep,hd) f32 + (m, l) row stats."""
+    B, S, KV, rep, hd = q.shape
+    kvb = min(kv_block, S)
+    nk = S // kvb
+    f32 = jnp.float32
+    qpos = jnp.arange(S)
+    k_blocks = k.reshape(B, nk, kvb, KV, hd).transpose(1, 0, 2, 3, 4)
+    v_blocks = v.reshape(B, nk, kvb, KV, hd).transpose(1, 0, 2, 3, 4)
+    kpos_blocks = jnp.arange(S).reshape(nk, kvb)
+    m0 = jnp.full((B, S, KV, rep), -1e30, f32)
+    l0 = jnp.zeros((B, S, KV, rep), f32)
+    a0 = jnp.zeros((B, S, KV, rep, hd), f32)
+
+    def step(carry, xs):
+        m, l, acc = carry
+        k_j, v_j, kpos = xs
+        logits = jnp.einsum("bskrh,btkh->bskrt", q, k_j.astype(f32))
+        allow = _allowed(qpos, kpos, kind, window, chunk, n_prefix)
+        logits = jnp.where(allow[None, :, None, None, :], logits, -1e30)
+        m_new = jnp.maximum(m, logits.max(-1))
+        scale = jnp.exp(m - m_new)
+        pexp = jnp.exp(logits - m_new[..., None])
+        pexp = jnp.where(allow[None, :, None, None, :], pexp, 0.0)
+        l = l * scale + pexp.sum(-1)
+        acc = acc * scale[..., None] + jnp.einsum(
+            "bskrt,btkh->bskrh", pexp, v_j.astype(f32))
+        return (m_new, l, acc), None
+
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0),
+                                  (k_blocks, v_blocks, kpos_blocks),
+                                  unroll=nk if unroll else 1)
+    out = acc / (l[..., None] + 1e-30)
+    return out, (m, l)
+
+
+def _flash_fwd(q, k, v, kind, window, chunk, n_prefix, kv_block, unroll):
+    out, (m, l) = _flash_fwd_impl(q, k, v, kind, window, chunk, n_prefix,
+                                  kv_block, unroll)
+    return out, (q, k, v, out, m, l)
+
+
+def _flash_bwd(kind, window, chunk, n_prefix, kv_block, unroll, res, dout):
+    """FlashAttention-2-style backward: recompute P blockwise from saved row
+    stats — nothing S×S is ever stored (this is the whole point: the naive
+    scan VJP keeps per-block logits alive and blows past HBM)."""
+    q, k, v, out, m, l = res
+    B, S, KV, rep, hd = q.shape
+    kvb = min(kv_block, S)
+    nk = S // kvb
+    f32 = jnp.float32
+    dout = dout.astype(f32)
+    qpos = jnp.arange(S)
+    k_blocks = k.reshape(B, nk, kvb, KV, hd).transpose(1, 0, 2, 3, 4)
+    v_blocks = v.reshape(B, nk, kvb, KV, hd).transpose(1, 0, 2, 3, 4)
+    kpos_blocks = jnp.arange(S).reshape(nk, kvb)
+    D = jnp.sum(dout * out, axis=-1)                       # (B,S,KV,rep)
+    linv = 1.0 / (l + 1e-30)
+
+    def step(dq, xs):
+        k_j, v_j, kpos = xs
+        logits = jnp.einsum("bskrh,btkh->bskrt", q, k_j.astype(f32))
+        allow = _allowed(qpos, kpos, kind, window, chunk, n_prefix)
+        p = jnp.exp(logits - m[..., None]) * linv[..., None]
+        p = jnp.where(allow[None, :, None, None, :], p, 0.0)
+        dv_j = jnp.einsum("bskrt,bskrh->btkh", p, dout)
+        dp = jnp.einsum("bskrh,btkh->bskrt", dout, v_j.astype(f32))
+        ds = p * (dp - D[..., None])
+        dq = dq + jnp.einsum("bskrt,btkh->bskrh", ds, k_j.astype(f32))
+        dk_j = jnp.einsum("bskrt,bskrh->btkh", ds, q)
+        return dq, (dk_j, dv_j)
+
+    dq0 = jnp.zeros_like(q)
+    dq, (dk_blocks, dv_blocks) = jax.lax.scan(
+        step, dq0, (k_blocks, v_blocks, kpos_blocks),
+        unroll=nk if unroll else 1)
+    dk = dk_blocks.transpose(1, 0, 2, 3, 4).reshape(B, S, KV, hd)
+    dv = dv_blocks.transpose(1, 0, 2, 3, 4).reshape(B, S, KV, hd)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def blocked_sdpa(q, k, v, *, kind: str = "full", window: int = 0,
+                 chunk: int = 0, n_prefix: int = 0, kv_block: int = 1024,
+                 unroll: bool = False) -> jnp.ndarray:
+    """Flash-style attention: ``lax.scan`` over KV blocks with running
+    (max, denom, acc) — never materializes the (S,S) logits, and the
+    custom-VJP backward recomputes P from saved row stats. Pure-XLA
+    production path; ``repro.kernels.flash_attention`` is the Pallas TPU
+    twin validated against this in interpret mode."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    rep = H // KV
+    kvb = min(kv_block, S)
+    pad = (-S) % kvb
+    if pad:  # e.g. prefix-LM seq = text + patch prefix; padded rows are
+        # sliced off below, padded keys sit beyond every real query
+        # (causal-masked), and their zero cotangents contribute no gradient.
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Sp = S + pad
+    qg = (q.reshape(B, Sp, KV, rep, hd).astype(jnp.float32)
+          * (1.0 / math.sqrt(hd)))
+    out = _flash(qg, k, v, kind, window, chunk, n_prefix, kvb, unroll)
+    out = out.reshape(B, Sp, H * hd)
+    if pad:
+        out = out[:, :S]
+    return out.astype(q.dtype)
+
+
+def full_seq_sdpa(q, k, v, *, kind: str, window: int, chunk: int,
+                  n_prefix: int, unroll: bool = False,
+                  kv_block: int = 1024) -> jnp.ndarray:
+    """Dispatch: direct masked SDPA for short sequences (cheap, exact),
+    blocked online-softmax beyond ``_DIRECT_SDPA_MAX_SEQ``."""
+    S = q.shape[1]
+    if S <= _DIRECT_SDPA_MAX_SEQ:
+        mask = make_mask(S, "full" if kind == "full" else kind,
+                         window=window, chunk=chunk, n_prefix=n_prefix)
+        return _sdpa(q, k, v, mask)
+    return blocked_sdpa(q, k, v, kind=kind, window=window, chunk=chunk,
+                        n_prefix=n_prefix, unroll=unroll, kv_block=kv_block)
+
+
+def attention(cfg, p, x, *, positions, kind: str = "full",
+              n_prefix: int = 0, use_rope: bool = True) -> jnp.ndarray:
+    """Full-sequence self-attention (train / prefill). x: (B,S,d)."""
+    B, S, _ = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = _proj(x, p["wq"], p.get("bq")).reshape(B, S, H, hd)
+    k = _proj(x, p["wk"], p.get("bk")).reshape(B, S, KV, hd)
+    v = _proj(x, p["wv"], p.get("bv")).reshape(B, S, KV, hd)
+    if use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    if cfg.ulysses_attention and S % 128 == 0:
+        # Ulysses-style sequence parallelism: enter attention with the SEQ
+        # dim sharded over 'model' (GSPMD inserts the all-to-all) so each
+        # device holds whole heads/head_dims for its query slice — no
+        # partial-logit all-reduce per flash block.
+        seq_spec = P(("pod", "data"), "model", None, None)
+        q = constrain(q, seq_spec)
+        k = constrain(k, seq_spec)
+        v = constrain(v, seq_spec)
+    out = full_seq_sdpa(q, k, v, kind=kind, window=cfg.window,
+                        chunk=cfg.chunk, n_prefix=n_prefix,
+                        unroll=cfg.analysis_unroll,
+                        kv_block=cfg.attn_kv_block)
+    if cfg.ulysses_attention and S % 128 == 0:
+        out = constrain(out, P(("pod", "data"), "model", None))
+    return _proj(out, p["wo"], p.get("bo")), (k, v)
+
+
+def decode_attention(cfg, p, x, cache_k, cache_v, pos, *,
+                     mode: str = "full", use_rope: bool = True):
+    """Single-token decode. x: (B,1,d); cache_k/v: (B,T,KV,hd).
+
+    ``mode``: "full" — cache holds absolute positions 0..T-1;
+    "window"/"chunked" — the cache is a ring buffer of length T (= window or
+    chunk size); ``pos`` is the new token's absolute position (RoPE is
+    positionally exact because keys are rotated before storage; softmax is
+    permutation-invariant over the ring).
+    """
+    B = x.shape[0]
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    T = cache_k.shape[1]
+    q = _proj(x, p["wq"], p.get("bq")).reshape(B, 1, H, hd)
+    k = _proj(x, p["wk"], p.get("bk")).reshape(B, 1, KV, hd)
+    v = _proj(x, p["wv"], p.get("bv")).reshape(B, 1, KV, hd)
+    if use_rope:
+        posv = jnp.full((B, 1), pos)
+        q = apply_rope(q, posv, cfg.rope_theta)
+        k = apply_rope(k, posv, cfg.rope_theta)
+    slot = pos if mode == "full" else pos % T
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k, slot, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v, slot, axis=1)
+    from repro.sharding import context as _shctx
+    if _shctx.seq_axis_active():
+        cache_spec = P(None, "seq", None, None)   # context parallelism (B=1)
+    elif cfg.decode_kv_seq_shard and T % 128 == 0:
+        # beyond-paper: keep heads/hd whole, shard the cache depth instead —
+        # attention over a seq-sharded cache needs only O(B·H) softmax-stat
+        # collectives instead of all-gathering the cache every layer.
+        cache_spec = P(("pod", "data"), "model", None, None)
+    else:
+        cache_spec = P(("pod", "data"), None, None, None)
+    cache_k = constrain(cache_k, cache_spec)
+    cache_v = constrain(cache_v, cache_spec)
+    idx = jnp.arange(T)
+    if mode == "window":
+        valid = idx < jnp.minimum(pos + 1, T)     # rolling window
+    elif mode == "chunked":
+        valid = idx <= pos % T                    # resets at chunk boundary
+    else:
+        valid = idx <= pos
+    mask = valid[None, None, None, None, :]  # (1,1,1,1,T) over (b,k,r,s,t)
+    out = _sdpa(q, cache_k, cache_v, mask)
+    return _proj(out, p["wo"], p.get("bo")), cache_k, cache_v
+
+
+def cross_attention(cfg, p, x, mem_k, mem_v) -> jnp.ndarray:
+    """Cross-attention to precomputed memory K/V. x: (B,S,d)."""
+    B, S, _ = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = _proj(x, p["wq"], p.get("bq")).reshape(B, S, H, hd)
+    out = _sdpa(q, mem_k, mem_v, None)
+    return _proj(out, p["wo"], p.get("bo"))
+
+
+def memory_kv(cfg, p, memory) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Project conditioning memory to K/V once (prefill-time)."""
+    B, M, _ = memory.shape
+    KV, hd = cfg.n_kv_heads, cfg.hd
+    k = _proj(memory, p["wk"], p.get("bk")).reshape(B, M, KV, hd)
+    v = _proj(memory, p["wv"], p.get("bv")).reshape(B, M, KV, hd)
+    return k, v
+
+
+# ----------------------------------------------------------------------- ffn
+def init_ffn(cfg, rng, d_ff: Optional[int] = None) -> Dict[str, Any]:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    dt = jnp.dtype(cfg.dtype)
+    k1, k2, k3 = jax.random.split(rng, 3)
+    s_in = 1.0 / math.sqrt(d)
+    s_out = 1.0 / math.sqrt(f) / math.sqrt(2 * cfg.n_layers)
+    p = {"w_up": (jax.random.normal(k2, (d, f)) * s_in).astype(dt),
+         "w_down": (jax.random.normal(k3, (f, d)) * s_out).astype(dt)}
+    if cfg.act != "gelu_mlp":  # gated variants
+        p["w_gate"] = (jax.random.normal(k1, (d, f)) * s_in).astype(dt)
+    if cfg.use_bias:
+        p["b_up"] = jnp.zeros((f,), dt)
+        p["b_down"] = jnp.zeros((d,), dt)
+    return p
+
+
+def apply_ffn(cfg, p, x) -> jnp.ndarray:
+    up = _proj(x, p["w_up"], p.get("b_up"))
+    if cfg.act == "gelu_mlp":
+        h = jax.nn.gelu(up)
+    else:
+        gate = x @ p["w_gate"]
+        if cfg.act == "silu":
+            h = jax.nn.silu(gate) * up
+        elif cfg.act == "gelu":
+            h = jax.nn.gelu(gate) * up
+        elif cfg.act == "relu_sq":
+            h = jnp.square(jax.nn.relu(gate)) * up
+        else:
+            raise ValueError(cfg.act)
+    h = constrain(h, P(("pod", "data"), None, "model"))
+    return _proj(h, p["w_down"], p.get("b_down"))
+
+
+# ----------------------------------------------------------------- embedding
+def init_embed(cfg, rng) -> Dict[str, Any]:
+    dt = jnp.dtype(cfg.dtype)
+    n_emb = cfg.n_codebooks or 1
+    k_e, k_h = jax.random.split(rng)
+    p = {"embed": (jax.random.normal(k_e, (n_emb * cfg.vocab, cfg.d_model))
+                   * 0.02).astype(dt)}
+    if not cfg.tie_embeddings:
+        p["head"] = (jax.random.normal(k_h, (cfg.d_model,
+                                             (cfg.n_codebooks or 1) * cfg.vocab))
+                     * 0.02).astype(dt)
+    return p
+
+
+def embed_tokens(cfg, p, tokens) -> jnp.ndarray:
+    """tokens: (B,S) or (B,S,n_codebooks) -> (B,S,d)."""
+    if cfg.n_codebooks:
+        offs = jnp.arange(cfg.n_codebooks) * cfg.vocab
+        e = jnp.take(p["embed"], tokens + offs, axis=0)  # (B,S,K,d)
+        return e.sum(axis=2)
+    return jnp.take(p["embed"], tokens, axis=0)
+
+
+def logits_from_hidden(cfg, p, x) -> jnp.ndarray:
+    if cfg.tie_embeddings:
+        logits = x @ p["embed"].T
+    else:
+        logits = x @ p["head"]
+    if cfg.n_codebooks:
+        B, S, _ = x.shape
+        logits = logits.reshape(B, S, cfg.n_codebooks, cfg.vocab)
+    return logits

@@ -1,0 +1,347 @@
+"""Model assembly: init / forward (train) / prefill / decode for every block
+type, with ``lax.scan`` over stacked layer groups and optional remat.
+
+The stack is described by ``cfg.layer_groups = ((pattern, count), ...)``;
+each group scans ``count`` repetitions of ``pattern`` (a tuple of block
+types) with parameters stacked on a leading axis. Caches mirror that
+structure: ``caches[g][pos_in_pattern] = dict of (count, B, ...) arrays``.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.sharding.context import constrain
+from . import layers, moe, rglru, rwkv6
+
+ATTN_TYPES = {"full", "window", "chunked", "full_moe", "window_moe",
+              "chunked_moe", "xattn"}
+
+
+def attn_kind(btype: str) -> str:
+    return btype.split("_")[0] if btype != "xattn" else "full"
+
+
+def is_moe(btype: str) -> bool:
+    return btype.endswith("_moe")
+
+
+# ------------------------------------------------------------------- init
+def init_block(cfg, btype: str, rng) -> Dict[str, Any]:
+    ks = jax.random.split(rng, 6)
+    p: Dict[str, Any] = {"ln1": layers.init_norm(cfg, cfg.d_model),
+                         "ln2": layers.init_norm(cfg, cfg.d_model)}
+    if btype in ATTN_TYPES:
+        p["attn"] = layers.init_attention(cfg, ks[0])
+        if btype == "xattn":
+            p["lnx"] = layers.init_norm(cfg, cfg.d_model)
+            p["xattn"] = layers.init_attention(cfg, ks[1], cross=True)
+        if is_moe(btype):
+            p["moe"] = moe.init_moe(cfg, ks[2])
+        else:
+            p["ffn"] = layers.init_ffn(cfg, ks[2])
+    elif btype == "rec":
+        p["rec"] = rglru.init_rglru_block(cfg, ks[0])
+        p["ffn"] = layers.init_ffn(cfg, ks[1])
+    elif btype == "rwkv":
+        p["tmix"] = rwkv6.init_rwkv(cfg, ks[0])
+        p["cmix"] = rwkv6.init_channel_mix(cfg, ks[1])
+    else:
+        raise ValueError(btype)
+    return p
+
+
+def init_params(cfg, rng) -> Dict[str, Any]:
+    k_emb, k_blocks, k_fin = jax.random.split(rng, 3)
+    params: Dict[str, Any] = {"embed": layers.init_embed(cfg, k_emb),
+                              "ln_f": layers.init_norm(cfg, cfg.d_model)}
+    groups = []
+    gk = jax.random.split(k_blocks, len(cfg.layer_groups))
+    for (pattern, count), kg in zip(cfg.layer_groups, gk):
+        per_pos = []
+        pk = jax.random.split(kg, len(pattern))
+        for pos, (btype, kp) in enumerate(zip(pattern, pk)):
+            lk = jax.random.split(kp, count)
+            stacked = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs),
+                *[init_block(cfg, btype, lk[i]) for i in range(count)])
+            per_pos.append(stacked)
+        groups.append(tuple(per_pos))
+    params["groups"] = tuple(groups)
+    return params
+
+
+# --------------------------------------------------------------- block apply
+def block_forward(cfg, btype: str, p, x, *, positions, n_prefix: int,
+                  memory, collect_cache: bool):
+    """Full-sequence apply. Returns (x, cache_or_None, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    cache = None
+    if btype in ATTN_TYPES:
+        h = layers.apply_norm(cfg, p["ln1"], x)
+        a, (k, v) = layers.attention(
+            cfg, p["attn"], h, positions=positions, kind=attn_kind(btype),
+            n_prefix=n_prefix)
+        x = x + a.astype(x.dtype)
+        if btype == "xattn":
+            hx = layers.apply_norm(cfg, p["lnx"], x)
+            mk, mv = layers.memory_kv(cfg, p["xattn"], memory)
+            x = x + layers.cross_attention(cfg, p["xattn"], hx, mk, mv).astype(x.dtype)
+        h2 = layers.apply_norm(cfg, p["ln2"], x)
+        if is_moe(btype):
+            f, aux = moe.apply_moe(cfg, p["moe"], h2)
+        else:
+            f = layers.apply_ffn(cfg, p["ffn"], h2)
+        x = x + f.astype(x.dtype)
+        if collect_cache:
+            cache = _cache_from_kv(cfg, btype, k, v)
+            if btype == "xattn":
+                cache["mk"], cache["mv"] = mk, mv
+    elif btype == "rec":
+        h = layers.apply_norm(cfg, p["ln1"], x)
+        r, state = rglru.apply_rglru_block(cfg, p["rec"], h)
+        x = x + r.astype(x.dtype)
+        h2 = layers.apply_norm(cfg, p["ln2"], x)
+        x = x + layers.apply_ffn(cfg, p["ffn"], h2).astype(x.dtype)
+        if collect_cache:
+            cache = {"h": state[0], "conv": state[1]}
+    elif btype == "rwkv":
+        B = x.shape[0]
+        h = layers.apply_norm(cfg, p["ln1"], x)
+        zero_last = jnp.zeros((B, cfg.d_model), x.dtype)
+        t, (x_t, S) = rwkv6.time_mix(cfg, p["tmix"], h, zero_last, None)
+        x = x + t.astype(x.dtype)
+        h2 = layers.apply_norm(cfg, p["ln2"], x)
+        c, x_c = rwkv6.channel_mix(cfg, p["cmix"], h2, zero_last)
+        x = x + c.astype(x.dtype)
+        if collect_cache:
+            # carry raw *normed* inputs for token shift at decode time
+            cache = {"x_t": h[:, -1, :], "S": S, "x_c": h2[:, -1, :]}
+    else:
+        raise ValueError(btype)
+    return x, cache, aux
+
+
+def _cache_from_kv(cfg, btype: str, k, v) -> Dict[str, jnp.ndarray]:
+    """Build the decode ring/linear cache from full-sequence K/V."""
+    B, S = k.shape[0], k.shape[1]
+    kind = attn_kind(btype)
+    if kind == "full":
+        if cfg.max_decode_len:  # headroom for tokens generated after prefill
+            pad = [(0, 0), (0, cfg.max_decode_len), (0, 0), (0, 0)]
+            return {"k": jnp.pad(k, pad), "v": jnp.pad(v, pad)}
+        return {"k": k, "v": v}
+    T = cfg.window if kind == "window" else cfg.chunk
+    if S <= T:
+        pad = [(0, 0), (0, T - S), (0, 0), (0, 0)]
+        return {"k": jnp.pad(k, pad), "v": jnp.pad(v, pad)}
+    if kind == "window":
+        # last T positions scattered into ring slots (abs_pos % T)
+        tail_pos = jnp.arange(S - T, S)
+        slots = tail_pos % T
+        ck = jnp.zeros((B, T) + k.shape[2:], k.dtype).at[:, slots].set(
+            k[:, -T:])
+        cv = jnp.zeros((B, T) + v.shape[2:], v.dtype).at[:, slots].set(
+            v[:, -T:])
+        return {"k": ck, "v": cv}
+    # chunked: current (possibly empty) partial chunk sits at slots [0, r)
+    r = S % T
+    ck = jnp.zeros((B, T) + k.shape[2:], k.dtype)
+    cv = jnp.zeros((B, T) + v.shape[2:], v.dtype)
+    if r:
+        ck = ck.at[:, :r].set(k[:, -r:])
+        cv = cv.at[:, :r].set(v[:, -r:])
+    return {"k": ck, "v": cv}
+
+
+def block_decode(cfg, btype: str, p, x, cache, pos):
+    """Single-token apply. Returns (x, new_cache)."""
+    if btype in ATTN_TYPES:
+        h = layers.apply_norm(cfg, p["ln1"], x)
+        a, ck, cv = layers.decode_attention(
+            cfg, p["attn"], h, cache["k"], cache["v"], pos,
+            mode=attn_kind(btype))
+        x = x + a.astype(x.dtype)
+        new_cache = dict(cache, k=ck, v=cv)
+        if btype == "xattn":
+            hx = layers.apply_norm(cfg, p["lnx"], x)
+            x = x + layers.cross_attention(cfg, p["xattn"], hx,
+                                           cache["mk"], cache["mv"]).astype(x.dtype)
+        h2 = layers.apply_norm(cfg, p["ln2"], x)
+        if is_moe(btype):
+            f, _aux = moe.apply_moe(cfg, p["moe"], h2)
+        else:
+            f = layers.apply_ffn(cfg, p["ffn"], h2)
+        x = x + f.astype(x.dtype)
+        return x, new_cache
+    if btype == "rec":
+        h = layers.apply_norm(cfg, p["ln1"], x)
+        r, state = rglru.apply_rglru_block(
+            cfg, p["rec"], h, state=(cache["h"], cache["conv"]))
+        x = x + r.astype(x.dtype)
+        h2 = layers.apply_norm(cfg, p["ln2"], x)
+        x = x + layers.apply_ffn(cfg, p["ffn"], h2).astype(x.dtype)
+        return x, {"h": state[0], "conv": state[1]}
+    if btype == "rwkv":
+        h = layers.apply_norm(cfg, p["ln1"], x)
+        t, (x_t, S) = rwkv6.time_mix(cfg, p["tmix"], h, cache["x_t"],
+                                     cache["S"], decode=True)
+        x = x + t.astype(x.dtype)
+        h2 = layers.apply_norm(cfg, p["ln2"], x)
+        c, x_c = rwkv6.channel_mix(cfg, p["cmix"], h2, cache["x_c"])
+        x = x + c.astype(x.dtype)
+        return x, {"x_t": x_t, "S": S, "x_c": x_c}
+    raise ValueError(btype)
+
+
+# ----------------------------------------------------------------- forward
+def _embed_inputs(cfg, params, batch) -> Tuple[jnp.ndarray, int, Any]:
+    """Returns (hidden (B,S,d), n_prefix, memory)."""
+    tokens = batch["tokens"]
+    x = layers.embed_tokens(cfg, params["embed"], tokens)
+    x = x * math.sqrt(cfg.d_model)
+    n_prefix = 0
+    memory = None
+    if cfg.n_prefix_embeds:  # VLM: prepend (stubbed) patch embeddings
+        prefix = batch["prefix_embeds"].astype(x.dtype)
+        x = jnp.concatenate([prefix, x], axis=1)
+        n_prefix = cfg.n_prefix_embeds
+    if cfg.n_memory_embeds:  # audio: cross-attention conditioning memory
+        memory = batch["memory_embeds"].astype(x.dtype)
+    x = constrain(x, P(("pod", "data"), None, None))
+    return x, n_prefix, memory
+
+
+def forward(cfg, params, batch, *, collect_caches: bool = False):
+    """Full-sequence forward. Returns (logits, aux_loss, caches)."""
+    x, n_prefix, memory = _embed_inputs(cfg, params, batch)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    aux_total = jnp.zeros((), jnp.float32)
+    caches: List[Tuple] = []
+
+    for (pattern, count), stacked in zip(cfg.layer_groups, params["groups"]):
+        def body(carry, xs):
+            h, aux = carry
+            new_caches = []
+            for btype, pp in zip(pattern, xs):
+                h, cache, a = block_forward(
+                    cfg, btype, pp, h, positions=positions,
+                    n_prefix=n_prefix, memory=memory,
+                    collect_cache=collect_caches)
+                new_caches.append(cache)
+                aux = aux + a
+            return (h, aux), tuple(new_caches)
+
+        if cfg.seq_parallel_residual and S % 128 == 0:
+            inner = body
+
+            def body(carry, xs, _inner=inner):
+                h, aux = carry
+                # Megatron-SP: residual stream stays seq-sharded over
+                # 'model' at block boundaries; GSPMD turns the TP boundary
+                # all-reduces into reduce-scatter + all-gather pairs.
+                h = constrain(h, P(("pod", "data"), "model", None))
+                (h, aux), cc = _inner((h, aux), xs)
+                h = constrain(h, P(("pod", "data"), "model", None))
+                return (h, aux), cc
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        (x, aux_total), group_caches = jax.lax.scan(
+            body, (x, aux_total), stacked,
+            unroll=count if cfg.analysis_unroll else 1)
+        caches.append(group_caches)
+
+    x = layers.apply_norm(cfg, params["ln_f"], x)
+    logits = layers.logits_from_hidden(cfg, params["embed"], x)
+    return logits, aux_total, (tuple(caches) if collect_caches else None)
+
+
+def decode(cfg, params, batch, caches, pos):
+    """One-token decode. batch['tokens']: (B,1[,K]). Returns (logits, caches)."""
+    x = layers.embed_tokens(cfg, params["embed"], batch["tokens"])
+    x = x * math.sqrt(cfg.d_model)
+    new_groups = []
+    for (pattern, count), stacked, gcache in zip(
+            cfg.layer_groups, params["groups"], caches):
+        def body(h, xs):
+            pp_tuple, cc_tuple = xs
+            new_cc = []
+            for btype, pp, cc in zip(pattern, pp_tuple, cc_tuple):
+                h, nc = block_decode(cfg, btype, pp, h, cc, pos)
+                new_cc.append(nc)
+            return h, tuple(new_cc)
+
+        x, new_gcache = jax.lax.scan(
+            body, x, (stacked, gcache),
+            unroll=count if cfg.analysis_unroll else 1)
+        new_groups.append(new_gcache)
+    x = layers.apply_norm(cfg, params["ln_f"], x)
+    logits = layers.logits_from_hidden(cfg, params["embed"], x)
+    return logits, tuple(new_groups)
+
+
+# ------------------------------------------------------------------- loss
+def loss_fn(cfg, params, batch):
+    """Next-token cross-entropy (+ MoE aux). Returns scalar loss."""
+    logits, aux, _ = forward(cfg, params, batch)
+    tokens = batch["tokens"]
+    if cfg.n_prefix_embeds:  # loss only over text positions
+        logits = logits[:, cfg.n_prefix_embeds:]
+    tgt = tokens[:, 1:]
+    lg = logits[:, :-1].astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(lg, axis=-1)
+    gold = jnp.take_along_axis(lg, tgt[..., None].astype(jnp.int32),
+                               axis=-1)[..., 0]
+    ce = (logz - gold).mean()
+    return ce + cfg.router_aux_coef * aux
+
+
+# --------------------------------------------------------------- accounting
+def count_params_analytic(cfg, active_only: bool = False) -> int:
+    d, f, V = cfg.d_model, cfg.d_ff, cfg.vocab
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    n_emb = cfg.n_codebooks or 1
+    total = n_emb * V * d
+    if not cfg.tie_embeddings:
+        total += d * n_emb * V
+
+    def ffn_params():
+        mats = 2 if cfg.act == "gelu_mlp" else 3
+        return mats * d * f
+
+    def attn_params():
+        return d * H * hd + 2 * d * KV * hd + H * hd * d
+
+    for pattern, count in cfg.layer_groups:
+        for btype in pattern:
+            n = 2 * d  # norms
+            if btype in ATTN_TYPES:
+                n += attn_params()
+                if btype == "xattn":
+                    n += attn_params() + d
+                if is_moe(btype):
+                    E = cfg.top_k if active_only else cfg.n_experts
+                    n += E * 3 * d * f + d * cfg.n_experts
+                    if cfg.shared_expert:
+                        n += ffn_params()
+                else:
+                    n += ffn_params()
+            elif btype == "rec":
+                dr = cfg.d_rnn
+                n += 2 * d * dr + 2 * dr * dr + dr * d + cfg.conv_width * dr
+                n += ffn_params()
+            elif btype == "rwkv":
+                n += 5 * d * d + d * (5 * rwkv6.MIX_LORA) \
+                    + 5 * rwkv6.MIX_LORA * d + 2 * d * cfg.rwkv_decay_lora
+                n += 2 * d * f + d * d  # channel mix
+            total += n * count
+    return int(total)

@@ -1,0 +1,103 @@
+"""Mixture-of-Experts FFN with capacity-based dispatch (GShard-style).
+
+Tokens are split into groups of ``cfg.moe_group_size``; within each group a
+top-k router assigns tokens to experts up to a capacity
+``C = ceil(group * top_k * capacity_factor / E)``. Dispatch/combine are dense
+einsums so the whole layer is one differentiable XLA program; under the
+production mesh the expert dimension is sharded over the ``model`` axis
+(expert parallelism) and groups over ``data``, so GSPMD materializes the
+dispatch as an all-to-all — the communication pattern the paper's MoE
+checkpoints shard along (expert-parallel shard boundaries).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.context import constrain
+from jax.sharding import PartitionSpec as P
+
+from . import layers
+
+
+def init_moe(cfg, rng) -> Dict[str, Any]:
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(rng, 5)
+    s_in = 1.0 / math.sqrt(d)
+    s_out = 1.0 / math.sqrt(f) / math.sqrt(2 * cfg.n_layers)
+    p = {
+        "router": (jax.random.normal(ks[0], (d, E)) * s_in).astype(jnp.float32),
+        "w_gate": (jax.random.normal(ks[1], (E, d, f)) * s_in).astype(dt),
+        "w_up": (jax.random.normal(ks[2], (E, d, f)) * s_in).astype(dt),
+        "w_down": (jax.random.normal(ks[3], (E, f, d)) * s_out).astype(dt),
+    }
+    if cfg.shared_expert:
+        p["shared"] = layers.init_ffn(cfg, ks[4])
+    return p
+
+
+def capacity(cfg, group: int) -> int:
+    c = math.ceil(group * cfg.top_k * cfg.capacity_factor / cfg.n_experts)
+    return max(c, 1)
+
+
+def route(cfg, p, x_grouped) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """x_grouped: (G, S, d) -> dispatch (G,S,E,C), combine (G,S,E,C), aux loss."""
+    G, S, d = x_grouped.shape
+    E, K = cfg.n_experts, cfg.top_k
+    C = capacity(cfg, S)
+    logits = (x_grouped.astype(jnp.float32) @ p["router"])       # (G,S,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, topk_idx = jax.lax.top_k(probs, K)                # (G,S,K)
+    gate_vals = gate_vals / (gate_vals.sum(-1, keepdims=True) + 1e-9)
+
+    # expert assignment one-hots: (G,S,K,E)
+    assign = jax.nn.one_hot(topk_idx, E, dtype=jnp.float32)
+    # position of each (token, k) within its expert queue
+    flat = assign.reshape(G, S * K, E)
+    pos_in_expert = (jnp.cumsum(flat, axis=1) - flat).reshape(G, S, K, E)
+    keep = pos_in_expert < C
+    assign = assign * keep
+    pos = jnp.einsum("gske->gsk", pos_in_expert * assign).astype(jnp.int32)
+    cap_onehot = jax.nn.one_hot(pos, C, dtype=jnp.float32)       # (G,S,K,C)
+    disp = jnp.einsum("gske,gskc->gsec", assign, cap_onehot)     # (G,S,E,C)
+    comb = jnp.einsum("gske,gskc,gsk->gsec", assign, cap_onehot,
+                      gate_vals.astype(jnp.float32))
+    # Switch-style load-balance auxiliary loss
+    density = assign.sum(2).mean(1)                               # (G,E) frac
+    router_prob = probs.mean(1)                                   # (G,E)
+    aux = (density * router_prob).sum(-1).mean() * (E ** 2) / K
+    return disp, comb, aux
+
+
+def apply_moe(cfg, p, x) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B,S,d) -> (out, aux_loss)."""
+    B, S, d = x.shape
+    gs = min(cfg.moe_group_size, B * S)
+    tokens = B * S
+    G = max(tokens // gs, 1)
+    gs = tokens // G
+    xg = x.reshape(G, gs, d)
+    xg = constrain(xg, P(("pod", "data"), None, None))
+    disp, comb, aux = route(cfg, p, xg)
+    dt = x.dtype
+    expert_in = jnp.einsum("gsec,gsd->egcd", disp.astype(dt), xg)
+    expert_in = constrain(expert_in, P("model", ("pod", "data"), None, None))
+    h = jnp.einsum("egcd,edf->egcf", expert_in, p["w_gate"])
+    u = jnp.einsum("egcd,edf->egcf", expert_in, p["w_up"])
+    if cfg.act == "gelu":
+        h = jax.nn.gelu(h) * u
+    else:
+        h = jax.nn.silu(h) * u
+    expert_out = jnp.einsum("egcf,efd->egcd", h, p["w_down"])
+    expert_out = constrain(expert_out, P("model", ("pod", "data"), None, None))
+    out = jnp.einsum("gsec,egcd->gsd", comb.astype(dt), expert_out)
+    out = out.reshape(B, S, d)
+    if cfg.shared_expert:
+        out = out + layers.apply_ffn(cfg, p["shared"], x)
+    return out, aux.astype(jnp.float32)

@@ -1,0 +1,94 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma). [arXiv:2402.19427]
+
+    r_t = σ(x_t W_a + b_a)            (recurrence gate)
+    i_t = σ(x_t W_x + b_x)            (input gate)
+    a_t = exp(-c · softplus(Λ) · r_t) (c = 8)
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ u_t)
+
+The recurrence is elementwise-diagonal, so train/prefill uses
+``jax.lax.associative_scan`` over time (log-depth on TPU); decode is a single
+step. The block follows Griffin: (norm → [gelu gate ‖ conv1d→RG-LRU] → merge
+→ out-proj) with residual, then a gated-MLP sub-block handled by the caller.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+C_FACTOR = 8.0
+
+
+def init_rglru_block(cfg, rng) -> Dict[str, Any]:
+    d, dr = cfg.d_model, cfg.d_rnn
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(rng, 7)
+    s = 1.0 / math.sqrt(d)
+    return {
+        "w_gate_branch": (jax.random.normal(ks[0], (d, dr)) * s).astype(dt),
+        "w_rec_in": (jax.random.normal(ks[1], (d, dr)) * s).astype(dt),
+        "conv_w": (jax.random.normal(ks[2], (cfg.conv_width, dr)) * 0.1).astype(dt),
+        "conv_b": jnp.zeros((dr,), dt),
+        "lam": jax.random.uniform(ks[3], (dr,), jnp.float32, 0.5, 4.0),
+        "w_a": (jax.random.normal(ks[4], (dr, dr)) * (1 / math.sqrt(dr))).astype(dt),
+        "b_a": jnp.zeros((dr,), jnp.float32),
+        "w_x": (jax.random.normal(ks[5], (dr, dr)) * (1 / math.sqrt(dr))).astype(dt),
+        "b_x": jnp.zeros((dr,), jnp.float32),
+        "w_out": (jax.random.normal(ks[6], (dr, d)) * (1 / math.sqrt(dr))
+                  / math.sqrt(2 * cfg.n_layers)).astype(dt),
+    }
+
+
+def causal_conv1d(p, x, conv_state=None):
+    """Depthwise causal conv, width W. x: (B,T,dr).
+
+    conv_state: (B, W-1, dr) trailing inputs from the previous segment
+    (decode); returns (y, new_conv_state)."""
+    W = p["conv_w"].shape[0]
+    B, T, dr = x.shape
+    if conv_state is None:
+        conv_state = jnp.zeros((B, W - 1, dr), x.dtype)
+    xp = jnp.concatenate([conv_state, x], axis=1)           # (B, T+W-1, dr)
+    y = sum(xp[:, i:i + T, :] * p["conv_w"][i] for i in range(W))
+    new_state = xp[:, -(W - 1):, :] if W > 1 else conv_state
+    return y + p["conv_b"], new_state
+
+
+def rg_lru(p, u, h0=None):
+    """u: (B,T,dr) gated inputs; h0: (B,dr) carried state. -> (y, h_last)."""
+    f32 = jnp.float32
+    uf = u.astype(f32)
+    r = jax.nn.sigmoid(uf @ p["w_a"].astype(f32) + p["b_a"])
+    i = jax.nn.sigmoid(uf @ p["w_x"].astype(f32) + p["b_x"])
+    log_a = -C_FACTOR * jax.nn.softplus(p["lam"]) * r        # (B,T,dr) ≤ 0
+    a = jnp.exp(log_a)
+    # sqrt(1-a^2) with guard; gated input
+    b = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * uf)
+    if h0 is not None:
+        # fold carried state in as a virtual step 0: b_0 += a_0 * h0
+        b = b.at[:, 0, :].add(a[:, 0, :] * h0.astype(f32))
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    a_sc, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h.astype(u.dtype), h[:, -1, :]
+
+
+def apply_rglru_block(cfg, p, x, state=None):
+    """x: (B,T,d). state: None or (h (B,dr), conv (B,W-1,dr)).
+    Returns (out (B,T,d), new_state)."""
+    gate = jax.nn.gelu(x @ p["w_gate_branch"])
+    u = x @ p["w_rec_in"]
+    h0 = conv_state = None
+    if state is not None:
+        h0, conv_state = state
+    u, new_conv = causal_conv1d(p, u, conv_state)
+    rec, h_last = rg_lru(p, u, h0)
+    out = (gate * rec) @ p["w_out"]
+    return out, (h_last.astype(jnp.float32), new_conv)

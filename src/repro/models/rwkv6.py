@@ -1,0 +1,209 @@
+"""RWKV6 "Finch" block: data-dependent decay linear recurrence.
+[arXiv:2404.05892]
+
+The WKV6 recurrence per head (state S ∈ R^{dk×dv}):
+
+    o_t = r_t · (S_{t-1} + diag(u) k_t^T v_t)
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t,   w_t = exp(-exp(x_w,t)) ∈ (0,1)
+
+Training/prefill uses a **chunked parallel form** (TPU-friendly: the MXU sees
+(C×C) matmuls instead of a length-T scalar scan): within a chunk of length C
+intra-chunk contributions use pairwise log-decay factors; the carried state is
+propagated chunk-to-chunk by a ``lax.scan``. Per-step log-decays are clamped
+to ≥ ``LOG_DECAY_CLAMP`` so the intra-chunk exp() factors stay inside fp32
+range — decays below e^-6/step are numerically zero after a few steps anyway
+(documented deviation from the CUDA kernel, which does the recurrence
+stepwise). ``reference_wkv6`` is the exact stepwise oracle used by tests.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+LOG_DECAY_CLAMP = -5.0  # e^-5/step ≈ 0.0067 — effectively zero within a chunk
+MIX_LORA = 32
+
+
+def init_rwkv(cfg, rng) -> Dict[str, Any]:
+    d = cfg.d_model
+    hs = cfg.rwkv_head_size
+    H = d // hs
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(rng, 12)
+    s = 1.0 / math.sqrt(d)
+    p = {
+        # token-shift data-dependent mixing (5 targets: r,w,k,v,g)
+        "mix_base": (jax.random.uniform(ks[0], (5, d)) * 0.5).astype(jnp.float32),
+        "mix_w1": (jax.random.normal(ks[1], (d, 5 * MIX_LORA)) * s).astype(dt),
+        "mix_w2": (jax.random.normal(ks[2], (5, MIX_LORA, d)) * 0.01).astype(dt),
+        # data-dependent decay LoRA
+        "w0": (jax.random.normal(ks[3], (d,)) * 0.5 - 0.6).astype(jnp.float32),
+        "w_a": (jax.random.normal(ks[4], (d, cfg.rwkv_decay_lora)) * s).astype(dt),
+        "w_b": (jax.random.normal(ks[5], (cfg.rwkv_decay_lora, d)) * 0.01).astype(dt),
+        # bonus
+        "u": (jax.random.normal(ks[6], (H, hs)) * 0.1).astype(jnp.float32),
+        # projections
+        "wr": (jax.random.normal(ks[7], (d, d)) * s).astype(dt),
+        "wk": (jax.random.normal(ks[8], (d, d)) * s).astype(dt),
+        "wv": (jax.random.normal(ks[9], (d, d)) * s).astype(dt),
+        "wg": (jax.random.normal(ks[10], (d, d)) * s).astype(dt),
+        "wo": (jax.random.normal(ks[11], (d, d)) * s
+               / math.sqrt(2 * cfg.n_layers)).astype(dt),
+        "ln_x_scale": jnp.ones((d,), jnp.float32),  # per-head group-norm
+    }
+    return p
+
+
+def init_channel_mix(cfg, rng) -> Dict[str, Any]:
+    d, f = cfg.d_model, cfg.d_ff
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(rng, 3)
+    s_in, s_out = 1.0 / math.sqrt(d), 1.0 / math.sqrt(f)
+    return {
+        "mix_k": (jax.random.uniform(ks[0], (d,)) * 0.5).astype(jnp.float32),
+        "mix_r": (jax.random.uniform(ks[0], (d,)) * 0.5).astype(jnp.float32),
+        "w_in": (jax.random.normal(ks[1], (d, f)) * s_in).astype(dt),
+        "w_out": (jax.random.normal(ks[2], (f, d)) * s_out
+                  / math.sqrt(2 * cfg.n_layers)).astype(dt),
+        "w_r": (jax.random.normal(ks[2], (d, d)) * s_in).astype(dt),
+    }
+
+
+# --------------------------------------------------------------------- wkv6
+def _group_norm_heads(x, scale, H: int, eps: float = 64e-5):
+    """Per-head group norm over the output (RWKV's ln_x). x: (B,T,d)."""
+    B, T, d = x.shape
+    xs = x.reshape(B, T, H, d // H).astype(jnp.float32)
+    mu = xs.mean(-1, keepdims=True)
+    var = xs.var(-1, keepdims=True)
+    xs = (xs - mu) * jax.lax.rsqrt(var + eps)
+    return (xs.reshape(B, T, d) * scale).astype(x.dtype)
+
+
+def chunked_wkv6(r, k, v, lw, u, chunk: int
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunk-parallel WKV6 as a ``lax.scan`` over chunks.
+
+    r,k,v: (B,T,H,hs); lw: (B,T,H,hs) log-decays (≤0); u: (H,hs).
+    Returns (out (B,T,H,hs), final state (B,H,hs,hs)).
+
+    Within a chunk the contributions are (C×C) matmuls (MXU-friendly); the
+    carried state propagates sequentially. Live memory per step is
+    O(B·H·C²), independent of T — the full-T parallel form would need
+    O(B·H·T·C) which does not fit HBM at production batch sizes.
+    The exp() range is bounded by C·|LOG_DECAY_CLAMP| < 88 (fp32-safe).
+    """
+    B, T, H, hs = r.shape
+    C = chunk
+    assert T % C == 0, f"T={T} must be divisible by chunk={C}"
+    assert C * (-LOG_DECAY_CLAMP) < 88.0, "intra-chunk exp() would overflow"
+    N = T // C
+    f32 = jnp.float32
+    # (N, B, H, C, hs) scan layout
+    def to_scan(a):
+        return a.astype(f32).reshape(B, N, C, H, hs).transpose(1, 0, 3, 2, 4)
+    r_s, k_s, v_s = to_scan(r), to_scan(k), to_scan(v)
+    lw_s = to_scan(jnp.clip(lw, LOG_DECAY_CLAMP, 0.0))
+    uf = u.astype(f32)
+    idx = jnp.arange(C)
+    strict = idx[:, None] > idx[None, :]
+
+    def step(S, xs):
+        r_c, k_c, v_c, lw_c = xs                       # (B,H,C,hs)
+        cum = jnp.cumsum(lw_c, axis=2)                 # Σ_{u<=t}
+        ex = cum - lw_c                                # Σ_{u<t}
+        total = cum[:, :, -1, :]                       # (B,H,hs)
+        q_t = r_c * jnp.exp(ex)
+        k_t = k_c * jnp.exp(-cum)
+        scores = jnp.einsum("bhci,bhdi->bhcd", q_t, k_t)
+        scores = jnp.where(strict, scores, 0.0)
+        diag = jnp.einsum("bhci,hi,bhci->bhc", r_c, uf, k_c)
+        intra = jnp.einsum("bhcd,bhdj->bhcj", scores, v_c) \
+            + diag[..., None] * v_c
+        inter = jnp.einsum("bhci,bhij->bhcj", q_t, S)
+        k_state = k_c * jnp.exp(total[:, :, None, :] - cum)
+        S_new = S * jnp.exp(total)[..., :, None] \
+            + jnp.einsum("bhci,bhcj->bhij", k_state, v_c)
+        return S_new, intra + inter
+
+    S0 = jnp.zeros((B, H, hs, hs), f32)
+    S_final, out = jax.lax.scan(step, S0, (r_s, k_s, v_s, lw_s))
+    out = out.transpose(1, 0, 3, 2, 4).reshape(B, T, H, hs)
+    return out, S_final
+
+
+def reference_wkv6(r, k, v, lw, u, initial_state=None
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Exact stepwise oracle (and the decode path). Shapes as chunked_wkv6."""
+    B, T, H, hs = r.shape
+    f32 = jnp.float32
+    r, k, v = (a.astype(f32).transpose(0, 2, 1, 3) for a in (r, k, v))
+    lw = jnp.clip(lw.astype(f32), LOG_DECAY_CLAMP, 0.0).transpose(0, 2, 1, 3)
+    S = initial_state if initial_state is not None \
+        else jnp.zeros((B, H, hs, hs), f32)
+
+    def step(S, xs):
+        r_t, k_t, v_t, lw_t = xs                 # (B,H,hs)
+        kv = k_t[..., :, None] * v_t[..., None, :]
+        o = jnp.einsum("bhi,bhij->bhj", r_t,
+                       S + u.astype(f32)[None, :, :, None] * kv)
+        S = jnp.exp(lw_t)[..., :, None] * S + kv
+        return S, o
+
+    xs = tuple(a.transpose(2, 0, 1, 3) for a in (r, k, v, lw))
+    S, out = jax.lax.scan(step, S, xs)
+    return out.transpose(1, 0, 2, 3).reshape(B, T, H, hs), S
+
+
+# ----------------------------------------------------------------- the block
+def _ddlerp(p, x, x_prev):
+    """Data-dependent token-shift mixing (Finch): 5 mixed variants of x."""
+    B, T, d = x.shape
+    delta = x_prev - x
+    base = x + delta * p["mix_base"][0]          # seed mix (uses target 0)
+    lora = jnp.tanh(base @ p["mix_w1"]).reshape(B, T, 5, MIX_LORA)
+    dyn = jnp.einsum("btki,kid->btkd", lora, p["mix_w2"])
+    mixes = p["mix_base"][None, None] + dyn      # (B,T,5,d)
+    return x[:, :, None, :] + delta[:, :, None, :] * mixes
+
+
+def time_mix(cfg, p, x, x_prev_last, state, *, decode: bool = False):
+    """RWKV6 attention analogue.
+
+    x: (B,T,d); x_prev_last: (B,d) last token of previous segment (token
+    shift carry); state: (B,H,hs,hs) WKV state. Returns (out, new_carry)."""
+    B, T, d = x.shape
+    hs = cfg.rwkv_head_size
+    H = d // hs
+    x_prev = jnp.concatenate([x_prev_last[:, None, :], x[:, :-1, :]], axis=1)
+    m = _ddlerp(p, x, x_prev)
+    xr, xw, xk, xv, xg = (m[:, :, i, :] for i in range(5))
+    r = (xr @ p["wr"]).reshape(B, T, H, hs)
+    kk = (xk @ p["wk"]).reshape(B, T, H, hs)
+    vv = (xv @ p["wv"]).reshape(B, T, H, hs)
+    g = jax.nn.silu(xg @ p["wg"])
+    lw = -jnp.exp(p["w0"] + jnp.tanh(xw @ p["w_a"]) @ p["w_b"])  # (B,T,d) ≤ 0
+    lw = lw.reshape(B, T, H, hs)
+    if decode or state is not None or T % cfg.rwkv_chunk != 0:
+        wkv, S = reference_wkv6(r, kk, vv, lw, p["u"], initial_state=state)
+    else:  # train/prefill from zero state: chunk-parallel form
+        wkv, S = chunked_wkv6(r, kk, vv, lw, p["u"], cfg.rwkv_chunk)
+    out = _group_norm_heads(wkv.reshape(B, T, d).astype(x.dtype),
+                            p["ln_x_scale"], H)
+    out = (out * g) @ p["wo"]
+    return out, (x[:, -1, :], S.astype(jnp.float32))
+
+
+def channel_mix(cfg, p, x, x_prev_last):
+    B, T, d = x.shape
+    x_prev = jnp.concatenate([x_prev_last[:, None, :], x[:, :-1, :]], axis=1)
+    delta = x_prev - x
+    xk = x + delta * p["mix_k"]
+    xr = x + delta * p["mix_r"]
+    k = jnp.square(jax.nn.relu(xk @ p["w_in"]))
+    r = jax.nn.sigmoid(xr @ p["w_r"])
+    return r * (k @ p["w_out"]), x[:, -1, :]

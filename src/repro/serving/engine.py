@@ -1,0 +1,114 @@
+"""Serving: prefill + single-token decode steps and cache templates.
+
+``prefill_step`` consumes a full prompt and returns (last-token logits,
+decode caches). ``decode_step`` consumes one token + caches. Cache templates
+(:func:`cache_template`) let the dry-run lower decode steps from
+``ShapeDtypeStruct``s without ever allocating a 500k-token cache.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as M
+from repro.models.model import ATTN_TYPES, attn_kind
+
+
+def make_prefill_step(cfg) -> Callable:
+    def prefill_step(params, batch):
+        logits, _aux, caches = M.forward(cfg, params, batch,
+                                         collect_caches=True)
+        return logits[:, -1:, :], caches
+    return prefill_step
+
+
+def make_decode_step(cfg) -> Callable:
+    def decode_step(params, tokens, caches, pos):
+        logits, new_caches = M.decode(cfg, params, {"tokens": tokens},
+                                      caches, pos)
+        return logits, new_caches
+    return decode_step
+
+
+# ---------------------------------------------------------------- templates
+def _cache_entry_shapes(cfg, btype: str, batch: int, seq_len: int
+                        ) -> Dict[str, Tuple[Tuple[int, ...], Any]]:
+    """Shapes/dtypes of one layer's decode cache (without the stack dim)."""
+    dt = jnp.dtype(cfg.dtype)
+    if btype in ATTN_TYPES:
+        kind = attn_kind(btype)
+        if kind == "window":
+            T = min(cfg.window, seq_len)
+        elif kind == "chunked":
+            T = min(cfg.chunk, seq_len)
+        else:
+            T = seq_len
+        e = {"k": ((batch, T, cfg.n_kv_heads, cfg.hd), dt),
+             "v": ((batch, T, cfg.n_kv_heads, cfg.hd), dt)}
+        if btype == "xattn":
+            e["mk"] = ((batch, cfg.n_memory_embeds, cfg.n_kv_heads, cfg.hd), dt)
+            e["mv"] = ((batch, cfg.n_memory_embeds, cfg.n_kv_heads, cfg.hd), dt)
+        return e
+    if btype == "rec":
+        return {"h": ((batch, cfg.d_rnn), jnp.float32),
+                "conv": ((batch, cfg.conv_width - 1, cfg.d_rnn), dt)}
+    if btype == "rwkv":
+        hs = cfg.rwkv_head_size
+        H = cfg.d_model // hs
+        return {"x_t": ((batch, cfg.d_model), dt),
+                "S": ((batch, H, hs, hs), jnp.float32),
+                "x_c": ((batch, cfg.d_model), dt)}
+    raise ValueError(btype)
+
+
+def cache_template(cfg, batch: int, seq_len: int,
+                   make_leaf=None) -> Tuple:
+    """Caches pytree of ShapeDtypeStructs (or arrays via ``make_leaf``)."""
+    if make_leaf is None:
+        make_leaf = lambda shape, dtype: jax.ShapeDtypeStruct(shape, dtype)
+    groups = []
+    for pattern, count in cfg.layer_groups:
+        per_pos = []
+        for btype in pattern:
+            entries = _cache_entry_shapes(cfg, btype, batch, seq_len)
+            per_pos.append({k: make_leaf((count,) + shape, dt)
+                            for k, (shape, dt) in entries.items()})
+        groups.append(tuple(per_pos))
+    return tuple(groups)
+
+
+def zero_caches(cfg, batch: int, seq_len: int) -> Tuple:
+    return cache_template(
+        cfg, batch, seq_len,
+        make_leaf=lambda shape, dt: jnp.zeros(shape, dt))
+
+
+def greedy_generate(cfg, params, prompt_batch, n_new: int):
+    """Small convenience driver used by examples/tests (CPU-sized)."""
+    import dataclasses
+    cfg = dataclasses.replace(cfg, max_decode_len=n_new)
+    prefill = jax.jit(make_prefill_step(cfg))
+    decode = jax.jit(make_decode_step(cfg))
+    logits, caches = prefill(params, prompt_batch)
+    tokens = prompt_batch["tokens"]
+    B = tokens.shape[0]
+    S = tokens.shape[1] + cfg.n_prefix_embeds  # vlm: image prefix positions
+
+    def next_tokens(logits):
+        last = jnp.argmax(logits[:, -1].astype(jnp.float32), axis=-1)
+        if cfg.n_codebooks:
+            return last.reshape(B, 1, cfg.n_codebooks)
+        return last.reshape(B, 1)
+
+    out = []
+    nxt = next_tokens(logits)
+    for i in range(n_new):
+        out.append(nxt)
+        logits, caches = decode(params, nxt, caches, S + i)
+        nxt = next_tokens(logits)
+    return jnp.concatenate(out, axis=1)

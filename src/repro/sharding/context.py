@@ -1,0 +1,104 @@
+"""Ambient-mesh sharding context.
+
+The model code expresses activation constraints against *logical* axes
+("pod", "data", "model", "seq"). The launcher activates a mesh via
+:func:`activate`; when no mesh is active (CPU smoke tests) constraints are
+no-ops, so the same model code runs everywhere.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def active_mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def activate(mesh: Optional[Mesh]):
+    prev = active_mesh()
+    _state.mesh = mesh
+    try:
+        if mesh is not None:
+            with mesh:
+                yield mesh
+        else:
+            yield None
+    finally:
+        _state.mesh = prev
+
+
+def _resolve(spec: P, mesh: Mesh) -> Optional[P]:
+    """Map logical axes onto the active mesh: drop axis names the mesh does
+    not have, map 'seq' to the configured physical axis (context parallelism
+    for batch=1 decode), and never use one physical axis twice. Returns None
+    when nothing survives (→ skip the constraint, don't force replication)."""
+    names = set(mesh.axis_names)
+    used = set()
+    out = []
+    any_axis = False
+    for entry in spec:
+        if entry is None:
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        mapped = []
+        expanded = []
+        for a in axes:
+            ba = getattr(_state, "batch_axes", None)
+            if a == "data" and ba:
+                expanded.extend(ba)   # fsdp: batch spans extra axes
+            else:
+                expanded.append(a)
+        for a in expanded:
+            if a == "seq":
+                a = getattr(_state, "seq_axis", None)
+                if a is None:
+                    continue
+            if a in names and a not in used:
+                mapped.append(a)
+                used.add(a)
+        if not mapped:
+            out.append(None)
+        elif len(mapped) == 1:
+            out.append(mapped[0])
+            any_axis = True
+        else:
+            out.append(tuple(mapped))
+            any_axis = True
+    return P(*out) if any_axis else None
+
+
+def set_seq_axis(axis: Optional[str]) -> None:
+    """Map the logical 'seq' axis onto a physical mesh axis (or disable)."""
+    _state.seq_axis = axis
+
+
+def set_batch_axes(axes) -> None:
+    """Expand the logical 'data' (batch) axis onto extra physical axes —
+    e.g. ("data", "model") for pure-FSDP runs where the whole mesh is one
+    big data-parallel domain."""
+    _state.batch_axes = tuple(axes) if axes else None
+
+
+def seq_axis_active() -> bool:
+    return getattr(_state, "seq_axis", None) is not None
+
+
+def constrain(x, spec: P):
+    mesh = active_mesh()
+    if mesh is None:
+        return x
+    resolved = _resolve(spec, mesh)
+    if resolved is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, resolved))

@@ -1,0 +1,137 @@
+"""Two-phase training loop with lazy checkpoint integration (paper Fig 6).
+
+The train step is split into ``grad_step`` (forward+backward — the *immutable
+window*: params/opt state are only read) and ``update_step`` (the mutation
+point — donates its buffers, the JAX analogue of in-place update). A
+checkpoint requested at iteration end stages device→host concurrently with
+the next iteration's grad_step; :meth:`CheckpointManager.wait_for_capture`
+is called at the phase boundary so the donating update never overwrites
+state still being snapshotted — exactly the paper's U-phase delay.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import CheckpointManager
+from repro.data.pipeline import SyntheticTokenPipeline
+from repro.models import model as M
+from repro.optim.adamw import AdamWConfig, apply_updates, init_opt_state
+
+
+def make_grad_step(cfg) -> Callable:
+    def grad_step(params, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: M.loss_fn(cfg, p, batch))(params)
+        return grads, loss
+    return jax.jit(grad_step)
+
+
+def make_update_step(cfg, hp: AdamWConfig) -> Callable:
+    def update_step(params, opt_state, grads):
+        return apply_updates(params, opt_state, grads, hp)
+    # donate params+opt_state: the buffers being checkpointed are reused
+    # in-place here — this is what makes the capture barrier necessary.
+    return jax.jit(update_step, donate_argnums=(0, 1))
+
+
+def make_train_step(cfg, hp: AdamWConfig) -> Callable:
+    """Fused single-jit step (used by the dry-run / roofline path)."""
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: M.loss_fn(cfg, p, batch))(params)
+        new_params, new_opt = apply_updates(params, opt_state, grads, hp)
+        return new_params, new_opt, loss
+    return train_step
+
+
+@dataclasses.dataclass
+class IterationRecord:
+    step: int
+    loss: float
+    iter_s: float
+    ckpt_stall_s: float       # direct stall (capture barrier + save prologue)
+    ckpt_requested: bool
+
+
+class Trainer:
+    """End-to-end driver: data → two-phase step → lazy checkpoints."""
+
+    def __init__(self, cfg, *, batch: int, seq_len: int,
+                 hp: Optional[AdamWConfig] = None,
+                 manager: Optional[CheckpointManager] = None,
+                 seed: int = 0):
+        self.cfg = cfg
+        self.hp = hp or AdamWConfig()
+        self.manager = manager
+        self.pipeline = SyntheticTokenPipeline(cfg, batch, seq_len, seed=seed)
+        self.grad_step = make_grad_step(cfg)
+        self.update_step = make_update_step(cfg, self.hp)
+        rng = jax.random.PRNGKey(seed)
+        self.params = M.init_params(cfg, rng)
+        self.opt_state = init_opt_state(self.params)
+        self.step = 0
+        self.records: List[IterationRecord] = []
+
+    # -- checkpoint state composition (the paper's heterogeneous pytree) ----
+    def state(self) -> Dict[str, Any]:
+        return {
+            "model": self.params,
+            "optimizer": self.opt_state,
+            "meta": {
+                "step": self.step,
+                "arch": self.cfg.name,
+                "data_state": self.pipeline.state,
+                "hp": self.hp._asdict(),
+                "rng": {"seed": 0},
+            },
+        }
+
+    def resume(self, step: Optional[int] = None) -> int:
+        assert self.manager is not None
+        restored = self.manager.restore(self.state(), step=step)
+        self.params = restored["model"]
+        self.opt_state = restored["optimizer"]
+        self.step = restored["meta"]["step"]
+        self.pipeline.restore(restored["meta"]["data_state"])
+        return self.step
+
+    def run(self, n_steps: int, ckpt_interval: int = 0) -> List[IterationRecord]:
+        ckpt_pending = False
+        for _ in range(n_steps):
+            t0 = time.perf_counter()
+            batch = {k: jnp.asarray(v)
+                     for k, v in self.pipeline.next_batch().items()}
+            # --- immutable window: forward + backward ---------------------
+            grads, loss = self.grad_step(self.params, batch)
+            # --- capture barrier before the donating update ---------------
+            stall = 0.0
+            if ckpt_pending:
+                stall = self.manager.wait_for_capture()
+                ckpt_pending = False
+            self.params, self.opt_state = self.update_step(
+                self.params, self.opt_state, grads)
+            self.step += 1
+            # --- checkpoint request (lazy: overlaps next fwd/bwd) ---------
+            requested = False
+            if ckpt_interval and self.manager is not None \
+                    and self.step % ckpt_interval == 0:
+                t_save = time.perf_counter()
+                fut = self.manager.save(self.step, self.state())
+                stall += time.perf_counter() - t_save  # blocking prologue
+                ckpt_pending = True
+                requested = True
+            loss_val = float(loss)
+            self.records.append(IterationRecord(
+                step=self.step, loss=loss_val,
+                iter_s=time.perf_counter() - t0,
+                ckpt_stall_s=stall, ckpt_requested=requested))
+        if self.manager is not None:
+            self.manager.wait_for_persist()
+        return self.records

@@ -1,0 +1,28 @@
+import os
+import sys
+
+# Tests must see the real device count (1 CPU) — never the dry-run's 512.
+os.environ.pop("XLA_FLAGS", None)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def run_in_subprocess(code: str, n_devices: int = 8, timeout: int = 600) -> str:
+    """Run ``code`` in a fresh interpreter with N virtual CPU devices."""
+    import subprocess
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=timeout)
+    assert out.returncode == 0, f"subprocess failed:\n{out.stdout}\n{out.stderr}"
+    return out.stdout

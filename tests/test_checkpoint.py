@@ -1,0 +1,123 @@
+"""CheckpointManager: save/restore across all engines, consistency, dedup."""
+
+import glob
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (CheckpointManager, ENGINES, FileReader,
+                        load_snapshot_rank, load_sync_rank)
+
+
+def make_state():
+    return {
+        "model": {"w1": jnp.arange(64 * 32, dtype=jnp.float32).reshape(64, 32),
+                  "w2": jnp.full((5, 3), 2.0, jnp.bfloat16)},
+        "optimizer": {"m": jnp.zeros((64, 32)),
+                      "count": jnp.array(7, jnp.int32)},
+        "meta": {"step": 7, "lr": 1e-4, "rng_seed": [0, 1]},
+        "host": np.arange(50, dtype=np.int16),
+    }
+
+
+@pytest.mark.parametrize("mode", sorted(ENGINES))
+def test_save_all_engines(tmp_path, mode):
+    state = make_state()
+    with CheckpointManager(str(tmp_path), mode=mode,
+                           host_cache_bytes=1 << 20) as mgr:
+        fut = mgr.save(7, state)
+        fut.wait_captured()
+        fut.wait_persisted()
+        assert fut.stats.bytes_tensors > 0
+        assert fut.stats.n_tensors == 5  # w1, w2, m, count + host np array
+        files = os.listdir(str(tmp_path / "global_step7"))
+        assert files
+
+
+@pytest.mark.parametrize("mode", sorted(ENGINES))
+def test_restore_roundtrip(tmp_path, mode):
+    state = make_state()
+    with CheckpointManager(str(tmp_path), mode=mode) as mgr:
+        mgr.save(7, state, blocking=True)
+        out = mgr.restore(state, step=7)
+        np.testing.assert_array_equal(np.asarray(out["model"]["w1"]),
+                                      np.asarray(state["model"]["w1"]))
+        np.testing.assert_array_equal(
+            np.asarray(out["model"]["w2"], dtype=np.float32),
+            np.asarray(state["model"]["w2"], dtype=np.float32))
+        assert int(out["optimizer"]["count"]) == 7
+        assert out["meta"] == state["meta"]
+        np.testing.assert_array_equal(out["host"], state["host"])
+
+
+def test_latest_step_and_multiple_checkpoints(tmp_path):
+    state = make_state()
+    with CheckpointManager(str(tmp_path)) as mgr:
+        assert mgr.latest_step() is None
+        mgr.save(1, state, blocking=True)
+        mgr.save(5, state, blocking=True)
+        mgr.save(3, state, blocking=True)
+        assert mgr.latest_step() == 5
+
+
+def test_restore_missing_raises(tmp_path):
+    with CheckpointManager(str(tmp_path)) as mgr:
+        with pytest.raises(FileNotFoundError):
+            mgr.restore({}, step=None)
+
+
+def test_sync_engine_file_is_plain_pickle(tmp_path):
+    state = make_state()
+    with CheckpointManager(str(tmp_path), mode="sync") as mgr:
+        mgr.save(2, state, blocking=True)
+    [f] = glob.glob(str(tmp_path / "global_step2" / "*.pkl"))
+    graph = load_sync_rank(f)
+    w1 = [v for kname, v in graph.items() if "w1" in kname]
+    np.testing.assert_array_equal(w1[0]["data"],
+                                  np.asarray(state["model"]["w1"]))
+    assert graph["__objects__"]["state/meta/step"] == 7
+
+
+def test_snapshot_engine_chunk_files(tmp_path):
+    state = make_state()
+    with CheckpointManager(str(tmp_path), mode="snapshot") as mgr:
+        mgr.save(2, state, blocking=True)
+    d = str(tmp_path / "global_step2")
+    tensors = load_snapshot_rank(d, 0)
+    w1 = [v for kname, v in tensors.items() if "w1" in kname]
+    np.testing.assert_array_equal(w1[0], np.asarray(state["model"]["w1"]))
+
+
+def test_blocking_save_equivalent(tmp_path):
+    state = make_state()
+    with CheckpointManager(str(tmp_path)) as mgr:
+        fut = mgr.save(9, state, blocking=True)
+        assert fut.captured and fut.persisted
+
+
+def test_footer_records_shard_metadata(tmp_path):
+    state = make_state()
+    with CheckpointManager(str(tmp_path)) as mgr:
+        mgr.save(4, state, blocking=True)
+    [f] = glob.glob(str(tmp_path / "global_step4" / "*.dsllm"))
+    r = FileReader(f)
+    names = r.tensor_names()
+    w1 = [n for n in names if "w1" in n][0]
+    e = r.tensors[w1]
+    assert e.global_shape == (64, 32)
+    assert e.index == ((0, 64), (0, 32))
+    assert e.dtype == "float32"
+
+
+def test_stats_phases_ordered(tmp_path):
+    state = make_state()
+    with CheckpointManager(str(tmp_path)) as mgr:
+        fut = mgr.save(1, state)
+        fut.wait_persisted()
+        s = fut.stats
+        assert s.t_captured <= s.t_persisted
+        assert s.blocking_s >= 0
+        assert s.total_bytes == s.bytes_tensors + s.bytes_objects

@@ -1,0 +1,93 @@
+"""Pinned host-cache allocator: blocking back-pressure + interval invariants."""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.host_cache import CacheFullError, HostCache
+
+
+def test_reserve_release_reuse():
+    c = HostCache(1000)
+    r1 = c.reserve(400)
+    r2 = c.reserve(400)
+    assert c.used_bytes() == 800
+    with pytest.raises(CacheFullError):
+        c.reserve(400, timeout=0.05)
+    r1.release()
+    r3 = c.reserve(400)  # reuses r1's interval
+    assert r3.start == r1.start
+    r2.release(); r3.release()
+    assert c.used_bytes() == 0
+
+
+def test_zero_copy_view():
+    c = HostCache(1 << 16)
+    r = c.reserve(256)
+    arr = r.array(np.float32, (64,))
+    arr[:] = np.arange(64, dtype=np.float32)
+    # the same bytes are visible through a second view of the reservation
+    again = np.frombuffer(r.view, dtype=np.float32)
+    np.testing.assert_array_equal(again, np.arange(64, dtype=np.float32))
+
+
+def test_oversized_request_raises():
+    c = HostCache(100)
+    with pytest.raises(CacheFullError, match="exceeds"):
+        c.reserve(101)
+
+
+def test_blocking_backpressure_unblocks():
+    """A reserve that must wait is released when space frees (paper §V-A2:
+    'the next checkpoint request needs to wait for previous tensors to get
+    evicted')."""
+    c = HostCache(100)
+    r1 = c.reserve(80)
+    got = {}
+
+    def waiter():
+        got["r"] = c.reserve(50, timeout=5)
+
+    t = threading.Thread(target=waiter)
+    t.start()
+    time.sleep(0.05)
+    assert "r" not in got          # still blocked
+    r1.release()
+    t.join(timeout=5)
+    assert "r" in got
+    got["r"].release()
+
+
+def test_peak_usage_tracking():
+    c = HostCache(1000)
+    rs = [c.reserve(200) for _ in range(4)]
+    assert c.peak_usage == 800
+    for r in rs:
+        r.release()
+    c.reserve(100).release()
+    assert c.peak_usage == 800  # historical peak
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.tuples(st.integers(1, 300), st.booleans()),
+                min_size=1, max_size=40))
+def test_property_intervals_never_overlap(ops):
+    """Random reserve/release sequences keep allocated intervals disjoint."""
+    c = HostCache(2048)
+    live = []
+    for size, release_one in ops:
+        if release_one and live:
+            live.pop(np.random.default_rng(size).integers(len(live))).release()
+        else:
+            try:
+                live.append(c.reserve(size, timeout=0.01))
+            except CacheFullError:
+                if live:
+                    live.pop(0).release()
+        spans = sorted((r.start, r.start + r.nbytes) for r in live)
+        for (s1, e1), (s2, _e2) in zip(spans, spans[1:]):
+            assert e1 <= s2
+        assert all(0 <= s and e <= 2048 for s, e in spans)

@@ -1,0 +1,153 @@
+"""Pallas kernels vs pure-jnp oracles — shape/dtype sweeps in interpret mode."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.checksum import BLOCK as CK_BLOCK
+
+
+# ------------------------------------------------------------------ checksum
+@pytest.mark.parametrize("n,dtype", [
+    (CK_BLOCK, np.uint32),
+    (3 * CK_BLOCK, np.uint32),
+    (100_000, np.float32),          # padded path
+    (12_345, np.int16),             # odd bytes -> u32 padding
+])
+def test_checksum_matches_ref(n, dtype):
+    rng = np.random.default_rng(42)
+    if np.issubdtype(dtype, np.floating):
+        x = rng.standard_normal(n).astype(dtype)
+    else:
+        x = rng.integers(0, np.iinfo(dtype).max, n, dtype=dtype)
+    got = int(ops.tensor_checksum(jnp.asarray(x)))
+    u = np.asarray(ops.as_u32(jnp.asarray(x)))
+    padded = np.zeros((-(-len(u) // CK_BLOCK)) * CK_BLOCK, np.uint32)
+    padded[:len(u)] = u
+    assert got == int(ref.checksum_ref(padded))
+
+
+def test_checksum_detects_corruption():
+    x = jnp.arange(CK_BLOCK, dtype=jnp.uint32)
+    good = int(ops.tensor_checksum(x))
+    bad = int(ops.tensor_checksum(x.at[12345].set(99)))
+    assert good != bad
+
+
+def test_checksum_detects_block_swap():
+    """Position weighting catches reordered blocks (plain sums would not)."""
+    rng = np.random.default_rng(1)
+    a = rng.integers(0, 2**31, CK_BLOCK, dtype=np.uint32)
+    b = rng.integers(0, 2**31, CK_BLOCK, dtype=np.uint32)
+    x1 = jnp.asarray(np.concatenate([a, b]))
+    x2 = jnp.asarray(np.concatenate([b, a]))
+    assert int(ops.tensor_checksum(x1)) != int(ops.tensor_checksum(x2))
+
+
+# ------------------------------------------------------------------ quantize
+@pytest.mark.parametrize("rows", [256, 512, 1024])
+def test_quantize_int8_sweep(rows):
+    x = jax.random.normal(jax.random.PRNGKey(rows), (rows, 256), jnp.float32)
+    q, s = ops.quantize_int8(x)
+    qr, sr = ref.quantize_int8_ref(x)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(qr))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-6)
+    # bounded reconstruction error: one scale step per element
+    xd = ops.dequantize_int8(q, s)
+    err = np.abs(np.asarray(xd) - np.asarray(x))
+    assert (err <= np.asarray(s) + 1e-7).all()
+
+
+def test_quantize_zero_rows():
+    x = jnp.zeros((256, 256), jnp.float32)
+    q, s = ops.quantize_int8(x)
+    assert int(jnp.abs(q).max()) == 0
+
+
+@pytest.mark.parametrize("shape", [(256, 256), (512, 512), (256, 1024)])
+def test_downcast_bf16_sweep(shape):
+    x = jax.random.normal(jax.random.PRNGKey(0), shape, jnp.float32) * 100
+    got = ops.downcast_bf16(x)
+    want = ref.downcast_bf16_ref(x)
+    np.testing.assert_array_equal(np.asarray(got, dtype=np.float32),
+                                  np.asarray(want, dtype=np.float32))
+
+
+# --------------------------------------------------------------------- delta
+@pytest.mark.parametrize("n", [65_536, 70_000, 200_000])
+def test_delta_xor_roundtrip(n):
+    a = jax.random.normal(jax.random.PRNGKey(1), (n,), jnp.float32)
+    b = jax.random.normal(jax.random.PRNGKey(2), (n,), jnp.float32)
+    d = ops.delta_xor(a, b)
+    rec = np.bitwise_xor(np.asarray(d)[:n], np.asarray(b).view(np.uint32))
+    np.testing.assert_array_equal(rec, np.asarray(a).view(np.uint32))
+
+
+def test_delta_f32_matches_ref():
+    a = jax.random.normal(jax.random.PRNGKey(3), (70_000,), jnp.float32)
+    b = jax.random.normal(jax.random.PRNGKey(4), (70_000,), jnp.float32)
+    d = np.asarray(ops.delta_f32(a, b))[:70_000]
+    np.testing.assert_allclose(d, np.asarray(ref.delta_f32_ref(a, b)),
+                               rtol=1e-6)
+
+
+def test_delta_identical_is_zero():
+    a = jax.random.normal(jax.random.PRNGKey(5), (65_536,), jnp.float32)
+    assert int(jnp.abs(ops.delta_xor(a, a)).max()) == 0
+
+
+# ----------------------------------------------------------- flash attention
+@pytest.mark.parametrize("kind,window,chunk", [
+    ("full", 0, 0), ("window", 128, 0), ("chunked", 0, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_vs_ref(kind, window, chunk, dtype):
+    B, S, H, KV, hd = 2, 512, 4, 2, 64
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, S, H, hd), dtype)
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, S, KV, hd), dtype)
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, S, KV, hd), dtype)
+    got = ops.flash_attention(q, k, v, kind=kind, window=window, chunk=chunk,
+                              q_block=128, kv_block=128)
+    rep = H // KV
+    kr, vr = jnp.repeat(k, rep, 2), jnp.repeat(v, rep, 2)
+    want = ref.flash_attention_ref(
+        q.transpose(0, 2, 1, 3).reshape(B * H, S, hd),
+        kr.transpose(0, 2, 1, 3).reshape(B * H, S, hd),
+        vr.transpose(0, 2, 1, 3).reshape(B * H, S, hd),
+        kind=kind, window=window, chunk=chunk
+    ).reshape(B, H, S, hd).transpose(0, 2, 1, 3)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got, dtype=np.float32),
+                               np.asarray(want, dtype=np.float32),
+                               atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("S,qb,kvb", [(256, 64, 64), (256, 128, 64),
+                                      (512, 256, 128)])
+def test_flash_attention_block_shape_sweep(S, qb, kvb):
+    B, H, hd = 1, 2, 32
+    q = jax.random.normal(jax.random.PRNGKey(7), (B, S, H, hd))
+    k = jax.random.normal(jax.random.PRNGKey(8), (B, S, H, hd))
+    v = jax.random.normal(jax.random.PRNGKey(9), (B, S, H, hd))
+    got = ops.flash_attention(q, k, v, q_block=qb, kv_block=kvb)
+    want = ref.flash_attention_ref(
+        q.transpose(0, 2, 1, 3).reshape(B * H, S, hd),
+        k.transpose(0, 2, 1, 3).reshape(B * H, S, hd),
+        v.transpose(0, 2, 1, 3).reshape(B * H, S, hd),
+    ).reshape(B, H, S, hd).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_flash_matches_model_blocked_sdpa():
+    """The Pallas kernel and the pure-XLA production path agree."""
+    from repro.models.layers import blocked_sdpa
+    B, S, H, KV, hd = 2, 4096, 4, 2, 32
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, S, H, hd))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, S, KV, hd))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, S, KV, hd))
+    got = ops.flash_attention(q, k, v)
+    want = blocked_sdpa(q, k, v, kv_block=1024).reshape(B, S, H, hd)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=3e-5, rtol=3e-5)

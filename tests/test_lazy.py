@@ -1,0 +1,132 @@
+"""Lazy non-blocking capture semantics (paper §V-A2, Fig 6(c,d))."""
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import CheckpointManager, CacheFullError
+
+
+def big_state(mb=8):
+    n = mb * (1 << 20) // 4
+    return {"model": {"w": jnp.arange(n, dtype=jnp.float32)},
+            "meta": {"step": 0}}
+
+
+def test_save_returns_before_persist_with_throttle(tmp_path):
+    """With storage throttled, the blocking prologue must return long before
+    persistence completes — the defining property of async checkpointing."""
+    state = big_state(8)
+    mgr = CheckpointManager(str(tmp_path), mode="datastates",
+                            host_cache_bytes=64 << 20,
+                            throttle_mbps=200.0)  # 8MB -> ≥40ms flush
+    try:
+        fut = mgr.save(1, state)
+        blocking = fut.stats.blocking_s
+        assert not fut.persisted or blocking < fut.stats.persist_latency_s
+        fut.wait_persisted()
+        assert fut.stats.persist_latency_s > blocking * 2
+    finally:
+        mgr.close()
+
+
+def test_sync_engine_blocks_until_persisted(tmp_path):
+    state = big_state(4)
+    mgr = CheckpointManager(str(tmp_path), mode="sync")
+    try:
+        fut = mgr.save(1, state)
+        assert fut.persisted  # sync: save() returns only when durable
+    finally:
+        mgr.close()
+
+
+def test_wait_for_capture_before_update(tmp_path):
+    """The barrier returns only after all device state left the device."""
+    state = big_state(4)
+    mgr = CheckpointManager(str(tmp_path), mode="datastates",
+                            host_cache_bytes=64 << 20)
+    try:
+        fut = mgr.save(1, state)
+        stall = mgr.wait_for_capture()
+        assert fut.captured
+        assert stall >= 0.0
+    finally:
+        mgr.close()
+
+
+def test_capture_precedes_persist(tmp_path):
+    state = big_state(8)
+    mgr = CheckpointManager(str(tmp_path), mode="datastates",
+                            host_cache_bytes=64 << 20, throttle_mbps=500.0)
+    try:
+        fut = mgr.save(1, state)
+        fut.wait_persisted()
+        assert fut.stats.t_captured <= fut.stats.t_persisted
+    finally:
+        mgr.close()
+
+
+def test_cache_backpressure_second_checkpoint(tmp_path):
+    """A second request larger than remaining cache waits for eviction
+    (flush completion) instead of failing — bounded host memory."""
+    state = big_state(8)
+    mgr = CheckpointManager(str(tmp_path), mode="datastates",
+                            host_cache_bytes=12 << 20,  # < 2 checkpoints
+                            throttle_mbps=300.0)
+    try:
+        mgr.save(1, state)
+        t0 = time.perf_counter()
+        fut2 = mgr.save(2, state)     # must wait for step-1 eviction
+        fut2.wait_persisted()
+        assert fut2.persisted
+    finally:
+        mgr.close()
+
+
+def test_oversized_checkpoint_fails_cleanly(tmp_path):
+    state = big_state(8)
+    mgr = CheckpointManager(str(tmp_path), mode="datastates",
+                            host_cache_bytes=1 << 20)
+    from repro.core import CheckpointError
+    try:
+        with pytest.raises((CheckpointError, CacheFullError)):
+            mgr.save(1, state)
+    finally:
+        mgr.engine._engine.close()  # bypass drain (nothing was submitted)
+
+
+def test_many_shards_exceeding_cache_fail_fast_not_deadlock(tmp_path):
+    """Sum-of-shards > cache (each shard individually fits): the coalesced
+    up-front reservation must raise, not block forever waiting for flushes
+    that can never start (regression: fig07 full-scale hang)."""
+    import jax.numpy as jnp
+    from repro.core import CheckpointError
+    state = {f"w{i}": jnp.ones((128, 1024), jnp.float32)  # 8 x 512 KiB
+             for i in range(8)}
+    mgr = CheckpointManager(str(tmp_path), mode="datastates",
+                            host_cache_bytes=1 << 20)   # 1 MiB cache
+    try:
+        with pytest.raises((CheckpointError, CacheFullError)):
+            mgr.save(1, state)
+    finally:
+        mgr.engine._engine.close()
+
+
+def test_datastates_blocking_much_smaller_than_sync(tmp_path):
+    """The paper's headline property: blocking time (what training sees) is
+    far smaller for DataStates than for the synchronous engine."""
+    state = big_state(16)
+    times = {}
+    for mode in ("sync", "datastates"):
+        mgr = CheckpointManager(str(tmp_path / mode), mode=mode,
+                                host_cache_bytes=64 << 20,
+                                throttle_mbps=400.0)
+        try:
+            fut = mgr.save(1, state)
+            times[mode] = fut.stats.blocking_s
+            fut.wait_persisted()
+        finally:
+            mgr.close()
+    assert times["datastates"] < times["sync"] / 2, times

@@ -1,0 +1,217 @@
+"""Per-architecture smoke tests + decode/forward consistency + recurrences."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, list_configs, smoke_variant
+from repro.data.pipeline import SyntheticTokenPipeline
+from repro.models import model as M
+from repro.models import layers, rglru, rwkv6
+from repro.serving.engine import make_decode_step, make_prefill_step
+
+ALL_ARCHS = sorted(list_configs())
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    """Reduced same-family variant: one forward + one train step on CPU,
+    asserting output shapes and finiteness (the brief's per-arch smoke)."""
+    cfg = smoke_variant(get_config(arch))
+    pipe = SyntheticTokenPipeline(cfg, 2, 32)
+    batch = {k: jnp.asarray(v) for k, v in pipe.next_batch().items()}
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    logits, aux, _ = M.forward(cfg, params, batch)
+    S_out = 32 + cfg.n_prefix_embeds
+    if cfg.n_codebooks:
+        assert logits.shape == (2, S_out, cfg.n_codebooks, cfg.vocab)
+    else:
+        assert logits.shape == (2, S_out, cfg.vocab)
+    assert np.isfinite(np.asarray(logits, dtype=np.float32)).all()
+
+    from repro.optim.adamw import AdamWConfig, apply_updates, init_opt_state
+    opt = init_opt_state(params)
+    loss, grads = jax.value_and_grad(lambda p: M.loss_fn(cfg, p, batch))(params)
+    assert np.isfinite(float(loss))
+    new_params, new_opt = apply_updates(params, opt, grads, AdamWConfig())
+    # params actually moved
+    moved = jax.tree_util.tree_reduce(
+        lambda a, l: a + float(jnp.sum(jnp.abs(l.astype(jnp.float32)))),
+        jax.tree_util.tree_map(
+            lambda a, b: a.astype(jnp.float32) - b.astype(jnp.float32),
+            new_params, params), 0.0)
+    assert moved > 0
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_prefill_decode_matches_forward(arch):
+    """logits(prefill+decode) == logits(full forward) — the KV-cache /
+    recurrent-state decode path is consistent with the parallel path."""
+    cfg = smoke_variant(get_config(arch))
+    cfg = dataclasses.replace(cfg, max_decode_len=4)
+    if cfg.n_experts:
+        # capacity dropping is batch-size-dependent (a known MoE artifact):
+        # full-forward may drop tokens the 1-token decode never drops. Use a
+        # no-drop capacity so the test isolates path equivalence.
+        cfg = dataclasses.replace(cfg, capacity_factor=float(cfg.n_experts))
+    S = 24
+    pipe = SyntheticTokenPipeline(cfg, 2, S)
+    batch = {k: jnp.asarray(v) for k, v in pipe.next_batch().items()}
+    params = M.init_params(cfg, jax.random.PRNGKey(1))
+
+    # full forward over S tokens
+    full_logits, _, _ = M.forward(cfg, params, batch)
+
+    # prefill on the first S-1 tokens, then decode token S-1
+    pre_batch = dict(batch)
+    pre_batch["tokens"] = batch["tokens"][:, :S - 1]
+    prefill = make_prefill_step(cfg)
+    decode = make_decode_step(cfg)
+    plogits, caches = prefill(params, pre_batch)
+    np.testing.assert_allclose(
+        np.asarray(plogits[:, -1], dtype=np.float32),
+        np.asarray(full_logits[:, S - 2 + cfg.n_prefix_embeds],
+                   dtype=np.float32),
+        atol=5e-2, rtol=5e-2)
+
+    last_tok = batch["tokens"][:, S - 1:S]
+    dlogits, _ = decode(params, last_tok, caches,
+                        S - 1 + cfg.n_prefix_embeds)
+    np.testing.assert_allclose(
+        np.asarray(dlogits[:, -1], dtype=np.float32),
+        np.asarray(full_logits[:, S - 1 + cfg.n_prefix_embeds],
+                   dtype=np.float32),
+        atol=5e-2, rtol=5e-2)
+
+
+def test_rwkv_chunked_matches_stepwise():
+    B, T, H, hs = 2, 64, 3, 8
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 5)
+    r = jax.random.normal(ks[0], (B, T, H, hs))
+    k = jax.random.normal(ks[1], (B, T, H, hs))
+    v = jax.random.normal(ks[2], (B, T, H, hs))
+    lw = -jnp.exp(jax.random.normal(ks[3], (B, T, H, hs)) * 0.5)
+    u = jax.random.normal(ks[4], (H, hs)) * 0.1
+    out_c, S_c = rwkv6.chunked_wkv6(r, k, v, lw, u, chunk=16)
+    out_s, S_s = rwkv6.reference_wkv6(r, k, v, lw, u)
+    np.testing.assert_allclose(np.asarray(out_c), np.asarray(out_s),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(S_c), np.asarray(S_s),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_rwkv_stepwise_state_continuity():
+    """Running T steps == running T/2 then T/2 with carried state."""
+    B, T, H, hs = 1, 32, 2, 8
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    r = jax.random.normal(ks[0], (B, T, H, hs))
+    k = jax.random.normal(ks[1], (B, T, H, hs))
+    v = jax.random.normal(ks[2], (B, T, H, hs))
+    lw = -jnp.exp(jax.random.normal(ks[3], (B, T, H, hs)) * 0.3)
+    u = jax.random.normal(ks[4], (H, hs)) * 0.1
+    out_full, S_full = rwkv6.reference_wkv6(r, k, v, lw, u)
+    h = T // 2
+    out1, S1 = rwkv6.reference_wkv6(r[:, :h], k[:, :h], v[:, :h],
+                                    lw[:, :h], u)
+    out2, S2 = rwkv6.reference_wkv6(r[:, h:], k[:, h:], v[:, h:],
+                                    lw[:, h:], u, initial_state=S1)
+    np.testing.assert_allclose(np.asarray(out_full),
+                               np.asarray(jnp.concatenate([out1, out2], 1)),
+                               atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(S_full), np.asarray(S2),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_rglru_scan_matches_loop():
+    B, T, dr = 2, 16, 8
+    cfg = smoke_variant(get_config("recurrentgemma-2b"))
+    p = rglru.init_rglru_block(
+        dataclasses.replace(cfg, d_model=dr, lru_width=dr),
+        jax.random.PRNGKey(0))
+    u = jax.random.normal(jax.random.PRNGKey(1), (B, T, dr))
+    y, h_last = rglru.rg_lru(p, u)
+    # manual stepwise recurrence
+    uf = np.asarray(u, dtype=np.float32)
+    r = np.asarray(jax.nn.sigmoid(u.astype(jnp.float32)
+                                  @ p["w_a"].astype(jnp.float32) + p["b_a"]))
+    i = np.asarray(jax.nn.sigmoid(u.astype(jnp.float32)
+                                  @ p["w_x"].astype(jnp.float32) + p["b_x"]))
+    log_a = -rglru.C_FACTOR * np.asarray(jax.nn.softplus(p["lam"])) * r
+    a = np.exp(log_a)
+    b = np.sqrt(np.clip(1 - np.exp(2 * log_a), 1e-12, None)) * (i * uf)
+    h = np.zeros((B, dr), np.float32)
+    outs = []
+    for t in range(T):
+        h = a[:, t] * h + b[:, t]
+        outs.append(h.copy())
+    want = np.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(y, dtype=np.float32), want,
+                               atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(h_last), want[:, -1],
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_rglru_decode_continuity():
+    cfg = smoke_variant(get_config("recurrentgemma-2b"))
+    d = cfg.d_model
+    p = rglru.init_rglru_block(cfg, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 12, d), jnp.float32)
+    full, _ = rglru.apply_rglru_block(cfg, p, x)
+    out1, st = rglru.apply_rglru_block(cfg, p, x[:, :8])
+    outs = [out1]
+    for t in range(8, 12):
+        o, st = rglru.apply_rglru_block(cfg, p, x[:, t:t + 1], state=st)
+        outs.append(o)
+    got = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(got, dtype=np.float32),
+                               np.asarray(full, dtype=np.float32),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_moe_capacity_and_balance():
+    from repro.models import moe as moe_mod
+    cfg = smoke_variant(get_config("dbrx-132b"))
+    p = moe_mod.init_moe(cfg, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model),
+                          jnp.bfloat16)
+    out, aux = moe_mod.apply_moe(cfg, p, x)
+    assert out.shape == x.shape
+    assert np.isfinite(np.asarray(out, dtype=np.float32)).all()
+    assert float(aux) > 0  # load-balance loss active
+
+
+def test_attention_mask_kinds():
+    S = 32
+    full = np.asarray(layers.make_mask(S, "full"))
+    win = np.asarray(layers.make_mask(S, "window", window=8))
+    chk = np.asarray(layers.make_mask(S, "chunked", chunk=8))
+    pre = np.asarray(layers.make_mask(S, "full", n_prefix=5))
+    assert full[10, :11].all() and not full[10, 11:].any()
+    assert win[20, 13:21].all() and not win[20, :13].any()
+    assert chk[20, 16:21].all() and not chk[20, :16].any()
+    assert pre[2, 4] and pre[0, 4] and not pre[2, 6]
+
+
+def test_param_count_analytic_close_to_actual():
+    for arch in ("llama3.2-1b", "rwkv6-7b", "dbrx-132b"):
+        cfg = smoke_variant(get_config(arch))
+        params = M.init_params(cfg, jax.random.PRNGKey(0))
+        actual = sum(int(np.prod(l.shape))
+                     for l in jax.tree_util.tree_leaves(params))
+        analytic = M.count_params_analytic(cfg)
+        assert abs(actual - analytic) / actual < 0.05, \
+            f"{arch}: actual={actual} analytic={analytic}"
+
+
+def test_full_config_param_counts_match_citations():
+    """Assigned configs land near their nameplate parameter counts."""
+    expect = {"dbrx-132b": 132e9, "rwkv6-7b": 7.5e9, "starcoder2-7b": 7.2e9,
+              "llama3.2-1b": 1.24e9, "command-r-35b": 35e9,
+              "gemma3-27b": 27e9, "llama4-maverick-400b-a17b": 400e9}
+    for arch, want in expect.items():
+        n = get_config(arch).n_params()
+        assert 0.7 * want < n < 1.35 * want, f"{arch}: {n/1e9:.1f}B vs {want/1e9:.0f}B"
