@@ -23,12 +23,12 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.core import CheckpointManager
+from repro.launch.mesh import make_mesh
 
 results = []
 n_total = 8 * (1 << 20) // 4          # 8 MiB of fp32 "optimizer state"
 for dp in (1, 2, 4, 8):
-    mesh = jax.make_mesh((dp, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((dp, 1), ("data", "model"))
     # ZeRO-1: optimizer state sharded over data; params replicated
     opt = jax.device_put(jnp.arange(n_total, dtype=jnp.float32),
                          NamedSharding(mesh, P("data")))

@@ -14,7 +14,7 @@ import numpy as np
 
 from repro.configs import get_config, smoke_variant
 from repro.core import CheckpointManager
-from repro.serving.engine import greedy_generate
+from repro.serving.engine import greedy_generate, load_params_for_serving
 from repro.training.loop import Trainer
 
 
@@ -25,12 +25,19 @@ def main() -> int:
         tr = Trainer(cfg, batch=4, seq_len=64, manager=mgr)
         tr.run(4, ckpt_interval=4)
         mgr.wait_for_persist()
+        mgr.close()
         print(f"trained {tr.step} steps, checkpoint persisted")
 
         # --- restore the *model only* into a serving process --------------
-        template = {"model": tr.params}  # serving needs no optimizer state
-        params = mgr.restore(template)["model"]
-        mgr.close()
+        # load_params_for_serving plans the shard intersections up front and
+        # reads just the parameter byte ranges (no optimizer state) through
+        # the parallel RestoreEngine.
+        params, rstats = load_params_for_serving(d, tr.params)
+        print(f"restored params: {rstats.bytes_read / 2**20:.1f} MiB read "
+              f"in {rstats.n_ranges} ranges over {rstats.threads} threads "
+              f"(index {rstats.index_s * 1e3:.1f} ms, read "
+              f"{rstats.read_s * 1e3:.1f} ms, assemble "
+              f"{rstats.assemble_s * 1e3:.1f} ms)")
 
         rng = np.random.default_rng(0)
         batch = 4

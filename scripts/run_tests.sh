@@ -1,0 +1,6 @@
+#!/usr/bin/env bash
+# Tier-1 test suite (the command ROADMAP.md pins). Usage:
+#   scripts/run_tests.sh [extra pytest args...]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@"

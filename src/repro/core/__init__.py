@@ -1,6 +1,8 @@
 """DataStates-LLM core: composable state providers + lazy async checkpointing."""
 
-from .checkpoint import CheckpointManager, ENGINES, step_dir
+from .checkpoint import CheckpointManager, ENGINES, latest_step, step_dir
+from .restore import (RestoreEngine, RestoreError, RestoreIndex,
+                      RestoreStats)
 from .engine import (CheckpointError, CheckpointFuture, CheckpointStats,
                      DataMovementEngine, FilePlan)
 from .host_cache import CacheFullError, HostCache, Reservation
@@ -16,7 +18,8 @@ from .distributed import ShardRecord, group_by_rank, normalize_index, plan_shard
 from .consolidate import consolidate_step_dir
 
 __all__ = [
-    "CheckpointManager", "ENGINES", "step_dir",
+    "CheckpointManager", "ENGINES", "latest_step", "step_dir",
+    "RestoreEngine", "RestoreError", "RestoreIndex", "RestoreStats",
     "CheckpointError", "CheckpointFuture", "CheckpointStats",
     "DataMovementEngine", "FilePlan",
     "CacheFullError", "HostCache", "Reservation",

@@ -231,11 +231,11 @@ class SnapshotThenFlushEngine(BaseCheckpointEngine):
             mpath = os.path.join(directory, f"manifest_rank{rank:05d}.pkl")
             payload = pickle.dumps(manifest)
             jobs.append((mpath, payload, future))
-            stats.n_files += 1
         if min(by_rank, default=0) in snapshots or not by_rank:
             opath = os.path.join(directory, "objects.pkl")
             jobs.append((opath, obj_payload, future))
-        stats.n_files += len(jobs)
+        # one job == one file (chunk files + manifests + objects.pkl)
+        stats.n_files = len(jobs)
         with lock:
             pending["n"] = len(jobs)
         if not jobs:
@@ -328,10 +328,9 @@ def load_snapshot_rank(directory: str, rank: int) -> Dict[str, np.ndarray]:
         manifest = pickle.load(f)
     out = {}
     for t in manifest["tensors"]:
-        buf = np.empty(int(np.prod(t["shape"])) if t["shape"] else 1,
-                       dtype=np.uint8)
-        nbytes = int(np.prod(t["shape"])) * np.dtype(t["dtype"]).itemsize \
-            if t["shape"] else np.dtype(t["dtype"]).itemsize
+        itemsize = np.dtype(t["dtype"]).itemsize
+        nbytes = int(np.prod(t["shape"], dtype=np.int64)) * itemsize \
+            if t["shape"] else itemsize
         buf = np.empty(nbytes, dtype=np.uint8)
         for cpath, lo, hi in t["chunks"]:
             with open(cpath, "rb") as f:

@@ -24,18 +24,14 @@ import glob
 import os
 import re
 import time
-from typing import Any, Dict, List, Optional, Tuple
-
-import jax
-import numpy as np
+from typing import Any, List, Optional
 
 from .baselines import (BaseCheckpointEngine, DataStatesEngine,
                         DataStatesOldEngine, SnapshotThenFlushEngine,
                         SyncSerializedEngine)
-from .distributed import (ShardRecord, group_by_rank, normalize_index,
-                          plan_shards, _path_str)
+from .distributed import group_by_rank, plan_shards
 from .engine import CheckpointFuture
-from .layout import FileReader
+from .restore import RestoreEngine, RestoreStats
 
 ENGINES = {
     "datastates": DataStatesEngine,          # this paper
@@ -49,15 +45,14 @@ def step_dir(directory: str, step: int) -> str:
     return os.path.join(directory, f"global_step{step}")
 
 
-class _StoredShard:
-    """One stored shard of a logical array, format-agnostic: its region in
-    the global array plus a thunk that materializes the shard's data."""
-
-    __slots__ = ("index", "read")
-
-    def __init__(self, index, read):
-        self.index = tuple(tuple(p) for p in index)
-        self.read = read
+def latest_step(directory: str) -> Optional[int]:
+    """Highest step with a ``global_step*`` directory, or None."""
+    steps = []
+    for d in glob.glob(os.path.join(directory, "global_step*")):
+        m = re.search(r"global_step(\d+)$", d)
+        if m:
+            steps.append(int(m.group(1)))
+    return max(steps) if steps else None
 
 
 class CheckpointManager:
@@ -65,7 +60,8 @@ class CheckpointManager:
                  host_cache_bytes: int = 1 << 30,
                  flush_threads: int = 4,
                  chunk_bytes: int = 4 << 20,
-                 throttle_mbps: Optional[float] = None):
+                 throttle_mbps: Optional[float] = None,
+                 restore_threads: Optional[int] = None):
         if mode not in ENGINES:
             raise ValueError(f"unknown engine mode {mode!r}; "
                              f"choose from {sorted(ENGINES)}")
@@ -77,6 +73,8 @@ class CheckpointManager:
             flush_threads=flush_threads,
             chunk_bytes=chunk_bytes,
             throttle_mbps=throttle_mbps)
+        self.restore_engine = RestoreEngine(threads=restore_threads)
+        self.last_restore_stats: Optional[RestoreStats] = None
         self._inflight: List[CheckpointFuture] = []
 
     # ------------------------------------------------------------------ save
@@ -120,153 +118,39 @@ class CheckpointManager:
 
     # ------------------------------------------------------------- restore
     def latest_step(self) -> Optional[int]:
-        steps = []
-        for d in glob.glob(os.path.join(self.directory, "global_step*")):
-            m = re.search(r"global_step(\d+)$", d)
-            if m:
-                steps.append(int(m.group(1)))
-        return max(steps) if steps else None
+        return latest_step(self.directory)
 
-    def restore(self, template: Any, step: Optional[int] = None) -> Any:
+    def restore(self, template: Any, step: Optional[int] = None,
+                engine: Optional[RestoreEngine] = None) -> Any:
         """Rebuild ``template``-shaped state from a stored checkpoint.
 
         ``template`` leaves may be concrete arrays or ``ShapeDtypeStruct``s
         carrying a ``.sharding``; array leaves are reassembled shard-by-shard
-        (elastic — target sharding need not match the stored one)."""
+        (elastic — target sharding need not match the stored one, so a run
+        can resume onto a different mesh shape).
+
+        The heavy lifting is done by the parallel
+        :class:`~repro.core.restore.RestoreEngine`: the step directory is
+        indexed once, the shard↔target-region intersections are planned up
+        front, and only the intersecting byte ranges are read — as ranged
+        positional reads fanned out over a thread pool — directly into
+        preallocated destination buffers. Restore is format-universal
+        (native ``.dsllm``, snapshot chunk manifests, sync pickle graphs),
+        so a run can also switch engines between save and resume.
+
+        Pass ``engine`` to override the manager's default
+        (e.g. ``RestoreEngine(threads=1)`` for a serial ablation, or one
+        with a read throttle). Per-restore timings and I/O counts are left
+        in :attr:`last_restore_stats` (a
+        :class:`~repro.core.restore.RestoreStats`)."""
         if step is None:
             step = self.latest_step()
             if step is None:
                 raise FileNotFoundError(f"no checkpoints in {self.directory}")
         sdir = step_dir(self.directory, step)
-        tensor_index, object_index = self._index_step_dir(sdir)
-
-        leaves, treedef = jax.tree_util.tree_flatten_with_path(template)
-        out = []
-        for path, leaf in leaves:
-            pstr = f"state/{_path_str(path)}"
-            if isinstance(leaf, (jax.Array, jax.ShapeDtypeStruct)) or \
-                    isinstance(leaf, np.ndarray):
-                if pstr not in tensor_index:
-                    raise KeyError(f"tensor {pstr!r} not found in checkpoint "
-                                   f"(have {sorted(tensor_index)[:5]}...)")
-                out.append(self._assemble(leaf, tensor_index[pstr]))
-            else:
-                if pstr in object_index:
-                    out.append(object_index[pstr]())
-                else:
-                    out.append(leaf)  # keep template value (e.g. static field)
-        return jax.tree_util.tree_unflatten(treedef, out)
-
-    # Restore is format-universal: it reads back checkpoints written by any
-    # engine (native .dsllm, TorchSnapshot-style chunk manifests, or the
-    # DeepSpeed-default pickled object graph), so a run can switch engines
-    # between save and resume.
-    @staticmethod
-    def _index_step_dir(sdir: str):
-        """Build {leaf_path -> [_StoredShard]} and {obj_path -> thunk} from
-        whatever checkpoint format lives in ``sdir``."""
-        import pickle
-
-        tensor_index: Dict[str, List[_StoredShard]] = {}
-        object_index: Dict[str, Any] = {}
-
-        dsllm = sorted(glob.glob(os.path.join(sdir, "*.dsllm")))
-        if dsllm:
-            for p in dsllm:
-                rd = FileReader(p)
-                for name, entry in rd.tensors.items():
-                    base = name.split("@[", 1)[0]
-                    tensor_index.setdefault(base, []).append(_StoredShard(
-                        entry.index,
-                        (lambda r=rd, n=entry.name: r.read_tensor(n))))
-                for oname in rd.objects:
-                    object_index[oname] = \
-                        (lambda r=rd, n=oname: r.read_object(n))
-            return tensor_index, object_index
-
-        manifests = sorted(glob.glob(os.path.join(sdir, "manifest_rank*.pkl")))
-        snapshot_objects = os.path.join(sdir, "objects.pkl")
-        if manifests or os.path.exists(snapshot_objects):
-            # TorchSnapshot-style chunk files
-            from .baselines import load_snapshot_rank
-            for mpath in manifests:
-                with open(mpath, "rb") as f:
-                    manifest = pickle.load(f)
-                rank = int(re.search(r"manifest_rank(\d+)", mpath).group(1))
-                for t in manifest["tensors"]:
-                    base = t["name"].split("@[", 1)[0]
-
-                    def read(d=os.path.dirname(mpath), r=rank, n=t["name"]):
-                        return load_snapshot_rank(d, r)[n]
-                    tensor_index.setdefault(base, []).append(
-                        _StoredShard(tuple(t["index"]), read))
-            opath = os.path.join(sdir, "objects.pkl")
-            if os.path.exists(opath):
-                with open(opath, "rb") as f:
-                    objects = pickle.load(f)
-                for oname, val in objects.items():
-                    object_index[oname] = (lambda v=val: v)
-            return tensor_index, object_index
-
-        pkls = sorted(glob.glob(os.path.join(sdir, "*.pkl")))
-        if pkls:  # sync (torch.save-style) pickled object graph per rank
-            from .baselines import load_sync_rank
-            for p in pkls:
-                graph = load_sync_rank(p)
-                for name, rec in graph.items():
-                    if name == "__objects__":
-                        for oname, val in rec.items():
-                            object_index[oname] = (lambda v=val: v)
-                        continue
-                    base = name.split("@[", 1)[0]
-                    tensor_index.setdefault(base, []).append(_StoredShard(
-                        tuple(rec["index"]), (lambda r=rec: r["data"])))
-            return tensor_index, object_index
-
-        raise FileNotFoundError(f"no checkpoint files in {sdir}")
-
-    @staticmethod
-    def _assemble(leaf, stored: List["_StoredShard"]):
-        """Reassemble one logical array from stored shard entries."""
-        shape = tuple(leaf.shape)
-        dtype = leaf.dtype
-
-        def read_region(region: Tuple[Tuple[int, int], ...]) -> np.ndarray:
-            tgt_shape = tuple(b - a for a, b in region)
-            buf = np.empty(tgt_shape, dtype=dtype)
-            filled = 0
-            for entry in stored:
-                s_idx = entry.index
-                # intersection of stored shard with requested region
-                inter = tuple((max(a, c), min(b, d))
-                              for (a, b), (c, d) in zip(region, s_idx))
-                if any(lo >= hi for lo, hi in inter):
-                    continue
-                src = entry.read()
-                src_sl = tuple(slice(lo - c, hi - c)
-                               for (lo, hi), (c, _d) in zip(inter, s_idx))
-                dst_sl = tuple(slice(lo - a, hi - a)
-                               for (lo, hi), (a, _b) in zip(inter, region))
-                buf[dst_sl] = src[src_sl]
-                filled += int(np.prod([hi - lo for lo, hi in inter]))
-            if filled < int(np.prod(tgt_shape)):
-                raise ValueError(
-                    f"checkpoint does not cover requested region {region}")
-            return buf
-
-        if isinstance(leaf, np.ndarray):
-            return read_region(tuple((0, d) for d in shape))
-
-        sharding = getattr(leaf, "sharding", None)
-        if sharding is None:
-            full = read_region(tuple((0, d) for d in shape))
-            return jax.numpy.asarray(full)
-
-        def cb(index):
-            region = normalize_index(index, shape)
-            return read_region(region)
-
-        return jax.make_array_from_callback(shape, sharding, cb)
+        tree, stats = (engine or self.restore_engine).restore(sdir, template)
+        self.last_restore_stats = stats
+        return tree
 
     # -------------------------------------------------------------- misc
     def drain(self) -> None:

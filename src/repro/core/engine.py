@@ -152,6 +152,7 @@ class _FileState:
         self.lock = threading.Lock()
         self.pending = 0
         self.producer_done = False
+        self.failed = False  # producer died: discard instead of finalize
         # partial object payload assembly (chunked log appends)
         self.object_parts: Dict[str, List[bytes]] = {}
         # release tracking for tensor providers
@@ -340,40 +341,87 @@ class DataMovementEngine:
     def _produce_file(self, plan: FilePlan, file_done, future) -> None:
         layout = plan.composite.plan_layout()
         writer = FileWriter(plan.path, layout)
-        for k, v in plan.meta.items():
-            writer.set_meta(k, v)
-        state = _FileState(plan, writer, on_done=lambda: self._finalize_file(
-            writer, file_done, future), future=future)
-        providers = {p.name: p for p in plan.composite.tensor_providers}
-        for chunk in plan.composite.chunks():
-            if chunk.kind == "object":
-                # assemble chunked payload; single contiguous log append
-                parts = state.object_parts.setdefault(chunk.name, [])
-                parts.append(bytes(chunk.data))
-                if chunk.last:
-                    payload = b"".join(state.object_parts.pop(chunk.name))
-                    future.stats.bytes_objects += len(payload)
+        state = _FileState(plan, writer,
+                           on_done=lambda: self._finalize_file(
+                               state, file_done, future), future=future)
+        try:
+            for k, v in plan.meta.items():
+                writer.set_meta(k, v)
+            providers = {p.name: p for p in plan.composite.tensor_providers}
+            for chunk in plan.composite.chunks():
+                if chunk.kind == "object":
+                    # assemble chunked payload; single contiguous log append
+                    parts = state.object_parts.setdefault(chunk.name, [])
+                    parts.append(bytes(chunk.data))
+                    if chunk.last:
+                        payload = b"".join(state.object_parts.pop(chunk.name))
+                        future.stats.bytes_objects += len(payload)
+                        state.op_started()
+                        self._flush_q.put(_WriteOp(
+                            writer,
+                            Chunk(name=chunk.name, kind="object",
+                                  data=payload, codec=chunk.codec, last=True),
+                            state, self.throttle_mbps))
+                else:
                     state.op_started()
-                    self._flush_q.put(_WriteOp(
-                        writer,
-                        Chunk(name=chunk.name, kind="object", data=payload,
-                              codec=chunk.codec, last=True),
-                        state, self.throttle_mbps))
-            else:
-                state.op_started()
-                on_written = None
-                if chunk.last:
-                    p = providers.get(chunk.name)
-                    if p is not None and p.device_resident:
-                        on_written = p.release  # evict from pinned cache
-                self._flush_q.put(_WriteOp(writer, chunk, state,
-                                           self.throttle_mbps, on_written))
+                    on_written = None
+                    if chunk.last:
+                        p = providers.get(chunk.name)
+                        if p is not None and p.device_resident:
+                            on_written = p.release  # evict from pinned cache
+                    self._flush_q.put(_WriteOp(writer, chunk, state,
+                                               self.throttle_mbps,
+                                               on_written))
+        except BaseException:
+            # Producer failed mid-stream: the file has no footer and never
+            # will. Mark the file failed and let the per-file accounting
+            # drain normally — when the last queued op finishes,
+            # _finalize_file aborts/unlinks the partial file. Closing the
+            # fd right here would race in-flight pwrites: the kernel can
+            # recycle the fd number into another open file and a stale
+            # positional write would corrupt it.
+            state.failed = True
+            state.producer_finished()
+            raise
         state.producer_finished()
 
-    def _finalize_file(self, writer: FileWriter, file_done, future) -> None:
+    @staticmethod
+    def _discard_partial(writer: FileWriter) -> None:
+        """Abort a writer and remove its footer-less partial file."""
+        writer.abort()
+        try:
+            os.unlink(writer.path)
+        except OSError:
+            pass
+
+    @staticmethod
+    def _release_providers(state: "_FileState") -> None:
+        """Free the pinned-cache reservations of a failed file's tensors.
+
+        On the happy path each provider releases via its last chunk's
+        ``on_written``; an error path skips those callbacks, and a leaked
+        reservation would make the next save block forever inside the
+        cache allocator. ``release`` is idempotent, so double-freeing the
+        already-flushed providers is safe."""
+        for p in state.plan.composite.tensor_providers:
+            try:
+                p.release()
+            except BaseException:  # noqa: BLE001
+                pass
+
+    def _finalize_file(self, state: "_FileState", file_done, future) -> None:
+        writer = state.writer
+        if state.failed or future._error is not None:
+            # The producer died or some op already failed the request:
+            # never write a footer over a partial file.
+            self._discard_partial(writer)
+            self._release_providers(state)
+            return
         try:
             writer.finalize()
         except BaseException as exc:  # noqa: BLE001
+            self._discard_partial(writer)
+            self._release_providers(state)
             future._set_error(exc)
             return
         file_done()
@@ -409,5 +457,13 @@ class DataMovementEngine:
                 op.file_state.op_finished()
             except BaseException as exc:  # noqa: BLE001
                 op.file_state.future._set_error(exc)
+                # keep the per-file op accounting moving so the last op
+                # reaches _finalize_file, which (seeing the error) aborts
+                # the writer and removes the partial file instead of
+                # leaking the fd behind a footer-less file.
+                try:
+                    op.file_state.op_finished()
+                except BaseException:  # noqa: BLE001
+                    pass
             finally:
                 self._flush_q.task_done()

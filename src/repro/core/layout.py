@@ -161,9 +161,12 @@ class FileWriter:
         self._fd = -1
 
     def abort(self) -> None:
-        if self._fd >= 0:
-            os.close(self._fd)
-            self._fd = -1
+        """Close the fd without writing a footer. Idempotent and safe to
+        call from concurrent error paths."""
+        with self._append_lock:
+            fd, self._fd = self._fd, -1
+        if fd >= 0:
+            os.close(fd)
 
 
 class FileReader:

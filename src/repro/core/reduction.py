@@ -25,7 +25,12 @@ from typing import Any, Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
-import zstandard
+
+try:  # optional: fall back to stdlib zlib when zstandard is not installed
+    import zstandard
+except ImportError:  # pragma: no cover - exercised on minimal installs
+    zstandard = None
+import zlib
 
 from repro.kernels import ops as kops
 
@@ -43,11 +48,22 @@ class EncodedTensor:
 
 
 def _compress(b: bytes, level: int = 3) -> bytes:
-    return zstandard.ZstdCompressor(level=level).compress(b)
+    if zstandard is not None:
+        return zstandard.ZstdCompressor(level=level).compress(b)
+    return zlib.compress(b, level)
+
+
+_ZSTD_MAGIC = b"\x28\xb5\x2f\xfd"
 
 
 def _decompress(b: bytes) -> bytes:
-    return zstandard.ZstdDecompressor().decompress(b)
+    if b[:4] == _ZSTD_MAGIC:  # sniff the frame so codecs mix across installs
+        if zstandard is None:
+            raise RuntimeError(
+                "payload was compressed with zstandard, which is not "
+                "installed; `pip install zstandard` to read it")
+        return zstandard.ZstdDecompressor().decompress(b)
+    return zlib.decompress(b)
 
 
 def encode_tensor(arr: jax.Array, *, prev: Optional[np.ndarray] = None,

@@ -30,7 +30,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import INPUT_SHAPES, get_config
 from repro.launch import analysis
-from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import make_mesh, make_production_mesh
 from repro.models import model as M
 from repro.optim.adamw import AdamWConfig, init_opt_state
 from repro.serving.engine import cache_template, make_decode_step, \
@@ -141,8 +141,7 @@ def run_dryrun(arch: str, shape_name: str, *, multi_pod: bool = False,
     if debug_mesh:  # e.g. "4,4" or "2,4,4" — small-scale debugging only
         dims = tuple(int(x) for x in debug_mesh.split(","))
         axes = ("pod", "data", "model")[-len(dims):]
-        mesh = jax.make_mesh(dims, axes,
-                             axis_types=(jax.sharding.AxisType.Auto,) * len(dims))
+        mesh = make_mesh(dims, axes)
     else:
         mesh = make_production_mesh(multi_pod=multi_pod)
     n_dev = int(np.prod(mesh.devices.shape))

@@ -8,18 +8,29 @@ import; everything else sees the real device count.
 
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional, Sequence, Tuple
 
 import jax
+
+
+def make_mesh(dims: Sequence[int], axes: Sequence[str]):
+    """Version-compat ``jax.make_mesh``: only pass ``axis_types`` where it
+    exists (``jax.sharding.AxisType`` appeared after 0.4.x; on older JAX
+    the raw keyword raises ``AttributeError`` at call time)."""
+    dims = tuple(dims)
+    axes = tuple(axes)
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(dims, axes,
+                             axis_types=(axis_type.Auto,) * len(axes))
+    return jax.make_mesh(dims, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16×16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(data: int = 1, model: int = 1):
@@ -27,9 +38,7 @@ def make_host_mesh(data: int = 1, model: int = 1):
     n = len(jax.devices())
     data = min(data, n)
     model = min(model, n // data)
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((data, model), ("data", "model"))
 
 
 # TPU v5e hardware constants used by the roofline analysis.

@@ -19,6 +19,37 @@ from repro.models import model as M
 from repro.models.model import ATTN_TYPES, attn_kind
 
 
+def load_params_for_serving(directory: str, params_template: Any,
+                            step: Optional[int] = None,
+                            threads: Optional[int] = None,
+                            throttle_mbps: Optional[float] = None):
+    """Restore *model parameters only* straight into a serving process.
+
+    Serving needs no optimizer state, so this restores the ``model``
+    sub-tree alone through the parallel
+    :class:`~repro.core.restore.RestoreEngine` — the engine's up-front
+    intersection planning means only the parameter byte ranges are read
+    from the (much larger) training checkpoint, whatever engine format
+    wrote it. ``params_template`` leaves may carry a serving-mesh
+    ``.sharding`` that differs from the training layout (elastic restore).
+
+    Returns ``(params, stats)`` where ``stats`` is a
+    :class:`~repro.core.restore.RestoreStats` (check ``bytes_read`` to see
+    the sub-tree effect).
+    """
+    from repro.core.checkpoint import latest_step, step_dir
+    from repro.core.restore import RestoreEngine
+
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {directory}")
+    engine = RestoreEngine(threads=threads, throttle_mbps=throttle_mbps)
+    tree, stats = engine.restore(step_dir(directory, step),
+                                 {"model": params_template})
+    return tree["model"], stats
+
+
 def make_prefill_step(cfg) -> Callable:
     def prefill_step(params, batch):
         logits, _aux, caches = M.forward(cfg, params, batch,

@@ -78,6 +78,7 @@ class Trainer:
         self.opt_state = init_opt_state(self.params)
         self.step = 0
         self.records: List[IterationRecord] = []
+        self.last_resume_stats = None  # RestoreStats from the last resume()
 
     # -- checkpoint state composition (the paper's heterogeneous pytree) ----
     def state(self) -> Dict[str, Any]:
@@ -94,12 +95,21 @@ class Trainer:
         }
 
     def resume(self, step: Optional[int] = None) -> int:
+        """Resume from a checkpoint via the parallel restore engine.
+
+        The manager's :class:`~repro.core.restore.RestoreEngine` indexes
+        the step directory once, plans shard↔target intersections, and fans
+        ranged reads out over a thread pool; per-phase timings land in
+        ``self.last_resume_stats`` (index/read/assemble seconds plus the
+        bytes actually read — the resume-cost breakdown of arXiv
+        2512.24511)."""
         assert self.manager is not None
         restored = self.manager.restore(self.state(), step=step)
         self.params = restored["model"]
         self.opt_state = restored["optimizer"]
         self.step = restored["meta"]["step"]
         self.pipeline.restore(restored["meta"]["data_state"])
+        self.last_resume_stats = self.manager.last_restore_stats
         return self.step
 
     def run(self, n_steps: int, ckpt_interval: int = 0) -> List[IterationRecord]:

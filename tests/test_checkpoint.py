@@ -91,6 +91,64 @@ def test_snapshot_engine_chunk_files(tmp_path):
     np.testing.assert_array_equal(w1[0], np.asarray(state["model"]["w1"]))
 
 
+def test_snapshot_stats_count_files_once(tmp_path):
+    """n_files must equal the number of files actually written (the seed
+    double-counted: +1 per manifest, then +len(jobs) again)."""
+    state = make_state()
+    with CheckpointManager(str(tmp_path), mode="snapshot") as mgr:
+        fut = mgr.save(2, state, blocking=True)
+    n_on_disk = len(os.listdir(str(tmp_path / "global_step2")))
+    assert fut.stats.n_files == n_on_disk
+
+
+def test_sync_stats_count_files_once(tmp_path):
+    state = make_state()
+    with CheckpointManager(str(tmp_path), mode="sync") as mgr:
+        fut = mgr.save(2, state, blocking=True)
+    assert fut.stats.n_files == len(os.listdir(str(tmp_path / "global_step2")))
+
+
+def test_snapshot_loader_buffer_sized_in_bytes(tmp_path):
+    """load_snapshot_rank must size its buffer as shape*itemsize (the seed
+    allocated prod(shape) uint8s first — wrong for any itemsize != 1)."""
+    state = {"model": {"w": np.arange(1000, dtype=np.float64)},
+             "meta": {"step": 1}}
+    with CheckpointManager(str(tmp_path), mode="snapshot") as mgr:
+        mgr.save(1, state, blocking=True)
+    tensors = load_snapshot_rank(str(tmp_path / "global_step1"), 0)
+    [w] = [v for k, v in tensors.items() if "model/w" in k]
+    assert w.dtype == np.float64 and w.nbytes == 8000
+    np.testing.assert_array_equal(w, np.arange(1000, dtype=np.float64))
+
+
+def test_producer_error_aborts_writer_and_removes_partial_file(tmp_path):
+    """A provider failure mid-stream must fail the future AND clean up the
+    footer-less partial file instead of leaking the fd behind it."""
+    from repro.core import (CheckpointError, CheckpointFuture,
+                            DataMovementEngine, FilePlan, FileLayout)
+
+    class ExplodingComposite:
+        tensor_providers = ()
+
+        def plan_layout(self):
+            return FileLayout.plan([])
+
+        def chunks(self):
+            raise RuntimeError("provider exploded mid-stream")
+            yield  # pragma: no cover - makes this a generator
+
+    path = str(tmp_path / "boom.dsllm")
+    eng = DataMovementEngine(host_cache_bytes=1 << 20, flush_threads=1)
+    try:
+        fut = CheckpointFuture(0, str(tmp_path))
+        eng.submit([FilePlan(path, ExplodingComposite())], [], fut)
+        with pytest.raises(CheckpointError):
+            fut.wait_persisted(timeout=30)
+        assert not os.path.exists(path), "partial file left behind"
+    finally:
+        eng.close()
+
+
 def test_blocking_save_equivalent(tmp_path):
     state = make_state()
     with CheckpointManager(str(tmp_path)) as mgr:

@@ -34,9 +34,9 @@ import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.core import CheckpointManager, step_dir
 from repro.core.consolidate import consolidate_step_dir, file_count
+from repro.launch.mesh import make_mesh
 
-mesh = jax.make_mesh((8,), ("data",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((8,), ("data",))
 w = jax.device_put(jnp.arange(8 * 16, dtype=jnp.float32).reshape(8, 16),
                    NamedSharding(mesh, P("data", None)))
 state = {"w": w, "meta": {"step": 2, "note": "consolidate me"}}

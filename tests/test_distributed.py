@@ -11,9 +11,9 @@ def test_sharded_save_dedup_and_elastic_restore():
 import jax, jax.numpy as jnp, numpy as np, tempfile, os, glob
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.core import CheckpointManager, FileReader
+from repro.launch.mesh import make_mesh
 
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_mesh((4, 2), ("data", "model"))
 w = jax.device_put(jnp.arange(64 * 32, dtype=jnp.float32).reshape(64, 32),
                    NamedSharding(mesh, P("data", "model")))
 zero1 = jax.device_put(jnp.ones((64, 32)), NamedSharding(mesh, P("data", None)))
@@ -40,8 +40,7 @@ out = mgr.restore(state, step=3)
 np.testing.assert_array_equal(np.asarray(out["params"]["w"]), np.asarray(w))
 
 # elastic restore to a different mesh/sharding
-mesh2 = jax.make_mesh((2, 4), ("data", "model"),
-                      axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh2 = make_mesh((2, 4), ("data", "model"))
 tpl = {"params": {"w": jax.ShapeDtypeStruct((64, 32), jnp.float32,
         sharding=NamedSharding(mesh2, P("model", "data")))},
        "opt": {"m": jax.ShapeDtypeStruct((64, 32), jnp.float32,
@@ -71,12 +70,12 @@ from repro.sharding import context as shctx
 from repro.sharding.partition import param_pspecs, opt_pspecs, shardings_for
 from repro.training.loop import make_train_step
 from repro.data.pipeline import SyntheticTokenPipeline
+from repro.launch.mesh import make_mesh
 import dataclasses
 
 cfg = smoke_variant(get_config("llama3.2-1b"))
 cfg = dataclasses.replace(cfg, d_model=128, d_ff=256, vocab=256)
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_mesh((2, 4), ("data", "model"))
 with shctx.activate(mesh):
     params = M.init_params(cfg, jax.random.PRNGKey(0))
     pshard = shardings_for(param_pspecs(cfg, params, mesh), mesh)
@@ -111,9 +110,9 @@ def test_zero1_optimizer_sharding_reduces_per_rank_bytes():
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.core.distributed import plan_shards, group_by_rank
+from repro.launch.mesh import make_mesh
 
-mesh = jax.make_mesh((8, 1), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_mesh((8, 1), ("data", "model"))
 opt = jax.device_put(jnp.zeros((1024, 64), jnp.float32),
                      NamedSharding(mesh, P("data", None)))
 records, _ = plan_shards({"m": opt}, group="state")

@@ -4,7 +4,7 @@ import os
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from conftest import given, settings, st  # hypothesis, optional
 
 from repro.core.layout import (ALIGN, FileLayout, FileReader, FileWriter,
                                align_up)

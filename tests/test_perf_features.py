@@ -16,9 +16,9 @@ from repro.configs import get_config, smoke_variant
 from repro.models import model as M
 from repro.sharding import context as shctx
 from repro.sharding.partition import batch_pspecs, param_pspecs, shardings_for
+from repro.launch.mesh import make_mesh
 
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_mesh((4, 2), ("data", "model"))
 """
 
 

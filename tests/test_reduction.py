@@ -38,11 +38,10 @@ def test_quantized_encode_bounded_error():
     enc, _ = encode_tensor(x, quant="int8")
     assert enc.quant == "int8"
     out = decode_tensor(enc).astype(np.float32)
-    # reconstruct with scales
-    import zstandard
-    scales = np.frombuffer(
-        zstandard.ZstdDecompressor().decompress(enc.scales),
-        np.float32).reshape(256, 1)
+    # reconstruct with scales (same codec the encoder used — zstd or zlib)
+    from repro.core.reduction import _decompress
+    scales = np.frombuffer(_decompress(enc.scales),
+                           np.float32).reshape(256, 1)
     err = np.abs(out * scales - np.asarray(x))
     assert (err <= scales + 1e-6).all()
 

@@ -3,7 +3,7 @@ engine format (the system invariant behind 'globally consistent state')."""
 
 import numpy as np
 import pytest
-from hypothesis import HealthCheck, given, settings, strategies as st
+from conftest import HealthCheck, given, settings, st  # hypothesis, optional
 
 from repro.core import ENGINES, CheckpointManager
 
