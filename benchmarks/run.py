@@ -14,7 +14,7 @@ import time
 
 from . import (fig04_serialization, fig07_throughput, fig08_iteration,
                fig09_end_to_end, fig12_dp_scaling, fig13_frequency,
-               fig14_flush, fig15_timeline, fig_restore,
+               fig14_flush, fig15_timeline, fig_restore, fig_tiered,
                table1_heterogeneity, table3_breakdown)
 
 MODULES = {
@@ -27,6 +27,7 @@ MODULES = {
     "fig14": fig14_flush,
     "fig15": fig15_timeline,
     "fig_restore": fig_restore,
+    "fig_tiered": fig_tiered,
     "table1": table1_heterogeneity,
     "table3": table3_breakdown,
 }

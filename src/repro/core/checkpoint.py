@@ -12,26 +12,40 @@ lazy protocol (paper §V-A2, Fig 6(c,d)):
   the very buffers being snapshotted, so it may only run once all device
   state has left the device.
 
+Persisted steps live in a :class:`~repro.storage.CheckpointRepository`:
+once an engine reports a step fully persisted, a background committer
+writes the step's catalog manifest (file list, sizes, kernel checksums)
+atomically *last* — so ``latest_step()`` only ever sees complete steps —
+then hands the step to the repository's cascade flusher for replication to
+any configured remote tiers, and triggers retention GC.
+
 Restore is elastic: shards are reassembled to *any* requested sharding (the
 stored shard boundaries come from the training layout at save time; restore
 intersects them with the target layout, so mesh-shape changes between save
-and restore are supported — a beyond-paper capability).
+and restore are supported — a beyond-paper capability). Resolution falls
+back tier-by-tier: a step missing from the local tier is re-hydrated from
+the first remote tier holding a complete copy, and ``step=None`` restores
+walk the catalog newest→oldest past damaged steps.
 """
 
 from __future__ import annotations
 
-import glob
 import os
-import re
+import queue
+import threading
 import time
-from typing import Any, List, Optional
+from typing import Any, Dict, List, Optional, Sequence
+
+from repro.storage.backend import BackendError
+from repro.storage.repository import (CheckpointRepository, RetentionPolicy,
+                                      Tier, committed_steps)
 
 from .baselines import (BaseCheckpointEngine, DataStatesEngine,
                         DataStatesOldEngine, SnapshotThenFlushEngine,
                         SyncSerializedEngine)
 from .distributed import group_by_rank, plan_shards
 from .engine import CheckpointFuture
-from .restore import RestoreEngine, RestoreStats
+from .restore import RestoreEngine, RestoreError, RestoreStats
 
 ENGINES = {
     "datastates": DataStatesEngine,          # this paper
@@ -46,13 +60,16 @@ def step_dir(directory: str, step: int) -> str:
 
 
 def latest_step(directory: str) -> Optional[int]:
-    """Highest step with a ``global_step*`` directory, or None."""
-    steps = []
-    for d in glob.glob(os.path.join(directory, "global_step*")):
-        m = re.search(r"global_step(\d+)$", d)
-        if m:
-            steps.append(int(m.group(1)))
-    return max(steps) if steps else None
+    """Highest *complete* step, or None.
+
+    Complete = committed to the repository catalog (manifest present), or
+    a legacy pre-repository directory that passes the per-format
+    completeness probe. A directory left by a crashed save — data files
+    but no manifest — is never eligible, so resume cannot select a
+    half-written checkpoint (the seed picked any ``global_step*`` dir).
+    """
+    steps = committed_steps(directory)
+    return steps[-1] if steps else None
 
 
 class CheckpointManager:
@@ -61,13 +78,19 @@ class CheckpointManager:
                  flush_threads: int = 4,
                  chunk_bytes: int = 4 << 20,
                  throttle_mbps: Optional[float] = None,
-                 restore_threads: Optional[int] = None):
+                 restore_threads: Optional[int] = None,
+                 tiers: Sequence[Tier] = (),
+                 retention: Optional[RetentionPolicy] = None,
+                 manifest_checksums: bool = True):
         if mode not in ENGINES:
             raise ValueError(f"unknown engine mode {mode!r}; "
                              f"choose from {sorted(ENGINES)}")
         self.directory = directory
         self.mode = mode
         os.makedirs(directory, exist_ok=True)
+        self.repository = CheckpointRepository(
+            directory, remote_tiers=tiers, retention=retention,
+            checksum=manifest_checksums)
         self.engine: BaseCheckpointEngine = ENGINES[mode](
             host_cache_bytes=host_cache_bytes,
             flush_threads=flush_threads,
@@ -75,7 +98,18 @@ class CheckpointManager:
             throttle_mbps=throttle_mbps)
         self.restore_engine = RestoreEngine(threads=restore_threads)
         self.last_restore_stats: Optional[RestoreStats] = None
+        self.last_restored_step: Optional[int] = None
         self._inflight: List[CheckpointFuture] = []
+        # Committer lane: waits for engine persist, then commits the step's
+        # manifest to the catalog (and kicks cascade + retention GC) off
+        # the training path.
+        self._commit_q: "queue.Queue[Optional[CheckpointFuture]]" = \
+            queue.Queue()
+        self._commit_events: Dict[int, threading.Event] = {}
+        self.commit_errors: List[tuple] = []
+        self._committer = threading.Thread(
+            target=self._commit_worker, daemon=True, name="ckpt-commit")
+        self._committer.start()
 
     # ------------------------------------------------------------------ save
     def save(self, step: int, state: Any, blocking: bool = False
@@ -85,18 +119,36 @@ class CheckpointManager:
         future = CheckpointFuture(step, step_dir(self.directory, step))
         t0 = time.perf_counter()
         future.stats.t_request = t0
+        # A previous save of this very step still in flight would have its
+        # directory rmtree'd under its flush threads by begin_step, and
+        # its committer could then manifest our half-written files. Settle
+        # it first (no-op unless the caller re-saves the same step).
+        self.wait_for_commit(step)
         records, objects = plan_shards(state, group="state")
         objects["__checkpoint_meta__"] = {"step": step, "mode": self.mode,
                                           "n_shards": len(records)}
         by_rank = group_by_rank(records)
+        # in-flight marker first: a crash at any later point leaves an
+        # identifiable orphan, never a resume-eligible directory.
+        self.repository.begin_step(step)
         os.makedirs(future.directory, exist_ok=True)
-        self.engine.save(future.directory, by_rank, objects, future)
+        try:
+            self.engine.save(future.directory, by_rank, objects, future)
+        except BaseException:
+            # A synchronous prologue failure (e.g. payload exceeds the
+            # host cache) never reaches the committer: retract the active
+            # claim so in-process GC can reclaim the orphaned directory.
+            self.repository.abort_step(step)
+            raise
         future.stats.blocking_s = time.perf_counter() - t0
         self._inflight.append(future)
         self._inflight = [f for f in self._inflight if not f.persisted] \
             + [f for f in self._inflight if f.persisted][-1:]
+        self._commit_events[step] = threading.Event()
+        self._commit_q.put(future)
         if blocking:
             future.wait_persisted()
+            self.wait_for_commit(step)
         return future
 
     # -------------------------------------------------------- barriers
@@ -116,18 +168,72 @@ class CheckpointManager:
             f.wait_persisted()
         return time.perf_counter() - t0
 
+    def wait_for_commit(self, step: Optional[int] = None,
+                        timeout: Optional[float] = None) -> None:
+        """Block until ``step`` (or every pending step) has its catalog
+        manifest committed (or its save is known failed). Settled steps
+        are pruned from the pending map, so an already-committed step
+        returns immediately."""
+        if step is not None:
+            events = [self._commit_events.get(step)]
+        else:
+            events = list(self._commit_events.values())
+        for ev in events:
+            if ev is None:
+                continue  # already settled (or never saved here)
+            if not ev.wait(timeout):
+                raise TimeoutError("manifest commit did not complete in time")
+
+    # ---------------------------------------------------------- committer
+    def _commit_worker(self) -> None:
+        while True:
+            future = self._commit_q.get()
+            if future is None:
+                self._commit_q.task_done()
+                return
+            try:
+                try:
+                    future.wait_persisted()
+                except BaseException:  # engine failed: orphan, not commit
+                    self.repository.abort_step(future.step)
+                else:
+                    self.repository.commit_step(
+                        future.step, engine_mode=self.mode,
+                        meta={"n_files": future.stats.n_files,
+                              "n_tensors": future.stats.n_tensors,
+                              "bytes_tensors": future.stats.bytes_tensors,
+                              "bytes_objects": future.stats.bytes_objects})
+            except BaseException as exc:  # noqa: BLE001
+                self.commit_errors.append((future.step, repr(exc)))
+            finally:
+                # prune-then-set: anyone already holding the event still
+                # wakes, and the pending map stays bounded over long runs
+                ev = self._commit_events.pop(future.step, None)
+                if ev is not None:
+                    ev.set()
+                self._commit_q.task_done()
+
     # ------------------------------------------------------------- restore
     def latest_step(self) -> Optional[int]:
-        return latest_step(self.directory)
+        return self.repository.latest_step()
 
     def restore(self, template: Any, step: Optional[int] = None,
-                engine: Optional[RestoreEngine] = None) -> Any:
+                engine: Optional[RestoreEngine] = None,
+                fallback: Optional[bool] = None) -> Any:
         """Rebuild ``template``-shaped state from a stored checkpoint.
 
         ``template`` leaves may be concrete arrays or ``ShapeDtypeStruct``s
         carrying a ``.sharding``; array leaves are reassembled shard-by-shard
         (elastic — target sharding need not match the stored one, so a run
         can resume onto a different mesh shape).
+
+        Step selection goes through the repository: with ``step=None`` the
+        committed steps are tried newest→oldest (``fallback`` defaults on),
+        so a checkpoint damaged *after* commit is skipped in favor of the
+        previous complete one; an explicit ``step`` is restored exactly
+        (``fallback`` defaults off) and surfaces its own error. Either way
+        the step directory is re-hydrated from a remote tier when the
+        local copy is gone (tier-by-tier fallback).
 
         The heavy lifting is done by the parallel
         :class:`~repro.core.restore.RestoreEngine`: the step directory is
@@ -143,23 +249,53 @@ class CheckpointManager:
         with a read throttle). Per-restore timings and I/O counts are left
         in :attr:`last_restore_stats` (a
         :class:`~repro.core.restore.RestoreStats`)."""
+        # Saves requested through this manager may have persisted but not
+        # yet committed their manifest; settle the catalog before reading
+        # it so a just-finished step is eligible.
+        self.wait_for_commit()
         if step is None:
-            step = self.latest_step()
-            if step is None:
+            candidates = list(reversed(self.repository.steps()))
+            if not candidates:
                 raise FileNotFoundError(f"no checkpoints in {self.directory}")
-        sdir = step_dir(self.directory, step)
-        tree, stats = (engine or self.restore_engine).restore(sdir, template)
-        self.last_restore_stats = stats
-        return tree
+            if fallback is None:
+                fallback = True
+        else:
+            candidates = [step]
+            if fallback is None:
+                fallback = False
+        last_exc: Optional[BaseException] = None
+        for s in candidates:
+            try:
+                with self.repository.reading(s):  # shield from auto-GC
+                    sdir = self.repository.resolve_for_restore(s)
+                    tree, stats = (engine or self.restore_engine).restore(
+                        sdir, template)
+            except (RestoreError, FileNotFoundError, KeyError, OSError,
+                    BackendError, ValueError) as exc:
+                if not fallback:
+                    raise
+                last_exc = exc
+                continue
+            self.last_restore_stats = stats
+            self.last_restored_step = s
+            return tree
+        raise RestoreError(
+            f"no restorable checkpoint among steps {candidates} in "
+            f"{self.directory}") from last_exc
 
     # -------------------------------------------------------------- misc
     def drain(self) -> None:
         self.wait_for_persist()
         self.engine.drain()
+        self._commit_q.join()
+        self.repository.drain()
 
     def close(self) -> None:
         self.drain()
+        self._commit_q.put(None)
+        self._committer.join(timeout=60)
         self.engine.close()
+        self.repository.close()
 
     def __enter__(self):
         return self

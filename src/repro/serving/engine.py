@@ -22,7 +22,8 @@ from repro.models.model import ATTN_TYPES, attn_kind
 def load_params_for_serving(directory: str, params_template: Any,
                             step: Optional[int] = None,
                             threads: Optional[int] = None,
-                            throttle_mbps: Optional[float] = None):
+                            throttle_mbps: Optional[float] = None,
+                            repository: Optional[Any] = None):
     """Restore *model parameters only* straight into a serving process.
 
     Serving needs no optimizer state, so this restores the ``model``
@@ -33,20 +34,32 @@ def load_params_for_serving(directory: str, params_template: Any,
     wrote it. ``params_template`` leaves may carry a serving-mesh
     ``.sharding`` that differs from the training layout (elastic restore).
 
+    Step resolution goes through the checkpoint repository: only
+    *committed* steps are eligible (a crash-interrupted save is never
+    served), and a step evicted from the local tier is re-hydrated from
+    the first remote tier holding a complete copy. Pass ``repository`` (a
+    :class:`~repro.storage.CheckpointRepository` configured with the
+    training job's remote tiers) to serve from remote storage; otherwise a
+    local-tier view of ``directory`` is used.
+
     Returns ``(params, stats)`` where ``stats`` is a
     :class:`~repro.core.restore.RestoreStats` (check ``bytes_read`` to see
     the sub-tree effect).
     """
-    from repro.core.checkpoint import latest_step, step_dir
     from repro.core.restore import RestoreEngine
+    from repro.storage.repository import CheckpointRepository
 
+    repo = repository
+    if repo is None:
+        repo = CheckpointRepository(directory, auto_cascade=False,
+                                    auto_gc=False)
     if step is None:
-        step = latest_step(directory)
+        step = repo.latest_step()
         if step is None:
             raise FileNotFoundError(f"no checkpoints in {directory}")
+    sdir = repo.resolve_for_restore(step)
     engine = RestoreEngine(threads=threads, throttle_mbps=throttle_mbps)
-    tree, stats = engine.restore(step_dir(directory, step),
-                                 {"model": params_template})
+    tree, stats = engine.restore(sdir, {"model": params_template})
     return tree["model"], stats
 
 

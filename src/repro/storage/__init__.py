@@ -1,0 +1,53 @@
+"""Tiered checkpoint repository — durable, managed storage for checkpoints.
+
+The paper's engine (``repro.core``) solves data *movement*: lazy device→host
+capture into a pinned cache and streamlined async flush (§V-A). This package
+solves data *residence* — where committed checkpoints live, how they stay
+trustworthy, and how many of them exist — the paper's §VII future work
+("multi-tier hierarchies beyond host memory", "integrity of persisted
+state"), informed by two systems from PAPERS.md:
+
+* **TierCheck** (arXiv 2605.17821): high-frequency checkpointing survives
+  only if the fast tier drains somewhere durable. Our
+  :class:`~repro.storage.repository.CheckpointRepository` extends the
+  paper's device→host→file pipeline with an async **cascade flusher** that
+  replicates committed steps from local NVMe-class storage to remote tiers
+  (peer memory, object store) in the background, overlapped with training,
+  and restores fall back tier-by-tier when the fast copy is gone.
+* **ByteCheckpoint** (arXiv 2407.20143): checkpoints become manageable at
+  fleet scale through a unified **catalog** over heterogeneous backends.
+  Ours is a per-step manifest (file list, sizes, kernel-computed
+  checksums, engine metadata) written atomically *after* all data files —
+  a step is visible iff it is complete, so a crash mid-save can never be
+  selected by ``latest_step()`` (the seed's resume-from-half-a-checkpoint
+  bug is structurally impossible).
+
+Layers:
+
+``backend``     pluggable :class:`~repro.storage.backend.StorageBackend`
+                tiers — local POSIX, in-memory peer, simulated object
+                store with multipart upload + latency/bandwidth model;
+``manifest``    per-step :class:`~repro.storage.manifest.StepManifest` +
+                Pallas-checksum integrity + legacy completeness probe;
+``repository``  the catalog, cascade flusher, retention GC
+                (keep-last-N / keep-every-K / pins), tier-by-tier restore
+                resolution;
+``cli``         ``python -m repro.storage.cli {ls,verify,pin,unpin,gc}``.
+"""
+
+from .backend import (BackendError, LocalBackend, MemoryBackend,
+                      ObjectStoreBackend, StorageBackend)
+from .manifest import (FileEntry, StepManifest, detect_format, file_checksum,
+                       probe_step_complete)
+from .repository import (CascadeEvent, CheckpointRepository, GCReport,
+                         RetentionPolicy, Tier, VerifyResult,
+                         committed_steps, orphan_steps)
+
+__all__ = [
+    "BackendError", "LocalBackend", "MemoryBackend", "ObjectStoreBackend",
+    "StorageBackend",
+    "FileEntry", "StepManifest", "detect_format", "file_checksum",
+    "probe_step_complete",
+    "CascadeEvent", "CheckpointRepository", "GCReport", "RetentionPolicy",
+    "Tier", "VerifyResult", "committed_steps", "orphan_steps",
+]

@@ -1,0 +1,176 @@
+"""Repository operations CLI.
+
+    python -m repro.storage.cli --root CKPT_DIR ls
+    python -m repro.storage.cli --root CKPT_DIR verify [--step N] [--fast]
+    python -m repro.storage.cli --root CKPT_DIR pin 1200
+    python -m repro.storage.cli --root CKPT_DIR unpin 1200
+    python -m repro.storage.cli --root CKPT_DIR gc --keep-last 3 \\
+        [--keep-every K] [--orphans] [--dry-run]
+
+Operates on the local tier's catalog (remote tiers are process-local
+objects owned by the training job). ``verify`` re-audits committed steps
+against their manifests and flags orphaned crash victims for GC; exit
+status is non-zero when anything is wrong, so it can gate an automated
+resume.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import List, Optional
+
+from .repository import (CheckpointRepository, RetentionPolicy, orphan_steps,
+                         _dir_size)
+
+
+def _fmt_bytes(n: int) -> str:
+    for unit in ("B", "KiB", "MiB", "GiB"):
+        if n < 1024 or unit == "GiB":
+            return f"{n:.1f} {unit}" if unit != "B" else f"{n} B"
+        n /= 1024
+    return f"{n:.1f} GiB"
+
+
+def _repo(args) -> CheckpointRepository:
+    # Read/admin access only: no cascade thread, no auto-GC side effects.
+    return CheckpointRepository(args.root, auto_cascade=False, auto_gc=False)
+
+
+def cmd_ls(args) -> int:
+    repo = _repo(args)
+    pins = repo.pins()
+    steps = repo.steps()
+    if not steps:
+        print(f"(no committed steps in {args.root})")
+    for step in steps:
+        if repo.has_manifest(step):
+            m = repo.manifest(step)
+            desc = (f"{len(m.files):3d} files  "
+                    f"{_fmt_bytes(m.total_bytes):>10}  "
+                    f"format={m.format}  engine={m.engine_mode or '-'}")
+        else:
+            desc = (f"{'?':>3} files  "
+                    f"{_fmt_bytes(_dir_size(repo.step_dir(step))):>10}  "
+                    f"legacy (no manifest)")
+        pin = "  [pinned]" if step in pins else ""
+        print(f"step {step:>10}  {desc}{pin}")
+    orphans = repo.orphans()
+    for step in orphans:
+        print(f"step {step:>10}  ORPHAN (incomplete save — eligible for "
+              f"`gc --orphans`)")
+    return 0
+
+
+def cmd_verify(args) -> int:
+    repo = _repo(args)
+    bad = 0
+    all_orphans = repo.orphans()
+    if args.step is not None:
+        if args.step not in repo.steps() and args.step not in all_orphans:
+            print(f"step {args.step}: NOT FOUND — no such step on any tier")
+            return 1
+        steps = [args.step] if args.step not in all_orphans else []
+    else:
+        steps = repo.steps()
+    for step in steps:
+        if not repo.has_manifest(step):
+            print(f"step {step}: legacy directory (no manifest) — "
+                  f"probe only, no checksums")
+            continue
+        res = repo.verify_step(step, check_checksums=not args.fast)
+        if res.ok:
+            print(f"step {step}: OK ({len(repo.manifest(step).files)} files"
+                  f"{', sizes only' if args.fast else ', checksums verified'})")
+        else:
+            bad += 1
+            print(f"step {step}: CORRUPT — {', '.join(res.problems)}")
+    orphans = 0
+    for step in all_orphans:
+        if args.step is not None and step != args.step:
+            continue  # --step N audits N alone; unrelated orphans
+                      # must not flip its exit status
+        # Young orphans may be another process's live in-flight save
+        # (in-flight protection is process-local); with a grace window
+        # they are reported without failing the exit status.
+        if args.orphan_grace and \
+                repo._orphan_age_s(step) < args.orphan_grace:
+            print(f"step {step}: in-flight or fresh orphan "
+                  f"(younger than --orphan-grace; not counted)")
+            continue
+        orphans += 1
+        print(f"step {step}: ORPHAN — incomplete save (no manifest); "
+              f"flagged for GC (`gc --orphans`)")
+    return 1 if bad or orphans else 0
+
+
+def cmd_pin(args) -> int:
+    _repo(args).pin(args.step)
+    print(f"pinned step {args.step}")
+    return 0
+
+
+def cmd_unpin(args) -> int:
+    _repo(args).unpin(args.step)
+    print(f"unpinned step {args.step}")
+    return 0
+
+
+def cmd_gc(args) -> int:
+    repo = _repo(args)
+    policy = None
+    if args.keep_last is not None or args.keep_every is not None:
+        policy = RetentionPolicy(keep_last_n=args.keep_last,
+                                 keep_every_k=args.keep_every)
+    report = repo.gc(include_orphans=args.orphans, dry_run=args.dry_run,
+                     retention=policy, orphan_grace_s=args.orphan_grace)
+    verb = "would delete" if args.dry_run else "deleted"
+    print(f"{verb} steps: {report.deleted_steps or '[]'}  "
+          f"orphans: {report.deleted_orphans or '[]'}  "
+          f"freed: {_fmt_bytes(report.bytes_freed)}  "
+          f"({report.seconds * 1e3:.1f} ms)")
+    return 0
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.storage.cli",
+        description="Tiered checkpoint repository admin commands.")
+    ap.add_argument("--root", required=True,
+                    help="checkpoint directory (the repository's local tier)")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    sub.add_parser("ls", help="list committed steps and orphans")
+    p = sub.add_parser("verify",
+                       help="audit steps against their manifests")
+    p.add_argument("--step", type=int, default=None)
+    p.add_argument("--fast", action="store_true",
+                   help="sizes only, skip checksum recompute")
+    p.add_argument("--orphan-grace", type=float, default=0.0,
+                   metavar="SECONDS",
+                   help="don't fail the exit status for orphans younger "
+                        "than this (monitoring a live job: its in-flight "
+                        "save looks like an orphan from outside; "
+                        "default: 0 = strict, for post-crash audits)")
+    p = sub.add_parser("pin", help="protect a step from GC")
+    p.add_argument("step", type=int)
+    p = sub.add_parser("unpin", help="remove a GC pin")
+    p.add_argument("step", type=int)
+    p = sub.add_parser("gc", help="apply retention / clean orphans")
+    p.add_argument("--keep-last", type=int, default=None)
+    p.add_argument("--keep-every", type=int, default=None)
+    p.add_argument("--orphans", action="store_true",
+                   help="also delete orphaned incomplete saves")
+    p.add_argument("--orphan-grace", type=float, default=900.0,
+                   metavar="SECONDS",
+                   help="leave orphans younger than this alone — from "
+                        "outside the training process an *in-flight* save "
+                        "is indistinguishable from a crash victim "
+                        "(default: 900)")
+    p.add_argument("--dry-run", action="store_true")
+    args = ap.parse_args(argv)
+    return {"ls": cmd_ls, "verify": cmd_verify, "pin": cmd_pin,
+            "unpin": cmd_unpin, "gc": cmd_gc}[args.cmd](args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,256 @@
+"""Per-step manifests: the crash-consistency unit of the repository.
+
+A step is *committed* iff its manifest exists in the catalog. The manifest
+is computed from the fully-persisted step directory (file list, sizes,
+per-file integrity checksums via the Pallas kernel in
+``repro.kernels.checksum``) and written atomically *last*, so a crash at
+any earlier point leaves an invisible (orphaned) step instead of a
+restorable-looking half checkpoint — ByteCheckpoint's catalog discipline.
+
+Checksums reuse the save path's position-weighted u32 kernel: the file is
+walked in fixed 4 MiB chunks (one jit trace total — the kernel shape never
+changes), each chunk checksummed on device, and the chunk digests folded
+order-sensitively, so block reorder/truncation within *and* across chunks
+is caught.
+
+:func:`probe_step_complete` is the legacy-compatibility path: step
+directories written before the repository existed have no manifest, so
+eligibility falls back to a per-format completeness probe (``.dsllm``
+trailer magic, snapshot chunk inventory, sync pickle parse).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import glob
+import json
+import os
+import pickle
+import struct
+import threading
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+MANIFEST_VERSION = 1
+CHECKSUM_CHUNK_BYTES = 4 << 20
+CHECKSUM_ALGO = "pallas-weighted-u32-chunk4m-v1"
+
+# Filenames that belong to the repository, not the checkpoint payload.
+_CONTROL_SUFFIXES = (".tmp",)
+
+
+def file_checksum(path: str,
+                  chunk_bytes: int = CHECKSUM_CHUNK_BYTES) -> int:
+    """Position-weighted u32 checksum of a file's bytes (kernel-backed).
+
+    Fixed-shape chunks keep the jit cache to a single trace; the chunk
+    digests are combined as ``sum((i+1) * digest_i) mod 2^32`` so chunk
+    reordering changes the result. The file length is recorded separately
+    in the manifest, so zero-padding of the tail chunk is not a blind spot.
+    """
+    from repro.kernels import ops as kops  # deferred: jax import is heavy
+
+    total = 0
+    with open(path, "rb") as f:
+        i = 0
+        while True:
+            buf = f.read(chunk_bytes)
+            if not buf:
+                break
+            arr = np.frombuffer(buf, dtype=np.uint8)
+            if len(arr) < chunk_bytes:
+                arr = np.concatenate(
+                    [arr, np.zeros(chunk_bytes - len(arr), np.uint8)])
+            digest = int(kops.tensor_checksum(arr))
+            total = (total + (i + 1) * digest) % (1 << 32)
+            i += 1
+    return total
+
+
+@dataclasses.dataclass(frozen=True)
+class FileEntry:
+    """One checkpoint file inside a step."""
+
+    name: str
+    nbytes: int
+    checksum: Optional[int] = None
+
+
+@dataclasses.dataclass
+class StepManifest:
+    """Everything the catalog knows about one committed step."""
+
+    step: int
+    files: List[FileEntry]
+    format: str = "unknown"            # dsllm | snapshot | sync | unknown
+    engine_mode: Optional[str] = None
+    checksum_algo: Optional[str] = None
+    created_unix: float = 0.0
+    meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    version: int = MANIFEST_VERSION
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(f.nbytes for f in self.files)
+
+    def file(self, name: str) -> Optional[FileEntry]:
+        for f in self.files:
+            if f.name == name:
+                return f
+        return None
+
+    # -- serialization -------------------------------------------------------
+    def to_json_bytes(self) -> bytes:
+        d = dataclasses.asdict(self)
+        d["files"] = [dataclasses.asdict(f) for f in self.files]
+        return json.dumps(d, indent=1, sort_keys=True).encode()
+
+    @classmethod
+    def from_json_bytes(cls, data: bytes) -> "StepManifest":
+        d = json.loads(data.decode())
+        files = [FileEntry(**f) for f in d.pop("files", [])]
+        known = {f.name for f in dataclasses.fields(cls)}
+        return cls(files=files, **{k: v for k, v in d.items() if k in known})
+
+    # -- construction --------------------------------------------------------
+    @classmethod
+    def build(cls, sdir: str, step: int, *, engine_mode: Optional[str] = None,
+              checksum: bool = True,
+              meta: Optional[Dict[str, Any]] = None) -> "StepManifest":
+        """Scan a fully-persisted step directory into a manifest."""
+        names = sorted(
+            n for n in os.listdir(sdir)
+            if os.path.isfile(os.path.join(sdir, n))
+            and not any(s in n for s in _CONTROL_SUFFIXES))
+        files = []
+        for n in names:
+            path = os.path.join(sdir, n)
+            files.append(FileEntry(
+                name=n, nbytes=os.path.getsize(path),
+                checksum=file_checksum(path) if checksum else None))
+        return cls(step=step, files=files, format=detect_format(names),
+                   engine_mode=engine_mode,
+                   checksum_algo=CHECKSUM_ALGO if checksum else None,
+                   created_unix=time.time(), meta=dict(meta or {}))
+
+
+def detect_format(names) -> str:
+    names = list(names)
+    if any(n.endswith(".dsllm") for n in names):
+        return "dsllm"
+    if any(n.startswith("manifest_rank") and n.endswith(".pkl")
+           for n in names):
+        return "snapshot"
+    if any(n.endswith(".pkl") for n in names):
+        return "sync"
+    return "unknown"
+
+
+# ---------------------------------------------------------------------------
+# Legacy completeness probe (pre-repository step directories).
+
+_TRAILER = struct.Struct("<Q8s")
+
+
+def _dsllm_trailer_ok(path: str) -> bool:
+    from repro.core.layout import MAGIC
+    try:
+        size = os.path.getsize(path)
+        if size < _TRAILER.size:
+            return False
+        with open(path, "rb") as f:
+            f.seek(size - _TRAILER.size)
+            footer_len, magic = _TRAILER.unpack(f.read(_TRAILER.size))
+        return magic == MAGIC and footer_len <= size - _TRAILER.size
+    except OSError:
+        return False
+
+
+# Probe results keyed by the directory's stat fingerprint (per-file name,
+# size, mtime): the probe only ever runs on legacy pre-repository
+# directories and crash victims, both effectively immutable — anything
+# written through the repository carries a marker or a manifest and is
+# classified without probing. A stat sweep is metadata-only, so the cache
+# removes the expensive part (parsing multi-GB legacy pickles) from the
+# committer thread, which re-scans the catalog after every commit.
+# Bounded: one entry per step directory.
+_probe_cache: Dict[str, Tuple[tuple, bool]] = {}
+_probe_lock = threading.Lock()
+
+
+def _dir_fingerprint(sdir: str) -> tuple:
+    entries = []
+    with os.scandir(sdir) as it:
+        for e in it:
+            try:
+                st = e.stat()
+            except OSError:
+                continue
+            entries.append((e.name, st.st_size, st.st_mtime_ns))
+    return tuple(sorted(entries))
+
+
+def probe_step_complete(sdir: str) -> bool:
+    """Best-effort completeness check for a manifest-less step directory.
+
+    * native: every ``*.dsllm`` file must end in a valid footer trailer
+      (the engine writes footers last, so a crash victim fails this);
+    * snapshot: every chunk referenced by every rank manifest must exist
+      with the advertised size;
+    * sync: every pickle must parse.
+
+    Results are cached per directory stat fingerprint — ``committed_steps``
+    runs after every commit, and re-parsing multi-GB legacy pickles each
+    time would put the whole legacy directory's I/O on the committer
+    thread.
+    """
+    if not os.path.isdir(sdir):
+        return False
+    path = os.path.abspath(sdir)
+    try:
+        fp = _dir_fingerprint(path)
+    except OSError:
+        return False
+    with _probe_lock:
+        cached = _probe_cache.get(path)
+    if cached is not None and cached[0] == fp:
+        return cached[1]
+    result = _probe_step_complete_uncached(sdir)
+    with _probe_lock:
+        _probe_cache[path] = (fp, result)
+    return result
+
+
+def _probe_step_complete_uncached(sdir: str) -> bool:
+    dsllm = glob.glob(os.path.join(sdir, "*.dsllm"))
+    if dsllm:
+        return all(_dsllm_trailer_ok(p) for p in dsllm)
+    manifests = glob.glob(os.path.join(sdir, "manifest_rank*.pkl"))
+    if manifests:
+        try:
+            for mpath in manifests:
+                with open(mpath, "rb") as f:
+                    manifest = pickle.load(f)
+                for t in manifest["tensors"]:
+                    for cpath, lo, hi in t["chunks"]:
+                        if not os.path.exists(cpath):
+                            cpath = os.path.join(
+                                sdir, os.path.basename(cpath))
+                        if not os.path.isfile(cpath) \
+                                or os.path.getsize(cpath) != hi - lo:
+                            return False
+            return True
+        except Exception:
+            return False
+    pkls = glob.glob(os.path.join(sdir, "*.pkl"))
+    if pkls:
+        for p in pkls:
+            try:
+                with open(p, "rb") as f:
+                    pickle.load(f)
+            except Exception:
+                return False
+        return True
+    return False

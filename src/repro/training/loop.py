@@ -94,8 +94,17 @@ class Trainer:
             },
         }
 
-    def resume(self, step: Optional[int] = None) -> int:
+    def resume(self, step: Optional[int] = None,
+               fallback: Optional[bool] = None) -> int:
         """Resume from a checkpoint via the parallel restore engine.
+
+        Step selection goes through the manager's checkpoint repository:
+        only *committed* steps (catalog manifest present, or legacy
+        directories passing the completeness probe) are eligible, so a
+        crash-interrupted save can never be resumed from; with
+        ``step=None`` a damaged-but-committed step falls back to the
+        previous complete one, and a step evicted from the local tier is
+        re-hydrated from the first remote tier that holds it.
 
         The manager's :class:`~repro.core.restore.RestoreEngine` indexes
         the step directory once, plans shard↔target intersections, and fans
@@ -104,7 +113,8 @@ class Trainer:
         bytes actually read — the resume-cost breakdown of arXiv
         2512.24511)."""
         assert self.manager is not None
-        restored = self.manager.restore(self.state(), step=step)
+        restored = self.manager.restore(self.state(), step=step,
+                                        fallback=fallback)
         self.params = restored["model"]
         self.opt_state = restored["optimizer"]
         self.step = restored["meta"]["step"]

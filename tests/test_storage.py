@@ -1,0 +1,463 @@
+"""Tiered checkpoint repository: backends, catalog crash consistency,
+cascade flush, tier-by-tier restore, retention GC, and the admin CLI."""
+
+import glob
+import os
+import shutil
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import CheckpointManager, latest_step, step_dir
+from repro.serving.engine import load_params_for_serving
+from repro.storage import (BackendError, CheckpointRepository, LocalBackend,
+                           MemoryBackend, ObjectStoreBackend, RetentionPolicy,
+                           StepManifest, Tier, committed_steps, file_checksum,
+                           probe_step_complete)
+from repro.storage import cli as storage_cli
+
+
+def tiny_state(tag: float = 0.0):
+    return {"model": {"w": jnp.arange(256, dtype=jnp.float32) + tag},
+            "meta": {"step": int(tag)}}
+
+
+# ---------------------------------------------------------------- backends
+@pytest.mark.parametrize("make", [
+    lambda tmp: LocalBackend(str(tmp / "be")),
+    lambda tmp: MemoryBackend(),
+    lambda tmp: ObjectStoreBackend(),
+], ids=["local", "memory", "object"])
+def test_backend_roundtrip(tmp_path, make):
+    be = make(tmp_path)
+    be.put("a/b/one.bin", b"hello")
+    be.put("a/two.bin", b"world!")
+    assert be.get("a/b/one.bin") == b"hello"
+    assert be.exists("a/two.bin") and not be.exists("a/three.bin")
+    assert be.size("a/two.bin") == 6
+    assert be.list("a/") == ["a/b/one.bin", "a/two.bin"]
+    assert be.list("a/b/") == ["a/b/one.bin"]
+    be.delete("a/b/one.bin")
+    be.delete("a/b/one.bin")  # idempotent
+    assert be.list("") == ["a/two.bin"]
+    with pytest.raises(BackendError):
+        be.get("a/b/one.bin")
+
+
+def test_backend_file_helpers(tmp_path):
+    src = tmp_path / "payload.bin"
+    src.write_bytes(os.urandom(100_000))
+    for be in (LocalBackend(str(tmp_path / "l")), MemoryBackend(),
+               ObjectStoreBackend(part_bytes=1 << 14)):
+        n = be.put_file("k/payload", str(src))
+        assert n == 100_000
+        dst = str(tmp_path / f"out_{be.name}.bin")
+        be.get_file("k/payload", dst)
+        assert open(dst, "rb").read() == src.read_bytes()
+
+
+def test_local_backend_key_escape_rejected(tmp_path):
+    be = LocalBackend(str(tmp_path / "root"))
+    with pytest.raises(BackendError, match="escapes"):
+        be.put("../evil", b"x")
+
+
+def test_memory_backend_capacity(tmp_path):
+    be = MemoryBackend(capacity_bytes=10)
+    be.put("a", b"12345")
+    with pytest.raises(BackendError, match="full"):
+        be.put("b", b"1234567")
+    be.put("a", b"1234567890")  # replacing the key is not an overflow
+    assert be.used_bytes() == 10
+
+
+def test_object_store_multipart_visibility():
+    be = ObjectStoreBackend()
+    uid = be.initiate_multipart("big")
+    be.upload_part(uid, 1, b"world")
+    be.upload_part(uid, 0, b"hello ")  # out-of-order parts are fine
+    assert not be.exists("big"), "partial upload must be invisible"
+    be.complete_multipart(uid)
+    assert be.get("big") == b"hello world"
+    uid2 = be.initiate_multipart("gone")
+    be.upload_part(uid2, 0, b"x")
+    be.abort_multipart(uid2)
+    assert not be.exists("gone")
+    with pytest.raises(BackendError):
+        be.complete_multipart(uid2)
+
+
+def test_object_store_put_file_multipart(tmp_path):
+    src = tmp_path / "big.bin"
+    src.write_bytes(os.urandom(5 << 14))
+    be = ObjectStoreBackend(part_bytes=1 << 14)
+    be.put_file("big", str(src))
+    assert be.stats["n_multipart"] == 1
+    assert be.get("big") == src.read_bytes()
+
+
+def test_object_store_latency_bandwidth_model():
+    be = ObjectStoreBackend(latency_s=0.02, bandwidth_mbps=1.0)
+    payload = b"x" * 100_000  # 0.1 s at 1 MB/s
+    t0 = time.perf_counter()
+    be.put("k", payload)
+    assert time.perf_counter() - t0 >= 0.1
+    t0 = time.perf_counter()
+    be.get("k")
+    assert time.perf_counter() - t0 >= 0.1
+
+
+# ---------------------------------------------------------------- manifest
+def test_manifest_roundtrip_and_checksum(tmp_path):
+    sdir = tmp_path / "global_step5"
+    sdir.mkdir()
+    (sdir / "rank00000.dsllm").write_bytes(os.urandom(10_000))
+    (sdir / "rank00001.dsllm").write_bytes(os.urandom(777))
+    m = StepManifest.build(str(sdir), 5, engine_mode="datastates",
+                           meta={"note": "hi"})
+    m2 = StepManifest.from_json_bytes(m.to_json_bytes())
+    assert m2.step == 5 and m2.engine_mode == "datastates"
+    assert m2.total_bytes == 10_777 and len(m2.files) == 2
+    assert m2.file("rank00001.dsllm").checksum == \
+        file_checksum(str(sdir / "rank00001.dsllm"))
+    assert m2.meta == {"note": "hi"}
+
+
+def test_file_checksum_sensitive_to_content(tmp_path):
+    p = tmp_path / "f.bin"
+    data = bytearray(os.urandom(50_000))
+    p.write_bytes(data)
+    c0 = file_checksum(str(p))
+    data[12_345] ^= 0xFF
+    p.write_bytes(data)
+    assert file_checksum(str(p)) != c0
+
+
+def test_probe_step_complete_dsllm(tmp_path):
+    state = tiny_state()
+    with CheckpointManager(str(tmp_path)) as mgr:
+        mgr.save(1, state, blocking=True)
+    sdir = step_dir(str(tmp_path), 1)
+    assert probe_step_complete(sdir)
+    [f] = glob.glob(os.path.join(sdir, "*.dsllm"))
+    with open(f, "r+b") as fh:  # chop the footer: probe must reject
+        fh.truncate(os.path.getsize(f) // 2)
+    assert not probe_step_complete(sdir)
+
+
+def test_legacy_directory_without_catalog_still_eligible(tmp_path):
+    """Pre-repository checkpoints (no catalog at all) resume via the
+    completeness probe."""
+    state = tiny_state(3.0)
+    with CheckpointManager(str(tmp_path)) as mgr:
+        mgr.save(3, state, blocking=True)
+    shutil.rmtree(str(tmp_path / ".catalog"))  # simulate a legacy layout
+    assert latest_step(str(tmp_path)) == 3
+    with CheckpointManager(str(tmp_path)) as mgr:
+        out = mgr.restore(tiny_state())
+        assert float(out["model"]["w"][3]) == 6.0
+
+
+# ------------------------------------------------- catalog crash consistency
+def test_killed_save_is_never_resume_eligible(tmp_path, monkeypatch):
+    """Acceptance: kill a save after data files exist but before the
+    manifest commit — latest_step skips it, restore falls back to the
+    previous complete step, and `cli verify` flags the orphan for GC."""
+    state1, state2 = tiny_state(1.0), tiny_state(2.0)
+    with CheckpointManager(str(tmp_path)) as mgr:
+        mgr.save(1, state1, blocking=True)
+        # "kill" the process inside the commit window: data files fully
+        # persisted, manifest never written.
+        monkeypatch.setattr(CheckpointRepository, "commit_step",
+                            lambda self, step, **kw: None)
+        mgr.save(2, state2, blocking=True)
+    monkeypatch.undo()
+    assert os.path.isdir(step_dir(str(tmp_path), 2))  # data landed...
+    assert latest_step(str(tmp_path)) == 1            # ...but not eligible
+    with CheckpointManager(str(tmp_path)) as mgr:
+        assert mgr.latest_step() == 1
+        out = mgr.restore(tiny_state())               # falls back to step 1
+        assert mgr.last_restored_step == 1
+        assert float(out["model"]["w"][0]) == 1.0
+    # the CLI flags the orphan and a non-zero exit gates automated resume
+    assert storage_cli.main(["--root", str(tmp_path), "verify"]) == 1
+    # the default grace window protects what *might* be a live save from
+    # another process...
+    assert storage_cli.main(["--root", str(tmp_path), "gc",
+                             "--orphans"]) == 0
+    assert os.path.isdir(step_dir(str(tmp_path), 2))
+    # ...but this one is known dead: GC cleans it (and only it)
+    assert storage_cli.main(["--root", str(tmp_path), "gc", "--orphans",
+                             "--orphan-grace", "0"]) == 0
+    assert not os.path.isdir(step_dir(str(tmp_path), 2))
+    assert os.path.isdir(step_dir(str(tmp_path), 1))
+    assert storage_cli.main(["--root", str(tmp_path), "verify"]) == 0
+
+
+def test_restore_falls_back_past_damaged_committed_step(tmp_path):
+    """Damage *after* commit: the newest step indexes but fails integrity;
+    step=None restore walks back to the previous complete step."""
+    with CheckpointManager(str(tmp_path)) as mgr:
+        mgr.save(1, tiny_state(1.0), blocking=True)
+        mgr.save(2, tiny_state(2.0), blocking=True)
+    for p in glob.glob(os.path.join(step_dir(str(tmp_path), 2), "*.dsllm")):
+        with open(p, "r+b") as f:
+            f.truncate(max(os.path.getsize(p) // 2, 1))
+    with CheckpointManager(str(tmp_path)) as mgr:
+        out = mgr.restore(tiny_state())
+        assert mgr.last_restored_step == 1
+        assert float(out["model"]["w"][0]) == 1.0
+        # an explicit step request still surfaces the corruption
+        with pytest.raises(Exception):
+            mgr.restore(tiny_state(), step=2)
+
+
+def test_verify_detects_bitrot(tmp_path):
+    with CheckpointManager(str(tmp_path)) as mgr:
+        mgr.save(1, tiny_state(1.0), blocking=True)
+        [f] = glob.glob(os.path.join(step_dir(str(tmp_path), 1), "*.dsllm"))
+        with open(f, "r+b") as fh:  # flip one payload byte, size unchanged
+            fh.seek(100)
+            b = fh.read(1)
+            fh.seek(100)
+            fh.write(bytes([b[0] ^ 0xFF]))
+        res = mgr.repository.verify_step(1)
+        assert not res.ok and res.checksum_mismatch
+    assert storage_cli.main(["--root", str(tmp_path), "verify"]) == 1
+    assert storage_cli.main(["--root", str(tmp_path), "verify",
+                             "--fast"]) == 0  # sizes alone can't see it
+
+
+# ------------------------------------------------------- cascade + restore
+def test_cascade_replicates_and_rehydrates(tmp_path):
+    remote = Tier("peer", MemoryBackend())
+    with CheckpointManager(str(tmp_path), tiers=[remote]) as mgr:
+        mgr.save(1, tiny_state(1.0), blocking=True)
+        mgr.save(2, tiny_state(2.0), blocking=True)
+        mgr.repository.wait_cascaded()
+        assert mgr.repository.tier_steps(remote) == [1, 2]
+        assert not mgr.repository.cascade_errors
+        assert len(mgr.repository.cascade_log) == 2
+        # blow away the local copy of step 1 entirely
+        mgr.repository._delete_local_step(1)
+        assert mgr.repository.local_steps() == [2]
+        assert mgr.repository.steps() == [1, 2]  # still resumable
+        out = mgr.restore(tiny_state(), step=1)  # tier-by-tier fallback
+        assert float(out["model"]["w"][0]) == 1.0
+        assert mgr.repository.local_steps() == [1, 2]  # re-hydrated
+
+
+def test_cascade_manifest_uploaded_last_makes_step_atomic(tmp_path):
+    """A step is complete-on-tier iff its manifest object exists; data
+    objects alone must not count."""
+    repo = CheckpointRepository(str(tmp_path), auto_cascade=False)
+    sdir = repo.begin_step(7)
+    with open(os.path.join(sdir, "rank00000.dsllm"), "wb") as f:
+        f.write(os.urandom(4096))
+    repo.commit_step(7)
+    tier = Tier("s3", ObjectStoreBackend())
+    repo.remote_tiers = [tier]
+    tier.backend.put("global_step7/rank00000.dsllm", b"partial junk")
+    assert not repo.tier_has_step(tier, 7)
+    repo.cascade_step(7)
+    assert repo.tier_has_step(tier, 7)
+    assert tier.backend.get("global_step7/rank00000.dsllm") != b"partial junk"
+    repo.close()
+
+
+def test_serving_from_remote_tier(tmp_path):
+    """GC evicts the local copy; serving re-hydrates from the object tier."""
+    remote = Tier("s3", ObjectStoreBackend())
+    state = tiny_state(5.0)
+    with CheckpointManager(str(tmp_path), tiers=[remote]) as mgr:
+        mgr.save(5, state, blocking=True)
+        mgr.repository.wait_cascaded()
+        mgr.repository._delete_local_step(5)
+        params, stats = load_params_for_serving(
+            str(tmp_path), {"w": jnp.zeros(256, jnp.float32)},
+            repository=mgr.repository)
+        np.testing.assert_array_equal(np.asarray(params["w"]),
+                                      np.asarray(state["model"]["w"]))
+        assert stats.bytes_read > 0
+
+
+def test_restore_falls_back_past_damaged_remote_copy(tmp_path):
+    """Remote bitrot on the newest step: its re-hydration fails the
+    checksum audit and the step=None walk falls back to the previous
+    complete step instead of aborting."""
+    remote = Tier("peer", MemoryBackend())
+    with CheckpointManager(str(tmp_path), tiers=[remote]) as mgr:
+        mgr.save(1, tiny_state(1.0), blocking=True)
+        mgr.save(2, tiny_state(2.0), blocking=True)
+        mgr.repository.wait_cascaded()
+        mgr.repository._delete_local_step(2)
+        # flip a byte of step 2's remote data object, size unchanged
+        [key] = [k for k in remote.backend.list("global_step2/")]
+        blob = bytearray(remote.backend.get(key))
+        blob[100] ^= 0xFF
+        remote.backend.put(key, bytes(blob))
+        out = mgr.restore(tiny_state())
+        assert mgr.last_restored_step == 1
+        assert float(out["model"]["w"][0]) == 1.0
+
+
+def test_fetch_tries_next_tier_when_first_is_damaged(tmp_path):
+    """Tier-by-tier really means per *tier*: a damaged copy on the fast
+    remote tier falls through to a good copy on the slower one."""
+    fast, slow = Tier("peer", MemoryBackend()), Tier("s3", MemoryBackend())
+    with CheckpointManager(str(tmp_path), tiers=[fast, slow]) as mgr:
+        mgr.save(1, tiny_state(1.0), blocking=True)
+        mgr.repository.wait_cascaded()
+        mgr.repository._delete_local_step(1)
+        [key] = [k for k in fast.backend.list("global_step1/")]
+        fast.backend.delete(key)  # manifest present, data object gone
+        out = mgr.restore(tiny_state(), step=1)
+        assert float(out["model"]["w"][0]) == 1.0
+
+
+def test_resave_clears_stale_shards(tmp_path):
+    """Re-saving a step must not let old extra files survive into the new
+    manifest (elastic rewind to fewer shards)."""
+    repo = CheckpointRepository(str(tmp_path), checksum=False)
+    sdir = repo.begin_step(9)
+    for n in ("rank00000.dsllm", "rank00001.dsllm"):
+        with open(os.path.join(sdir, n), "wb") as f:
+            f.write(os.urandom(512))
+    repo.commit_step(9)
+    assert len(repo.manifest(9).files) == 2
+    sdir = repo.begin_step(9)  # rewind onto a 1-shard layout
+    assert os.listdir(sdir) == []
+    with open(os.path.join(sdir, "rank00000.dsllm"), "wb") as f:
+        f.write(os.urandom(256))
+    m = repo.commit_step(9)
+    assert [fe.name for fe in m.files] == ["rank00000.dsllm"]
+    repo.close()
+
+
+def test_cli_verify_missing_step_fails(tmp_path):
+    with CheckpointManager(str(tmp_path)) as mgr:
+        mgr.save(1, tiny_state(1.0), blocking=True)
+    assert storage_cli.main(["--root", str(tmp_path), "verify",
+                             "--step", "999"]) == 1
+    assert storage_cli.main(["--root", str(tmp_path), "verify",
+                             "--step", "1"]) == 0
+
+
+def test_cli_verify_orphan_grace_spares_fresh_inflight(tmp_path):
+    with CheckpointManager(str(tmp_path)) as mgr:
+        mgr.save(1, tiny_state(1.0), blocking=True)
+    repo = CheckpointRepository(str(tmp_path), auto_cascade=False)
+    sdir = repo.begin_step(2)  # looks in-flight from any other process
+    with open(os.path.join(sdir, "rank00000.dsllm"), "wb") as f:
+        f.write(os.urandom(128))
+    root = str(tmp_path)
+    assert storage_cli.main(["--root", root, "verify"]) == 1  # strict
+    assert storage_cli.main(["--root", root, "verify",
+                             "--orphan-grace", "3600"]) == 0  # monitoring
+    repo.close()
+
+
+def test_resave_after_cascade_reuploads_fresh_bytes(tmp_path):
+    """Rewind-and-resave of an already-cascaded step must replace the
+    remote copy — otherwise a later local eviction would re-hydrate the
+    stale bytes."""
+    remote = Tier("peer", MemoryBackend())
+    with CheckpointManager(str(tmp_path), tiers=[remote]) as mgr:
+        mgr.save(4, tiny_state(4.0), blocking=True)
+        mgr.repository.wait_cascaded()
+        mgr.save(4, tiny_state(40.0), blocking=True)  # rewind, new content
+        mgr.repository.wait_cascaded()
+        assert not mgr.repository.cascade_errors
+        mgr.repository._delete_local_step(4)
+        out = mgr.restore(tiny_state(), step=4)       # re-hydrate
+        assert float(out["model"]["w"][0]) == 40.0, "stale remote bytes"
+
+
+# ------------------------------------------------------------ retention GC
+def test_retention_policy_math():
+    p = RetentionPolicy(keep_last_n=2, keep_every_k=10)
+    assert p.retained([1, 5, 10, 11, 12]) == {10, 11, 12}
+    assert RetentionPolicy().retained([1, 2, 3]) == {1, 2, 3}
+    assert RetentionPolicy(keep_every_k=4).retained([2, 4, 7, 8]) == {4, 8}
+
+
+def test_gc_keeps_last_n_pins_and_newest(tmp_path):
+    with CheckpointManager(
+            str(tmp_path),
+            retention=RetentionPolicy(keep_last_n=2)) as mgr:
+        mgr.save(1, tiny_state(1.0), blocking=True)
+        mgr.repository.pin(1)
+        for s in (2, 3, 4, 5, 6):
+            mgr.save(s, tiny_state(float(s)), blocking=True)
+        mgr.drain()
+        kept = mgr.repository.local_steps()
+        assert kept == [1, 5, 6]  # pinned + last 2 (newest included)
+        assert mgr.repository.gc_log  # auto-GC ran on commit
+        # pinned step still restores bit-exact
+        out = mgr.restore(tiny_state(), step=1)
+        assert float(out["model"]["w"][0]) == 1.0
+
+
+def test_gc_never_deletes_mid_cascade_step(tmp_path):
+    """A step being cascaded is protected even when retention would drop
+    it; once the cascade lands it becomes collectible."""
+    slow = Tier("slow-s3", ObjectStoreBackend(latency_s=0.15))
+    repo = CheckpointRepository(str(tmp_path), remote_tiers=[slow],
+                                retention=RetentionPolicy(keep_last_n=1),
+                                auto_gc=False, checksum=False)
+    for s in (1, 2):
+        sdir = repo.begin_step(s)
+        with open(os.path.join(sdir, "rank00000.dsllm"), "wb") as f:
+            f.write(os.urandom(2048))
+        repo.commit_step(s)
+    report = repo.gc()  # both steps still queued/cascading: keep-last-1
+    assert 1 not in report.deleted_steps, "mid-cascade step deleted"
+    assert repo.local_steps() == [1, 2]
+    repo.wait_cascaded()
+    report = repo.gc()
+    assert report.deleted_steps == [1]
+    assert repo.local_steps() == [2]
+    assert repo.tier_steps(slow) == [1, 2]  # the cascade still landed
+    repo.close()
+
+
+def test_gc_dry_run_and_remote_retention(tmp_path):
+    remote = Tier("s3", ObjectStoreBackend(),
+                  retention=RetentionPolicy(keep_last_n=2))
+    repo = CheckpointRepository(str(tmp_path), remote_tiers=[remote],
+                                checksum=False)
+    for s in (1, 2, 3):
+        sdir = repo.begin_step(s)
+        with open(os.path.join(sdir, "rank00000.dsllm"), "wb") as f:
+            f.write(os.urandom(1024))
+        repo.commit_step(s)
+    repo.wait_cascaded()
+    dry = repo.gc(retention=RetentionPolicy(keep_last_n=1), dry_run=True)
+    assert dry.deleted_steps == [1, 2] and dry.bytes_freed > 0
+    assert repo.local_steps() == [1, 2, 3]  # dry run touched nothing
+    real = repo.gc(retention=RetentionPolicy(keep_last_n=1))
+    assert repo.local_steps() == [3]
+    assert real.remote_deleted == {"s3": [1]}
+    assert repo.tier_steps(remote) == [2, 3]
+    repo.close()
+
+
+# -------------------------------------------------------------------- CLI
+def test_cli_ls_pin_unpin_gc(tmp_path, capsys):
+    with CheckpointManager(str(tmp_path)) as mgr:
+        for s in (1, 2, 3):
+            mgr.save(s, tiny_state(float(s)), blocking=True)
+    root = str(tmp_path)
+    assert storage_cli.main(["--root", root, "pin", "2"]) == 0
+    assert storage_cli.main(["--root", root, "ls"]) == 0
+    out = capsys.readouterr().out
+    assert "step          2" in out and "[pinned]" in out
+    assert "format=dsllm" in out
+    assert storage_cli.main(["--root", root, "gc", "--keep-last", "1"]) == 0
+    assert committed_steps(root) == [2, 3]  # pinned + newest survive
+    assert storage_cli.main(["--root", root, "unpin", "2"]) == 0
+    assert storage_cli.main(["--root", root, "gc", "--keep-last", "1"]) == 0
+    assert committed_steps(root) == [3]
+    assert storage_cli.main(["--root", root, "verify"]) == 0
