@@ -1,6 +1,21 @@
 #!/usr/bin/env bash
-# Tier-1 test suite (the command ROADMAP.md pins). Usage:
+# Test-suite entry points.
+#
+# Tier-1 (the command ROADMAP.md pins — the FULL suite, slow tests
+# included; this is what gates a PR):
 #   scripts/run_tests.sh [extra pytest args...]
+#
+# Fast lane (~seconds-per-file iteration loop; deselects tests marked
+# `slow` in pytest.ini — the multi-minute subprocess-mesh and end-to-end
+# system/benchmark-shaped tests). CI runs this on every job and the full
+# suite in a separate job:
+#   scripts/run_tests.sh --fast [extra pytest args...]
 set -euo pipefail
 cd "$(dirname "$0")/.."
-PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@"
+args=()
+if [[ "${1:-}" == "--fast" ]]; then
+  shift
+  args+=(-m "not slow")
+fi
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+  python -m pytest -x -q ${args[@]+"${args[@]}"} "$@"

@@ -81,7 +81,21 @@ class CheckpointManager:
                  restore_threads: Optional[int] = None,
                  tiers: Sequence[Tier] = (),
                  retention: Optional[RetentionPolicy] = None,
-                 manifest_checksums: bool = True):
+                 manifest_checksums: bool = True,
+                 world: Optional[int] = None,
+                 coordinator: Optional[Any] = None,
+                 ack_timeout_s: Optional[float] = None):
+        """``world=N`` (N > 1) or an explicit ``coordinator=`` switches
+        saves onto the multi-rank path: N simulated writer ranks, each
+        with its own engine + host-cache lane, drain a balanced partition
+        of the shards concurrently; the step becomes visible only after
+        every rank acks and the global manifest commits (two-phase
+        commit — see :mod:`repro.dist.coordinator`). ``host_cache_bytes``
+        and ``flush_threads`` stay *node totals*: they are divided across
+        the ranks, so ``world=N`` neither multiplies the staging budget
+        nor loosens back-pressure (a coordinator built by hand takes
+        per-rank values instead). Restore is unchanged (and elastic): an
+        N-rank save restores onto any mesh/world."""
         if mode not in ENGINES:
             raise ValueError(f"unknown engine mode {mode!r}; "
                              f"choose from {sorted(ENGINES)}")
@@ -91,11 +105,33 @@ class CheckpointManager:
         self.repository = CheckpointRepository(
             directory, remote_tiers=tiers, retention=retention,
             checksum=manifest_checksums)
-        self.engine: BaseCheckpointEngine = ENGINES[mode](
-            host_cache_bytes=host_cache_bytes,
-            flush_threads=flush_threads,
-            chunk_bytes=chunk_bytes,
-            throttle_mbps=throttle_mbps)
+        if coordinator is None and world is not None and world > 1:
+            from repro.dist.coordinator import Coordinator
+            coordinator = Coordinator(
+                world, mode=mode,
+                host_cache_bytes=max(1, host_cache_bytes // world),
+                flush_threads=max(1, flush_threads // world),
+                chunk_bytes=chunk_bytes,
+                throttle_mbps=throttle_mbps,
+                checksum_files=manifest_checksums,
+                ack_timeout_s=ack_timeout_s)
+        if coordinator is not None and world is not None \
+                and coordinator.world != world:
+            raise ValueError(
+                f"world={world} does not match the provided coordinator's "
+                f"world={coordinator.world}")
+        self.coordinator = coordinator
+        # Multi-rank managers save through the coordinator's per-rank
+        # engines; constructing the single-writer engine too would burn a
+        # host-cache buffer + idle flush threads per manager for a lane
+        # that never runs.
+        self.engine: Optional[BaseCheckpointEngine] = None
+        if coordinator is None:
+            self.engine = ENGINES[mode](
+                host_cache_bytes=host_cache_bytes,
+                flush_threads=flush_threads,
+                chunk_bytes=chunk_bytes,
+                throttle_mbps=throttle_mbps)
         self.restore_engine = RestoreEngine(threads=restore_threads)
         self.last_restore_stats: Optional[RestoreStats] = None
         self.last_restored_step: Optional[int] = None
@@ -125,15 +161,22 @@ class CheckpointManager:
         # it first (no-op unless the caller re-saves the same step).
         self.wait_for_commit(step)
         records, objects = plan_shards(state, group="state")
+        world = self.coordinator.world if self.coordinator is not None else 1
         objects["__checkpoint_meta__"] = {"step": step, "mode": self.mode,
-                                          "n_shards": len(records)}
-        by_rank = group_by_rank(records)
+                                          "n_shards": len(records),
+                                          "world": world}
         # in-flight marker first: a crash at any later point leaves an
         # identifiable orphan, never a resume-eligible directory.
         self.repository.begin_step(step)
         os.makedirs(future.directory, exist_ok=True)
         try:
-            self.engine.save(future.directory, by_rank, objects, future)
+            if self.coordinator is not None:
+                future.stats.extra["world"] = world
+                self.coordinator.submit(step, future.directory, records,
+                                        objects, future)
+            else:
+                by_rank = group_by_rank(records)
+                self.engine.save(future.directory, by_rank, objects, future)
         except BaseException:
             # A synchronous prologue failure (e.g. payload exceeds the
             # host cache) never reaches the committer: retract the active
@@ -197,14 +240,21 @@ class CheckpointManager:
                 except BaseException:  # engine failed: orphan, not commit
                     self.repository.abort_step(future.step)
                 else:
+                    # Multi-rank saves commit with expect_ranks: the
+                    # phase-2 gate re-validates every rank's vote before
+                    # the step becomes visible.
                     self.repository.commit_step(
                         future.step, engine_mode=self.mode,
+                        expect_ranks=future.stats.extra.get("world"),
                         meta={"n_files": future.stats.n_files,
                               "n_tensors": future.stats.n_tensors,
                               "bytes_tensors": future.stats.bytes_tensors,
                               "bytes_objects": future.stats.bytes_objects})
             except BaseException as exc:  # noqa: BLE001
                 self.commit_errors.append((future.step, repr(exc)))
+                # a failed commit leaves the step an orphan (marker still
+                # present); retract the active claim so GC can reclaim it
+                self.repository.abort_step(future.step)
             finally:
                 # prune-then-set: anyone already holding the event still
                 # wakes, and the pending map stays bounded over long runs
@@ -285,8 +335,15 @@ class CheckpointManager:
 
     # -------------------------------------------------------------- misc
     def drain(self) -> None:
-        self.wait_for_persist()
-        self.engine.drain()
+        # settle every in-flight save without raising: a failed save must
+        # not wedge shutdown (its error already surfaced to the caller via
+        # wait_for_persist/wait_for_capture and commit_errors)
+        for f in self._inflight:
+            f._persisted.wait()
+        if self.engine is not None:
+            self.engine.drain()
+        if self.coordinator is not None:
+            self.coordinator.drain()
         self._commit_q.join()
         self.repository.drain()
 
@@ -294,7 +351,10 @@ class CheckpointManager:
         self.drain()
         self._commit_q.put(None)
         self._committer.join(timeout=60)
-        self.engine.close()
+        if self.engine is not None:
+            self.engine.close()
+        if self.coordinator is not None:
+            self.coordinator.close()
         self.repository.close()
 
     def __enter__(self):

@@ -2,9 +2,17 @@
 
 Reproduces the checkpoint composition of Fig 1(c,d): every device ("rank")
 owns the shards resident on it; replicated shards (pure DP replicas) are
-written once, by the lowest-id owner (the paper's DeepSpeed setup likewise
-writes each logical shard exactly once). The shard boundaries are whatever
-the training layout dictates — the planner never reshards (paper §IV-C).
+written once each (the dedup invariant), but instead of always electing the
+lowest-id owner — which serializes every replicated byte behind rank 0 while
+the rest of the replica group idles — ownership is *balanced*: within each
+replica group (the set of devices holding identical copies of a shard),
+shards are distributed greedily by byte count, largest first, to the
+least-loaded member. No device is assigned more than ⌈group bytes / group
+size⌉ plus one shard's worth of its group's replicated bytes (the classic
+LPT bound), so a multi-writer save drains every rank's I/O lane at once
+(ByteCheckpoint's balanced writer assignment). The shard boundaries are
+whatever the training layout dictates — the planner never reshards
+(paper §IV-C).
 """
 
 from __future__ import annotations
@@ -59,47 +67,56 @@ class ShardRecord:
     device_resident: bool
 
 
-def _is_array_leaf(leaf) -> bool:
-    return isinstance(leaf, (jax.Array, np.ndarray))
+def assign_replica_writers(
+        shards: Sequence[Tuple[Any, int, Dict[int, Any]]]
+) -> Dict[Any, int]:
+    """Pick one writer per replicated shard, balanced within replica groups.
+
+    ``shards`` is ``(key, nbytes, {device_id: data})`` per unique shard;
+    the returned map is ``key -> owning device id``. Shards sharing the
+    same replica group (identical candidate device set) are spread over
+    that group greedily by byte count, largest first, onto the
+    least-loaded member (ties to the lowest device id) — so within every
+    group no device carries more than ⌈group bytes / group size⌉ plus one
+    shard of the group's bytes, and each shard gets exactly one writer.
+    """
+    by_group: Dict[Tuple[int, ...], List[Tuple[int, Any]]] = {}
+    for key, nbytes, replicas in shards:
+        by_group.setdefault(tuple(sorted(replicas)), []).append((nbytes, key))
+    owners: Dict[Any, int] = {}
+    for devices, members in by_group.items():
+        load = {d: 0 for d in devices}
+        # sort by descending size, then key, for a deterministic plan
+        for nbytes, key in sorted(members, key=lambda m: (-m[0], str(m[1]))):
+            dev = min(devices, key=lambda d: (load[d], d))
+            owners[key] = dev
+            load[dev] += nbytes
+    return owners
 
 
 def plan_shards(tree, group: str) -> Tuple[List[ShardRecord], Dict[str, Any]]:
     """Flatten ``tree``; return shard records for arrays + dict of host objects.
 
-    Replicated shards are deduplicated to their lowest-device-id owner.
+    Replicated shards are deduplicated — each unique shard is written
+    exactly once — with writers balanced across replica groups by byte
+    count (see :func:`assign_replica_writers`).
     """
     records: List[ShardRecord] = []
     objects: Dict[str, Any] = {}
+    # (pstr, idx) -> {device_id: shard data}, in traversal order
+    replicas: Dict[Tuple[str, Tuple], Dict[int, Any]] = {}
+    shapes: Dict[str, Tuple[int, ...]] = {}
+    dtypes: Dict[str, str] = {}
     leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
     for path, leaf in leaves:
         pstr = f"{group}/{_path_str(path)}"
         if isinstance(leaf, jax.Array):
-            seen: Dict[Tuple, int] = {}
+            shapes[pstr] = tuple(leaf.shape)
+            dtypes[pstr] = str(leaf.dtype)
             for shard in leaf.addressable_shards:
                 idx = normalize_index(shard.index, leaf.shape)
-                if idx in seen:
-                    continue  # replica; lowest device id wins (sorted below)
-                seen[idx] = shard.device.id
-            # second pass: keep the lowest-id owner per unique index
-            owners: Dict[Tuple, Tuple[int, Any]] = {}
-            for shard in leaf.addressable_shards:
-                idx = normalize_index(shard.index, leaf.shape)
-                cur = owners.get(idx)
-                if cur is None or shard.device.id < cur[0]:
-                    owners[idx] = (shard.device.id, shard.data)
-            for idx, (dev_id, data) in sorted(owners.items()):
-                shape = tuple(b - a for a, b in idx)
-                dtype = str(leaf.dtype)
-                nbytes = int(np.prod(shape)) * np.dtype(dtype).itemsize \
-                    if shape else np.dtype(dtype).itemsize
-                suffix = ",".join(f"{a}:{b}" for a, b in idx)
-                records.append(ShardRecord(
-                    leaf_path=pstr,
-                    tensor_name=f"{pstr}@[{suffix}]",
-                    rank=dev_id, index=idx,
-                    global_shape=tuple(leaf.shape),
-                    shape=shape, dtype=dtype, nbytes=int(nbytes),
-                    data=data, device_resident=True))
+                replicas.setdefault((pstr, idx), {})[shard.device.id] = \
+                    shard.data
         elif isinstance(leaf, np.ndarray):
             idx = tuple((0, d) for d in leaf.shape)
             suffix = ",".join(f"{a}:{b}" for a, b in idx)
@@ -110,6 +127,25 @@ def plan_shards(tree, group: str) -> Tuple[List[ShardRecord], Dict[str, Any]]:
                 nbytes=int(leaf.nbytes), data=leaf, device_resident=False))
         else:
             objects[pstr] = leaf
+    if replicas:
+        shard_meta = []
+        for (pstr, idx), by_dev in replicas.items():
+            shape = tuple(b - a for a, b in idx)
+            itemsize = np.dtype(dtypes[pstr]).itemsize
+            nbytes = int(np.prod(shape)) * itemsize if shape else itemsize
+            shard_meta.append(((pstr, idx), int(nbytes), by_dev))
+        owners = assign_replica_writers(shard_meta)
+        for (pstr, idx), nbytes, by_dev in shard_meta:
+            dev_id = owners[(pstr, idx)]
+            shape = tuple(b - a for a, b in idx)
+            suffix = ",".join(f"{a}:{b}" for a, b in idx)
+            records.append(ShardRecord(
+                leaf_path=pstr,
+                tensor_name=f"{pstr}@[{suffix}]",
+                rank=dev_id, index=idx,
+                global_shape=shapes[pstr],
+                shape=shape, dtype=dtypes[pstr], nbytes=nbytes,
+                data=by_dev[dev_id], device_resident=True))
     return records, objects
 
 

@@ -1,0 +1,17 @@
+"""Multi-rank checkpoint coordination (simulated N-writer world).
+
+See :mod:`repro.dist.coordinator` for the save protocol (balanced writer
+partition → per-rank engine lanes → phase-1 rank-manifest votes → ack
+collective → phase-2 global commit) and :mod:`repro.dist.barrier` for the
+failure-aware collective primitive underneath it.
+"""
+
+from .barrier import BarrierBroken, CollectiveBarrier
+from .coordinator import (Coordinator, FAULT_POINTS, RANK_ENGINES,
+                          RankRuntime, partition_records)
+
+__all__ = [
+    "BarrierBroken", "CollectiveBarrier",
+    "Coordinator", "FAULT_POINTS", "RANK_ENGINES", "RankRuntime",
+    "partition_records",
+]

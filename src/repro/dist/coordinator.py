@@ -1,0 +1,330 @@
+"""Multi-rank checkpoint coordinator: balanced writers, two-phase commit.
+
+The paper's evaluation (§VI) is fundamentally multi-writer — every rank of
+the DP×TP×PP mesh drains its own shards concurrently, and the throughput
+gain comes from all ranks' I/O lanes running at once. This module simulates
+that world inside one process:
+
+* :class:`RankRuntime` — one writer rank as a dedicated thread owning its
+  *own* :class:`~repro.core.engine.DataMovementEngine` +
+  :class:`~repro.core.host_cache.HostCache` lane (via a per-rank
+  :class:`~repro.core.baselines.DataStatesEngine`), draining only the
+  shards assigned to it, concurrently with every other rank;
+* :class:`Coordinator` — owns N rank runtimes and runs the save protocol:
+
+  1. **partition** — :func:`partition_records` maps the (already
+     replica-balanced, see ``core.distributed.plan_shards``) shard records
+     onto writer ranks, preserving device locality when there are at least
+     as many devices as ranks and balancing by byte count otherwise;
+  2. **phase 1 (prepare)** — each rank persists its ``rankNNNNN.dsllm``
+     file through its engine, then atomically writes its
+     :class:`~repro.storage.manifest.RankManifest` vote (sizes + checksums
+     hashed on the rank's own lane, in parallel);
+  3. **ack collective** — ranks meet at a :class:`CollectiveBarrier`; a
+     dead rank poisons it, a stalled rank times it out, and either failure
+     propagates to the save's aggregated future as an error;
+  4. **phase 2 (commit)** — only once the collective completes does the
+     aggregated :class:`~repro.core.engine.CheckpointFuture` report
+     ``persisted``; the manager's committer lane then writes the global
+     ``StepManifest`` atomically last, with ``expect_ranks=N`` so the
+     catalog re-validates every vote before making the step visible.
+
+A crash, stall, or lie at *any* point before phase 2 leaves the step as an
+in-flight orphan the catalog never selects — the single-writer crash
+consistency of the repository, preserved under N concurrent writers.
+
+``fault_hook`` is the deterministic fault-injection seam used by
+``tests/test_fault_injection.py``: it is called at named protocol points
+(``"mid_file"``, ``"after_upload"``, ``"before_ack"``) with the rank and
+save context, and may raise (kill) or block (stall) the rank there.
+"""
+
+from __future__ import annotations
+
+import os
+import queue
+import threading
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+from repro.core.baselines import (DataStatesEngine, DataStatesOldEngine,
+                                  rank_file)
+from repro.core.distributed import ShardRecord
+from repro.core.engine import CheckpointFuture
+from repro.storage.manifest import RankManifest
+
+from .barrier import BarrierBroken, CollectiveBarrier
+
+RANK_ENGINES = {
+    "datastates": DataStatesEngine,
+    "datastates-old": DataStatesOldEngine,
+}
+
+# Named fault-injection points, in protocol order.
+FAULT_POINTS = ("mid_file", "after_upload", "before_ack")
+
+FaultHook = Callable[[str, int, Dict[str, Any]], None]
+
+
+def partition_records(records: Sequence[ShardRecord], world: int
+                      ) -> Dict[int, List[ShardRecord]]:
+    """Map shard records onto ``world`` writer ranks.
+
+    With at least as many owning devices as ranks, whole device groups are
+    kept together (rank ← sorted-device-position mod world) — each rank
+    drains "its" devices' shards, the paper's locality. With fewer devices
+    than ranks (e.g. a single-host simulation), individual records are
+    spread greedily by byte count, largest first, onto the least-loaded
+    rank, so every lane gets ~1/world of the bytes. Every rank appears in
+    the result (possibly with an empty list): each must write its file and
+    cast its phase-1 vote, or the step cannot commit.
+    """
+    if world < 1:
+        raise ValueError(f"world must be >= 1, got {world}")
+    out: Dict[int, List[ShardRecord]] = {r: [] for r in range(world)}
+    by_dev: Dict[int, List[ShardRecord]] = {}
+    for rec in records:
+        by_dev.setdefault(rec.rank, []).append(rec)
+    if len(by_dev) >= world:
+        for pos, dev in enumerate(sorted(by_dev)):
+            out[pos % world].extend(by_dev[dev])
+        return out
+    load = {r: 0 for r in range(world)}
+    for rec in sorted(records, key=lambda r: (-r.nbytes, r.tensor_name)):
+        r = min(load, key=lambda k: (load[k], k))
+        out[r].append(rec)
+        load[r] += rec.nbytes
+    return out
+
+
+class _SaveJob:
+    """Shared per-save state: capture/ack aggregation onto one future."""
+
+    def __init__(self, step: int, directory: str, world: int,
+                 future: CheckpointFuture, barrier: CollectiveBarrier,
+                 ack_timeout_s: Optional[float]):
+        self.step = step
+        self.directory = directory
+        self.world = world
+        self.future = future
+        self.barrier = barrier
+        self.ack_timeout_s = ack_timeout_s
+        self.lock = threading.Lock()
+        self.n_captured = 0
+        self.failed = False
+        self.settled = False
+        self.timer: Optional[threading.Timer] = None
+
+    # -- rank-side callbacks -------------------------------------------------
+    def rank_captured(self, rank: int, fut: CheckpointFuture) -> None:
+        with self.lock:
+            self.n_captured += 1
+            done = self.n_captured == self.world and not self.failed
+        if done and not self.future.captured:
+            self.future._set_captured()
+
+    def _merge_stats(self, fut: CheckpointFuture) -> None:
+        s, d = fut.stats, self.future.stats
+        with self.lock:
+            d.n_files += s.n_files
+            d.n_tensors += s.n_tensors
+            d.bytes_tensors += s.bytes_tensors
+            d.bytes_objects += s.bytes_objects
+            d.serialize_s += s.serialize_s
+            d.stage_s += s.stage_s
+            d.flush_s += s.flush_s
+
+    def rank_acked(self, rank: int, fut: CheckpointFuture) -> None:
+        """Phase-1 vote cast: meet the ack collective. The save's future
+        turns ``persisted`` only when *every* rank reaches this point —
+        the gate the committer (phase 2) waits behind."""
+        self._merge_stats(fut)
+        self.barrier.wait(timeout=self.ack_timeout_s)
+        with self.lock:
+            settle = not self.failed and not self.settled
+            self.settled = self.settled or settle
+        if settle:
+            self._cancel_watchdog()
+            self.future._set_persisted()
+
+    def rank_failed(self, rank: int, exc: BaseException) -> None:
+        with self.lock:
+            first = not self.failed and not self.settled
+            self.failed = True
+        if first:
+            self.barrier.poison(
+                f"rank {rank} failed during save of step {self.step}: "
+                f"{exc!r}", rank=rank)
+            self._cancel_watchdog()
+            self.future._set_error(exc)
+
+    # -- coordinator side ----------------------------------------------------
+    def start_watchdog(self) -> None:
+        """Arm the ack timeout. Called by the *first rank to dequeue* the
+        job, not at submit: the manager pipelines saves, and a job can sit
+        behind an earlier step in the rank FIFOs for longer than the
+        timeout — the watchdog must bound save latency (first rank
+        starting → last ack), never queue wait."""
+        if self.ack_timeout_s is None:
+            return
+        with self.lock:
+            if self.timer is not None or self.settled or self.failed:
+                return
+            self.timer = threading.Timer(self.ack_timeout_s,
+                                         self._on_timeout)
+            self.timer.daemon = True
+            self.timer.start()
+
+    def _on_timeout(self) -> None:
+        if self.future.persisted:
+            return
+        self.rank_failed(-1, TimeoutError(
+            f"step {self.step}: not all ranks acked within "
+            f"{self.ack_timeout_s}s — a writer is stalled or dead"))
+
+    def _cancel_watchdog(self) -> None:
+        if self.timer is not None:
+            self.timer.cancel()
+
+
+class RankRuntime:
+    """One simulated writer rank: a thread + its own engine/cache lane."""
+
+    def __init__(self, rank: int, world: int, *, mode: str = "datastates",
+                 host_cache_bytes: int = 1 << 30, flush_threads: int = 2,
+                 chunk_bytes: int = 4 << 20,
+                 throttle_mbps: Optional[float] = None,
+                 checksum_files: bool = True,
+                 fault_hook: Optional[FaultHook] = None):
+        if mode not in RANK_ENGINES:
+            raise ValueError(
+                f"coordinator ranks require a DataMovementEngine mode, "
+                f"got {mode!r} (choose from {sorted(RANK_ENGINES)})")
+        self.rank = rank
+        self.world = world
+        self.checksum_files = checksum_files
+        self.fault_hook = fault_hook
+        self.engine = RANK_ENGINES[mode](
+            host_cache_bytes=host_cache_bytes, flush_threads=flush_threads,
+            chunk_bytes=chunk_bytes, throttle_mbps=throttle_mbps)
+        self._q: "queue.Queue[Optional[tuple]]" = queue.Queue()
+        self._thread = threading.Thread(
+            target=self._worker, daemon=True, name=f"dsllm-rank-{rank}")
+        self._thread.start()
+
+    @property
+    def host_cache(self):
+        return self.engine.host_cache
+
+    def submit(self, job: _SaveJob, records: List[ShardRecord],
+               objects: Dict[str, Any]) -> None:
+        self._q.put((job, records, objects))
+
+    # ------------------------------------------------------------- internals
+    def _fault(self, point: str, job: _SaveJob, files: List[str]) -> None:
+        if self.fault_hook is not None:
+            self.fault_hook(point, self.rank, {
+                "step": job.step, "directory": job.directory,
+                "files": [os.path.join(job.directory, n) for n in files]})
+
+    def _worker(self) -> None:
+        while True:
+            item = self._q.get()
+            if item is None:
+                self._q.task_done()
+                return
+            job, records, objects = item
+            try:
+                self._run_save(job, records, objects)
+            except BaseException as exc:  # noqa: BLE001
+                job.rank_failed(self.rank, exc)
+            finally:
+                self._q.task_done()
+
+    def _run_save(self, job: _SaveJob, records: List[ShardRecord],
+                  objects: Dict[str, Any]) -> None:
+        job.start_watchdog()  # first rank to dequeue arms the ack timeout
+        fut = CheckpointFuture(job.step, job.directory)
+        # phase 1a: drain this rank's shards through this rank's lane
+        self.engine.save(job.directory, {self.rank: records}, objects, fut)
+        fut.wait_captured()
+        job.rank_captured(self.rank, fut)
+        fut.wait_persisted()
+        files = [os.path.basename(rank_file(job.directory, self.rank))]
+        self._fault("mid_file", job, files)
+        self._fault("after_upload", job, files)
+        # phase 1b: the vote — sizes + checksums hashed on this lane
+        vote = RankManifest.build(
+            job.directory, rank=self.rank, world=job.world, step=job.step,
+            filenames=files, checksum=self.checksum_files)
+        vote.write(job.directory)
+        self._fault("before_ack", job, files)
+        job.rank_acked(self.rank, fut)
+
+    def drain(self) -> None:
+        self._q.join()
+        self.engine.drain()
+
+    def close(self) -> None:
+        self._q.put(None)
+        self.engine.close()
+        self._thread.join(timeout=10)
+
+
+class Coordinator:
+    """Owns N rank runtimes and the save protocol across them."""
+
+    def __init__(self, world: int, *, mode: str = "datastates",
+                 host_cache_bytes: int = 1 << 30, flush_threads: int = 2,
+                 chunk_bytes: int = 4 << 20,
+                 throttle_mbps: Optional[float] = None,
+                 checksum_files: bool = True,
+                 ack_timeout_s: Optional[float] = None,
+                 fault_hook: Optional[FaultHook] = None):
+        if world < 1:
+            raise ValueError(f"world must be >= 1, got {world}")
+        self.world = world
+        self.mode = mode
+        self.ack_timeout_s = ack_timeout_s
+        self.ranks = [
+            RankRuntime(r, world, mode=mode,
+                        host_cache_bytes=host_cache_bytes,
+                        flush_threads=flush_threads, chunk_bytes=chunk_bytes,
+                        throttle_mbps=throttle_mbps,
+                        checksum_files=checksum_files, fault_hook=fault_hook)
+            for r in range(world)]
+
+    def submit(self, step: int, directory: str,
+               records: Sequence[ShardRecord], objects: Dict[str, Any],
+               future: CheckpointFuture) -> None:
+        """Fan one save out across all ranks. Returns immediately; the
+        aggregated ``future`` captures when every rank has captured and
+        persists only when every rank has voted *and* acked (phase 1
+        complete — the committer performs phase 2 behind it)."""
+        by_rank = partition_records(records, self.world)
+        # objects ride with the least-loaded rank (deterministic tie-break)
+        loads = {r: sum(rec.nbytes for rec in recs)
+                 for r, recs in by_rank.items()}
+        obj_rank = min(loads, key=lambda r: (loads[r], r))
+        # One collective per save: the manager pipelines steps, and ranks
+        # reach the ack point of different steps at different times — a
+        # shared barrier would mix generations across steps.
+        job = _SaveJob(step, directory, self.world, future,
+                       CollectiveBarrier(self.world), self.ack_timeout_s)
+        for rank in self.ranks:
+            rank.submit(job, by_rank[rank.rank],
+                        objects if rank.rank == obj_rank else {})
+
+    def drain(self) -> None:
+        for rank in self.ranks:
+            rank.drain()
+
+    def close(self) -> None:
+        for rank in self.ranks:
+            rank.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False

@@ -37,8 +37,9 @@ Layers:
 
 from .backend import (BackendError, LocalBackend, MemoryBackend,
                       ObjectStoreBackend, StorageBackend)
-from .manifest import (FileEntry, StepManifest, detect_format, file_checksum,
-                       probe_step_complete)
+from .manifest import (FileEntry, ManifestError, RankManifest, StepManifest,
+                       detect_format, file_checksum, probe_step_complete,
+                       rank_manifest_name, read_rank_manifests)
 from .repository import (CascadeEvent, CheckpointRepository, GCReport,
                          RetentionPolicy, Tier, VerifyResult,
                          committed_steps, orphan_steps)
@@ -46,8 +47,9 @@ from .repository import (CascadeEvent, CheckpointRepository, GCReport,
 __all__ = [
     "BackendError", "LocalBackend", "MemoryBackend", "ObjectStoreBackend",
     "StorageBackend",
-    "FileEntry", "StepManifest", "detect_format", "file_checksum",
-    "probe_step_complete",
+    "FileEntry", "ManifestError", "RankManifest", "StepManifest",
+    "detect_format", "file_checksum", "probe_step_complete",
+    "rank_manifest_name", "read_rank_manifests",
     "CascadeEvent", "CheckpointRepository", "GCReport", "RetentionPolicy",
     "Tier", "VerifyResult", "committed_steps", "orphan_steps",
 ]

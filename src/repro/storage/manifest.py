@@ -13,6 +13,22 @@ changes), each chunk checksummed on device, and the chunk digests folded
 order-sensitively, so block reorder/truncation within *and* across chunks
 is caught.
 
+Multi-rank saves add a second manifest layer — the *two-phase commit*.
+Each writer rank persists its shard files, then writes a per-rank
+:class:`RankManifest` (``rankNNNNN.manifest.json``, atomic tmp+rename):
+the rank's phase-1 "prepared" vote, listing its files with sizes and
+checksums computed on the rank's own lane. Only after every rank has
+voted does the coordinator commit the global :class:`StepManifest` —
+phase 2 — and :meth:`StepManifest.build` with ``expect_ranks=N``
+cross-checks the votes first: all N rank manifests present, every
+declared file on disk at its declared size, and no undeclared shard
+files. A crash or straggler at any earlier point leaves a step with data
+files (and possibly some votes) but no global manifest — invisible to
+``latest_step``/restore/cascade, exactly like a single-writer crash
+victim. Per-rank checksums are *reused* by the global manifest, so the
+commit path never recomputes what the rank lanes already hashed in
+parallel.
+
 :func:`probe_step_complete` is the legacy-compatibility path: step
 directories written before the repository existed have no manifest, so
 eligibility falls back to a per-format completeness probe (``.dsllm``
@@ -26,6 +42,7 @@ import glob
 import json
 import os
 import pickle
+import re
 import struct
 import threading
 import time
@@ -34,11 +51,19 @@ from typing import Any, Dict, List, Optional, Tuple
 import numpy as np
 
 MANIFEST_VERSION = 1
+RANK_MANIFEST_VERSION = 1
 CHECKSUM_CHUNK_BYTES = 4 << 20
 CHECKSUM_ALGO = "pallas-weighted-u32-chunk4m-v1"
 
+_RANK_MANIFEST_RE = re.compile(r"^rank(\d+)\.manifest\.json$")
+
 # Filenames that belong to the repository, not the checkpoint payload.
 _CONTROL_SUFFIXES = (".tmp",)
+
+
+class ManifestError(ValueError):
+    """A manifest failed to build or validate (e.g. incomplete phase-1
+    votes of a multi-rank save) — the step must not be committed."""
 
 
 def file_checksum(path: str,
@@ -76,6 +101,84 @@ class FileEntry:
     name: str
     nbytes: int
     checksum: Optional[int] = None
+
+
+def rank_manifest_name(rank: int) -> str:
+    return f"rank{rank:05d}.manifest.json"
+
+
+@dataclasses.dataclass
+class RankManifest:
+    """One writer rank's phase-1 vote: "my shard files are durable".
+
+    Written atomically (tmp + rename) by the rank itself after its engine
+    reports persistence, *before* the rank acks the coordinator. Lists the
+    rank's files with sizes and checksums — computed on the rank's lane,
+    in parallel with the other ranks, so the global commit can reuse them
+    instead of re-hashing the whole step serially.
+    """
+
+    rank: int
+    world: int
+    step: int
+    files: List[FileEntry]
+    checksum_algo: Optional[str] = None
+    created_unix: float = 0.0
+    version: int = RANK_MANIFEST_VERSION
+
+    def to_json_bytes(self) -> bytes:
+        d = dataclasses.asdict(self)
+        d["files"] = [dataclasses.asdict(f) for f in self.files]
+        return json.dumps(d, indent=1, sort_keys=True).encode()
+
+    @classmethod
+    def from_json_bytes(cls, data: bytes) -> "RankManifest":
+        d = json.loads(data.decode())
+        files = [FileEntry(**f) for f in d.pop("files", [])]
+        known = {f.name for f in dataclasses.fields(cls)}
+        return cls(files=files, **{k: v for k, v in d.items() if k in known})
+
+    @classmethod
+    def build(cls, sdir: str, *, rank: int, world: int, step: int,
+              filenames: List[str], checksum: bool = True) -> "RankManifest":
+        files = []
+        for n in sorted(filenames):
+            path = os.path.join(sdir, n)
+            files.append(FileEntry(
+                name=n, nbytes=os.path.getsize(path),
+                checksum=file_checksum(path) if checksum else None))
+        return cls(rank=rank, world=world, step=step, files=files,
+                   checksum_algo=CHECKSUM_ALGO if checksum else None,
+                   created_unix=time.time())
+
+    def write(self, sdir: str) -> str:
+        """Atomic write (tmp + rename): the vote either exists complete or
+        not at all — a crash mid-write never leaves a parseable vote."""
+        from repro.core.layout import maybe_fsync
+        path = os.path.join(sdir, rank_manifest_name(self.rank))
+        tmp = f"{path}.tmp"
+        with open(tmp, "wb") as f:
+            f.write(self.to_json_bytes())
+            f.flush()
+            maybe_fsync(f.fileno())
+        os.replace(tmp, path)
+        return path
+
+
+def read_rank_manifests(sdir: str) -> Dict[int, RankManifest]:
+    """All parseable phase-1 votes in a step directory, keyed by rank."""
+    out: Dict[int, RankManifest] = {}
+    for n in sorted(os.listdir(sdir)):
+        if not _RANK_MANIFEST_RE.match(n):
+            continue
+        try:
+            with open(os.path.join(sdir, n), "rb") as f:
+                rm = RankManifest.from_json_bytes(f.read())
+        except (OSError, ValueError) as exc:
+            raise ManifestError(f"unreadable rank manifest {n!r}: {exc}") \
+                from exc
+        out[rm.rank] = rm
+    return out
 
 
 @dataclasses.dataclass
@@ -118,18 +221,75 @@ class StepManifest:
     @classmethod
     def build(cls, sdir: str, step: int, *, engine_mode: Optional[str] = None,
               checksum: bool = True,
-              meta: Optional[Dict[str, Any]] = None) -> "StepManifest":
-        """Scan a fully-persisted step directory into a manifest."""
+              meta: Optional[Dict[str, Any]] = None,
+              expect_ranks: Optional[int] = None) -> "StepManifest":
+        """Scan a fully-persisted step directory into a manifest.
+
+        With ``expect_ranks=N`` (a multi-rank save), the phase-1 votes are
+        validated first: all N rank manifests must be present and claim
+        ``world == N``, every file a vote declares must be on disk at the
+        declared size, and no undeclared shard file may exist. Any
+        violation raises :class:`ManifestError` — the commit fails and the
+        step stays an invisible orphan. Checksums declared by the votes
+        are reused, so the global commit never re-hashes payload bytes the
+        rank lanes already hashed in parallel.
+        """
         names = sorted(
             n for n in os.listdir(sdir)
             if os.path.isfile(os.path.join(sdir, n))
             and not any(s in n for s in _CONTROL_SUFFIXES))
+        declared: Dict[str, FileEntry] = {}
+        if expect_ranks is not None:
+            votes = read_rank_manifests(sdir)
+            missing = sorted(set(range(expect_ranks)) - set(votes))
+            if missing:
+                raise ManifestError(
+                    f"step {step}: rank manifests missing for ranks "
+                    f"{missing} of {expect_ranks} — not every writer "
+                    f"prepared; refusing to commit")
+            for rank, rm in votes.items():
+                if rank >= expect_ranks or rm.world != expect_ranks:
+                    raise ManifestError(
+                        f"step {step}: rank manifest {rank} claims world "
+                        f"{rm.world}, coordinator expects {expect_ranks}")
+                for fe in rm.files:
+                    path = os.path.join(sdir, fe.name)
+                    if not os.path.isfile(path):
+                        raise ManifestError(
+                            f"step {step}: rank {rank} declared "
+                            f"{fe.name!r} but it is not on disk")
+                    if os.path.getsize(path) != fe.nbytes:
+                        raise ManifestError(
+                            f"step {step}: {fe.name!r} is "
+                            f"{os.path.getsize(path)} B on disk, rank "
+                            f"{rank} declared {fe.nbytes} B")
+                    if fe.name in declared:
+                        raise ManifestError(
+                            f"step {step}: {fe.name!r} declared by two "
+                            f"ranks — writer assignment broke the dedup "
+                            f"invariant")
+                    declared[fe.name] = fe
+            undeclared = [n for n in names
+                          if n not in declared
+                          and not _RANK_MANIFEST_RE.match(n)]
+            if undeclared:
+                raise ManifestError(
+                    f"step {step}: files {undeclared} present but not "
+                    f"declared by any rank manifest — stale shards or a "
+                    f"foreign writer; refusing to bless them")
         files = []
         for n in names:
             path = os.path.join(sdir, n)
-            files.append(FileEntry(
-                name=n, nbytes=os.path.getsize(path),
-                checksum=file_checksum(path) if checksum else None))
+            fe = declared.get(n)
+            if fe is not None and (fe.checksum is not None or not checksum):
+                files.append(fe)  # reuse the rank lane's hash
+            else:
+                files.append(FileEntry(
+                    name=n, nbytes=os.path.getsize(path),
+                    checksum=file_checksum(path) if checksum else None))
+        if expect_ranks is not None:
+            meta = dict(meta or {})
+            meta.setdefault("world", expect_ranks)
         return cls(step=step, files=files, format=detect_format(names),
                    engine_mode=engine_mode,
                    checksum_algo=CHECKSUM_ALGO if checksum else None,

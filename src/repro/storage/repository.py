@@ -309,12 +309,19 @@ class CheckpointRepository:
             self._active.discard(step)
 
     def commit_step(self, step: int, *, engine_mode: Optional[str] = None,
-                    meta: Optional[Dict[str, Any]] = None) -> StepManifest:
+                    meta: Optional[Dict[str, Any]] = None,
+                    expect_ranks: Optional[int] = None) -> StepManifest:
         """Make a fully-persisted step visible: build its manifest (sizes +
-        kernel checksums) and write it atomically *last*."""
+        kernel checksums) and write it atomically *last*.
+
+        ``expect_ranks`` enables the multi-rank phase-2 gate: the manifest
+        build validates every rank's phase-1 vote (see
+        :meth:`StepManifest.build`) and raises instead of committing a
+        partially-written step."""
         sdir = self.step_dir(step)
         manifest = StepManifest.build(sdir, step, engine_mode=engine_mode,
-                                      checksum=self.checksum, meta=meta)
+                                      checksum=self.checksum, meta=meta,
+                                      expect_ranks=expect_ranks)
         if not manifest.files:
             raise BackendError(
                 f"refusing to commit empty step directory {sdir!r}")

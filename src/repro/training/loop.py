@@ -104,7 +104,12 @@ class Trainer:
         crash-interrupted save can never be resumed from; with
         ``step=None`` a damaged-but-committed step falls back to the
         previous complete one, and a step evicted from the local tier is
-        re-hydrated from the first remote tier that holds it.
+        re-hydrated from the first remote tier that holds it. Multi-rank
+        saves (``CheckpointManager(world=N)``) follow the same rule — a
+        step only commits once every writer rank acked its phase-1 vote,
+        so a rank killed mid-save lands this resume on the previous
+        committed step — and restore is elastic across worlds: an N-rank
+        save resumes onto any M-rank mesh.
 
         The manager's :class:`~repro.core.restore.RestoreEngine` indexes
         the step directory once, plans shard↔target intersections, and fans

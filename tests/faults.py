@@ -1,0 +1,70 @@
+"""Deterministic fault injection for multi-rank checkpoint saves.
+
+The :class:`~repro.dist.coordinator.Coordinator` calls its ``fault_hook``
+at named protocol points, per rank, with the save context. The
+:class:`FaultInjector` here is that hook: armed with a (point, rank, step)
+triple it deterministically kills or stalls exactly that rank exactly
+there, so tests can walk every window of the two-phase commit:
+
+* ``"mid_file"``   — fired after the rank's engine persisted its file;
+  the injector *truncates the file* before dying, leaving the footer-less
+  partial a real SIGKILL mid-write leaves on disk;
+* ``"after_upload"`` — data file complete and durable, but the rank dies
+  before casting its phase-1 vote (no rank manifest);
+* ``"before_ack"`` — vote written, rank dies before the ack collective:
+  every byte of the step is on disk, yet phase 2 must never run.
+
+``action="stall"`` blocks the rank on an event instead of killing it
+(the straggler case — the coordinator's ack timeout must fire); call
+:meth:`release` to let the stalled rank finish so engines can drain.
+"""
+
+from __future__ import annotations
+
+import os
+import threading
+from typing import Any, Dict, Optional
+
+
+class InjectedFault(RuntimeError):
+    """The deterministic 'kill' raised inside a writer rank."""
+
+
+class FaultInjector:
+    """Arm one fault at one protocol point of one rank (optionally one
+    step); pass the instance as ``Coordinator(fault_hook=...)``."""
+
+    def __init__(self, point: str, rank: int, *, step: Optional[int] = None,
+                 action: str = "die"):
+        assert action in ("die", "stall"), action
+        self.point = point
+        self.rank = rank
+        self.step = step
+        self.action = action
+        self.fired = threading.Event()
+        self._release = threading.Event()
+        self.log = []  # every (point, rank, step) the hook saw
+
+    def __call__(self, point: str, rank: int, info: Dict[str, Any]) -> None:
+        self.log.append((point, rank, info["step"]))
+        if point != self.point or rank != self.rank:
+            return
+        if self.step is not None and info["step"] != self.step:
+            return
+        self.fired.set()
+        if self.action == "stall":
+            self._release.wait()
+            return
+        if point == "mid_file":
+            # leave what a kill -9 mid-write leaves: a footer-less partial
+            for path in info["files"]:
+                if os.path.exists(path):
+                    with open(path, "r+b") as f:
+                        f.truncate(max(os.path.getsize(path) // 2, 1))
+        raise InjectedFault(
+            f"injected fault: rank {rank} killed at {point!r} "
+            f"(step {info['step']})")
+
+    def release(self) -> None:
+        """Un-stall the rank (so engines/queues can drain at teardown)."""
+        self._release.set()

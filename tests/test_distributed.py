@@ -5,6 +5,10 @@ import pytest
 
 from conftest import run_in_subprocess
 
+# Whole-module slow marker: subprocess runs with 8 virtual devices; the
+# fast lane (scripts/run_tests.sh --fast) deselects these.
+pytestmark = pytest.mark.slow
+
 
 def test_sharded_save_dedup_and_elastic_restore():
     out = run_in_subprocess(r"""

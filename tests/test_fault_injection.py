@@ -1,0 +1,193 @@
+"""Fault-injection harness for the multi-rank two-phase commit.
+
+Acceptance (ISSUE 3): a killed/stalled rank at any protocol point must
+leave the step invisible — no global manifest, ``latest_step`` falls back
+to the previous committed step, restore resumes from it, and
+``storage.cli verify`` exits non-zero — and training resumed afterwards
+continues from the previous committed step.
+"""
+
+import glob
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from faults import FaultInjector, InjectedFault
+
+from repro.core import CheckpointError, CheckpointManager, latest_step, \
+    step_dir
+from repro.dist import BarrierBroken, CollectiveBarrier, Coordinator
+from repro.storage import cli as storage_cli
+from repro.storage.manifest import read_rank_manifests
+
+WORLD = 3
+
+
+def tiny_state(tag: float = 0.0):
+    return {"model": {f"w{i}": jnp.arange(256, dtype=jnp.float32) + tag + i
+                      for i in range(2 * WORLD)},
+            "meta": {"step": int(tag)}}
+
+
+def manager_with_fault(tmp_path, injector, **kw):
+    coord = Coordinator(WORLD, fault_hook=injector, ack_timeout_s=30.0,
+                        checksum_files=kw.pop("checksum_files", True))
+    return CheckpointManager(str(tmp_path), coordinator=coord, **kw)
+
+
+def assert_step2_never_visible(root: str):
+    """The shared acceptance block: step 2's save was killed, step 1 is
+    the newest committed step, and the CLI flags the damage."""
+    assert latest_step(root) == 1, "killed save became resume-eligible"
+    with CheckpointManager(root) as mgr2:
+        assert mgr2.latest_step() == 1
+        out = mgr2.restore(tiny_state())
+        assert mgr2.last_restored_step == 1
+        assert float(out["model"]["w0"][1]) == 2.0  # tag 1.0 payload
+    # non-zero exit gates automated resume (step 2 is an orphan)
+    assert storage_cli.main(["--root", root, "verify"]) == 1
+    # ...and GC with no grace reclaims exactly the victim
+    assert storage_cli.main(["--root", root, "gc", "--orphans",
+                             "--orphan-grace", "0"]) == 0
+    assert not os.path.isdir(step_dir(root, 2))
+    assert os.path.isdir(step_dir(root, 1))
+    assert storage_cli.main(["--root", root, "verify"]) == 0
+
+
+@pytest.mark.parametrize("point", ["mid_file", "after_upload", "before_ack"])
+def test_killed_rank_leaves_no_commit(tmp_path, point):
+    """Kill rank 1 at each window of the protocol: data without a vote,
+    a truncated file, or a full vote without an ack — the global commit
+    must be absent in every case."""
+    injector = FaultInjector(point, rank=1, step=2)
+    with manager_with_fault(tmp_path, injector) as mgr:
+        mgr.save(1, tiny_state(1.0), blocking=True)
+        with pytest.raises(CheckpointError) as ei:
+            mgr.save(2, tiny_state(2.0), blocking=True)
+        assert isinstance(ei.value.__cause__, (InjectedFault, BarrierBroken))
+        assert injector.fired.is_set()
+        mgr.wait_for_commit()
+        assert not mgr.repository.has_manifest(2)
+    sdir = step_dir(str(tmp_path), 2)
+    if point == "before_ack":
+        # every byte on disk — all files, all votes — yet phase 2 never ran
+        assert len(read_rank_manifests(sdir)) == WORLD
+        assert len(glob.glob(os.path.join(sdir, "*.dsllm"))) == WORLD
+    else:
+        assert 1 not in read_rank_manifests(sdir)  # the victim never voted
+    assert_step2_never_visible(str(tmp_path))
+
+
+def test_stalled_rank_times_out_without_commit(tmp_path):
+    """A stalled (not dead) rank: the coordinator's watchdog converts the
+    missing ack into a save failure; the step stays invisible. Releasing
+    the straggler later must not resurrect the step."""
+    injector = FaultInjector("before_ack", rank=2, step=2, action="stall")
+    # checksums off: the first Pallas checksum jit-compile could outlast
+    # the deliberately tight 1s watchdog and kill the healthy step-1 save
+    coord = Coordinator(WORLD, fault_hook=injector, ack_timeout_s=1.0,
+                        checksum_files=False)
+    with CheckpointManager(str(tmp_path), coordinator=coord) as mgr:
+        mgr.save(1, tiny_state(1.0), blocking=True)
+        fut = mgr.save(2, tiny_state(2.0))
+        with pytest.raises(CheckpointError) as ei:
+            fut.wait_persisted(timeout=30)
+        assert isinstance(ei.value.__cause__, TimeoutError)
+        mgr.wait_for_commit()
+        assert not mgr.repository.has_manifest(2)
+        assert mgr.commit_errors == []  # aborted before commit, not during
+        # let the straggler finish so drain()/close() can settle
+        injector.release()
+        mgr.drain()
+        # the late ack hit a poisoned collective: still no manifest
+        assert not mgr.repository.has_manifest(2)
+    assert_step2_never_visible(str(tmp_path))
+
+
+def test_commit_gate_rejects_tampered_step(tmp_path):
+    """Phase 2 itself re-validates the votes: a vote deleted (or a stray
+    undeclared shard added) between ack and commit fails the commit."""
+    from repro.storage import CheckpointRepository, ManifestError
+    with manager_with_fault(tmp_path, None) as mgr:
+        mgr.save(1, tiny_state(1.0), blocking=True)
+    sdir = step_dir(str(tmp_path), 1)
+    repo = CheckpointRepository(str(tmp_path), auto_cascade=False)
+    # stray shard no rank declared
+    with open(os.path.join(sdir, "rank00099.dsllm"), "wb") as f:
+        f.write(os.urandom(64))
+    with pytest.raises(ManifestError, match="not\\s+declared"):
+        repo.commit_step(1, expect_ranks=WORLD)
+    os.unlink(os.path.join(sdir, "rank00099.dsllm"))
+    # missing vote
+    os.unlink(os.path.join(sdir, "rank00001.manifest.json"))
+    with pytest.raises(ManifestError, match="missing"):
+        repo.commit_step(1, expect_ranks=WORLD)
+    repo.close()
+
+
+@pytest.mark.slow
+def test_resumed_training_continues_from_previous_step(tmp_path):
+    """End to end: train with multi-rank checkpoints, kill the next save,
+    and show a fresh trainer resumes from the last *committed* step and
+    keeps training."""
+    import dataclasses
+
+    from repro.configs import get_config, smoke_variant
+    from repro.training.loop import Trainer
+
+    cfg = smoke_variant(get_config("llama2-7b"))
+    injector = FaultInjector("after_upload", rank=0, step=4)
+    with manager_with_fault(tmp_path, injector,
+                            checksum_files=False) as mgr:
+        tr = Trainer(cfg, batch=2, seq_len=16, manager=mgr)
+        tr.run(2, ckpt_interval=2)       # step 2 commits
+        mgr.wait_for_commit()
+        assert mgr.latest_step() == 2
+        with pytest.raises(CheckpointError):
+            mgr.save(4, tr.state(), blocking=True)  # killed mid-save
+        mgr.wait_for_commit()
+        assert mgr.latest_step() == 2    # victim invisible
+
+    # restart (the realistic post-fault path: a fresh process/world)
+    with CheckpointManager(str(tmp_path), world=WORLD,
+                           manifest_checksums=False) as mgr2:
+        tr2 = Trainer(cfg, batch=2, seq_len=16, manager=mgr2)
+        assert tr2.resume() == 2         # falls back to the committed step
+        recs = tr2.run(2, ckpt_interval=2)  # training continues 3, 4
+        assert recs[-1].step == 4
+        assert np.isfinite(recs[-1].loss)
+        mgr2.wait_for_commit()
+        assert mgr2.latest_step() == 4   # and checkpoints again, multi-rank
+
+
+def test_collective_barrier_poison_and_timeout():
+    import threading
+
+    b = CollectiveBarrier(2)
+    results = []
+
+    def party():
+        try:
+            results.append(b.wait(timeout=5))
+        except BarrierBroken as exc:
+            results.append(exc)
+
+    t = threading.Thread(target=party)
+    t.start()
+    b.poison("rank 1 died", rank=1)
+    t.join(timeout=5)
+    assert isinstance(results[0], BarrierBroken)
+    assert results[0].rank == 1
+    with pytest.raises(BarrierBroken):
+        b.wait()                 # stays broken until reset
+    b.reset()
+    t2 = threading.Thread(target=party)
+    t2.start()
+    assert b.wait(timeout=5) == 0
+    t2.join(timeout=5)
+    # observer timeout does not poison
+    with pytest.raises(TimeoutError):
+        b.wait_generation(5, timeout=0.05)
+    assert not b.broken

@@ -140,6 +140,7 @@ def test_flash_attention_block_shape_sweep(S, qb, kvb):
                                atol=2e-5, rtol=2e-5)
 
 
+@pytest.mark.slow
 def test_flash_matches_model_blocked_sdpa():
     """The Pallas kernel and the pure-XLA production path agree."""
     from repro.models.layers import blocked_sdpa

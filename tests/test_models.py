@@ -13,6 +13,10 @@ from repro.models import model as M
 from repro.models import layers, rglru, rwkv6
 from repro.serving.engine import make_decode_step, make_prefill_step
 
+# Whole-module slow marker: multi-second jit compiles per case; the
+# fast lane (scripts/run_tests.sh --fast) deselects these.
+pytestmark = pytest.mark.slow
+
 ALL_ARCHS = sorted(list_configs())
 
 

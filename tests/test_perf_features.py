@@ -7,6 +7,12 @@ on, and (b) outputs match the feature-off build bit-for-bit (sharding must
 never change math).
 """
 
+import pytest
+
+# Whole-module slow marker: multi-second jit compiles per case; the
+# fast lane (scripts/run_tests.sh --fast) deselects these.
+pytestmark = pytest.mark.slow
+
 from conftest import run_in_subprocess
 
 _COMMON = r"""

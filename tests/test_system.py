@@ -26,6 +26,10 @@ from repro.core import ENGINES, CheckpointManager, step_dir
 from repro.serving.engine import greedy_generate
 from repro.training.loop import Trainer
 
+# Whole-module slow marker: multi-second jit compiles per case; the
+# fast lane (scripts/run_tests.sh --fast) deselects these.
+pytestmark = pytest.mark.slow
+
 
 def tiny_cfg():
     return smoke_variant(get_config("llama3.2-1b"))

@@ -13,6 +13,10 @@ from repro.data.pipeline import SyntheticTokenPipeline
 from repro.optim.adamw import AdamWConfig, apply_updates, init_opt_state
 from repro.training.loop import Trainer
 
+# Whole-module slow marker: multi-second jit compiles per case; the
+# fast lane (scripts/run_tests.sh --fast) deselects these.
+pytestmark = pytest.mark.slow
+
 
 def tiny_cfg():
     return smoke_variant(get_config("llama2-7b"))

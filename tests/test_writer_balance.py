@@ -1,0 +1,133 @@
+"""Balanced writer assignment: the replica-group LPT bound + dedup
+invariant (ISSUE 3 satellite), at both planning layers — device-level
+(``plan_shards``) and simulated-rank-level (``partition_records``)."""
+
+import math
+
+import numpy as np
+import pytest
+
+from conftest import run_in_subprocess
+
+from repro.core.distributed import ShardRecord, assign_replica_writers
+from repro.dist import partition_records
+
+
+def _rec(name: str, nbytes: int, dev: int = 0) -> ShardRecord:
+    return ShardRecord(
+        leaf_path=name, tensor_name=f"{name}@[0:1]", rank=dev,
+        index=((0, 1),), global_shape=(1,), shape=(1,), dtype="uint8",
+        nbytes=nbytes, data=np.zeros(1, np.uint8), device_resident=False)
+
+
+# ------------------------------------------------------- unit: group balance
+def test_assign_replica_writers_lpt_bound():
+    """Within one replica group no member exceeds ⌈total/size⌉ + one
+    shard's bytes, and each shard gets exactly one writer."""
+    group = {d: None for d in (3, 5, 9)}
+    sizes = [700, 400, 400, 300, 200, 100, 100, 50]
+    shards = [(f"s{i}", nb, dict(group)) for i, nb in enumerate(sizes)]
+    owners = assign_replica_writers(shards)
+    assert sorted(owners) == sorted(f"s{i}" for i in range(len(sizes)))
+    assert set(owners.values()) <= {3, 5, 9}
+    load = {}
+    for key, dev in owners.items():
+        load[dev] = load.get(dev, 0) + sizes[int(key[1:])]
+    fair = math.ceil(sum(sizes) / len(group))
+    assert max(load.values()) <= fair + max(sizes), load
+
+
+def test_assign_replica_writers_deterministic_and_group_scoped():
+    """Two disjoint replica groups balance independently; repeated calls
+    produce the identical plan."""
+    shards = [("a0", 100, {0: None, 1: None}),
+              ("a1", 100, {0: None, 1: None}),
+              ("b0", 100, {2: None, 3: None}),
+              ("b1", 100, {2: None, 3: None})]
+    owners = assign_replica_writers(shards)
+    assert owners == assign_replica_writers(list(reversed(shards)))
+    assert {owners["a0"], owners["a1"]} == {0, 1}
+    assert {owners["b0"], owners["b1"]} == {2, 3}
+
+
+# ----------------------------------------------- unit: rank-level partition
+def test_partition_records_spreads_bytes_when_devices_scarce():
+    """One owning device, four simulated ranks: records spread ~evenly by
+    bytes and every rank is present (it must cast a vote)."""
+    recs = [_rec(f"t{i}", nb) for i, nb in
+            enumerate([800, 500, 500, 300, 200, 200, 100, 100])]
+    parts = partition_records(recs, 4)
+    assert sorted(parts) == [0, 1, 2, 3]
+    loads = {r: sum(x.nbytes for x in rs) for r, rs in parts.items()}
+    fair = math.ceil(sum(loads.values()) / 4)
+    assert max(loads.values()) <= fair + 800
+    names = sorted(x.tensor_name for rs in parts.values() for x in rs)
+    assert names == sorted(r.tensor_name for r in recs)  # exactly once
+
+
+def test_partition_records_keeps_device_groups_together():
+    recs = [_rec(f"t{i}", 100, dev=i % 8) for i in range(16)]
+    parts = partition_records(recs, 4)
+    # 8 device groups onto 4 ranks: positions 0..7 mod 4
+    for r, rs in parts.items():
+        assert {x.rank % 4 for x in rs} == {r}
+    with pytest.raises(ValueError):
+        partition_records(recs, 0)
+
+
+# -------------------------------------------------- system: real mesh plans
+def test_replica_balance_under_mesh():
+    out = run_in_subprocess(r"""
+import math
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.core.distributed import plan_shards
+from repro.launch.mesh import make_mesh
+
+mesh = make_mesh((4, 2), ("data", "model"))
+
+# fully replicated: replica group = all 8 devices
+full = {f"r{i}": jax.device_put(jnp.arange(128.0 * (i + 1)),
+                                NamedSharding(mesh, P()))
+        for i in range(10)}
+# partially replicated: each unique shard lives on 2 devices (model axis)
+part = {f"p{i}": jax.device_put(jnp.ones((64, 32)) * i,
+                                NamedSharding(mesh, P("data", None)))
+        for i in range(5)}
+
+records, _ = plan_shards({"full": full, "part": part}, group="state")
+
+# dedup invariant: every unique (leaf, index) written exactly once
+keys = [(r.leaf_path, r.index) for r in records]
+assert len(keys) == len(set(keys)), "replicated shard written twice"
+
+# fully-replicated group: LPT bound over all 8 devices
+floads = {}
+fsizes = []
+for r in records:
+    if r.leaf_path.startswith("state/full"):
+        floads[r.rank] = floads.get(r.rank, 0) + r.nbytes
+        fsizes.append(r.nbytes)
+fair = math.ceil(sum(fsizes) / 8)
+assert len(floads) == 8, f"idle ranks: {sorted(floads)}"   # all lanes used
+assert max(floads.values()) <= fair + max(fsizes), (floads, fair)
+
+# partially-replicated groups: bound within each 2-device replica group
+from collections import defaultdict
+group_loads = defaultdict(lambda: defaultdict(int))
+group_sizes = defaultdict(list)
+for r in records:
+    if r.leaf_path.startswith("state/part"):
+        g = r.index  # same index => same replica group on this mesh
+        group_loads[g][r.rank] += r.nbytes
+        group_sizes[g].append(r.nbytes)
+for g, loads in group_loads.items():
+    fair = math.ceil(sum(group_sizes[g]) / 2)
+    assert max(loads.values()) <= fair + max(group_sizes[g]), (g, loads)
+    assert len(loads) == 2, f"group {g} drained by one writer: {loads}"
+
+# the old rule would put every fully-replicated byte on device 0
+assert floads[0] < sum(fsizes), "rank 0 still owns all replicated bytes"
+print("BALANCE-OK")
+""")
+    assert "BALANCE-OK" in out
