@@ -14,8 +14,9 @@ import time
 
 from . import (fig04_serialization, fig07_throughput, fig08_iteration,
                fig09_end_to_end, fig12_dp_scaling, fig13_frequency,
-               fig14_flush, fig15_timeline, fig_multirank, fig_restore,
-               fig_tiered, table1_heterogeneity, table3_breakdown)
+               fig14_flush, fig15_timeline, fig_differential, fig_multirank,
+               fig_restore, fig_tiered, table1_heterogeneity,
+               table3_breakdown)
 
 MODULES = {
     "fig04": fig04_serialization,
@@ -26,6 +27,7 @@ MODULES = {
     "fig13": fig13_frequency,
     "fig14": fig14_flush,
     "fig15": fig15_timeline,
+    "fig_differential": fig_differential,
     "fig_multirank": fig_multirank,
     "fig_restore": fig_restore,
     "fig_tiered": fig_tiered,

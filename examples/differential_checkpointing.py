@@ -1,11 +1,16 @@
-"""Beyond-paper feature: differential + quantized checkpointing.
+"""Differential checkpointing on the main engine path (paper §VII).
 
 The paper's future-work section proposes data reduction (differential
 checkpointing, compression) to lower storage cost at high checkpoint
-rates. This example exercises our implementation: device-side delta
-encoding (Pallas kernel, validated in interpret mode) against the previous
-snapshot, zstd compression, and optional int8/bf16 quantization — then
-shows the storage savings for a slowly-changing optimizer state.
+rates. This example exercises the first-class implementation:
+``CheckpointManager(..., delta=DeltaPolicy(keyframe_every=K))`` streams
+XOR deltas (Pallas kernel) of each tensor against a retained previous
+snapshot through the async data-movement engine, compresses them on the
+flush lanes, and commits them to the chain-aware catalog; restore replays
+keyframe ⊕ deltas through the parallel RestoreEngine — bit-exactly.
+
+(The old standalone ``DifferentialCheckpointer`` sidecar is deprecated
+for training use; this is the engine path that replaces it.)
 
     PYTHONPATH=src python examples/differential_checkpointing.py
 """
@@ -13,44 +18,60 @@ shows the storage savings for a slowly-changing optimizer state.
 import tempfile
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, smoke_variant
-from repro.core.reduction import DifferentialCheckpointer
+from repro.core import CheckpointManager, DeltaPolicy
 from repro.training.loop import Trainer
 
 
 def main() -> int:
     cfg = smoke_variant(get_config("llama3.2-1b"))
-    tr = Trainer(cfg, batch=2, seq_len=64)
 
     with tempfile.TemporaryDirectory() as d:
-        diff = DifferentialCheckpointer(d, keyframe_every=4)
-        sizes = []
+        mgr = CheckpointManager(d, delta=DeltaPolicy(keyframe_every=4))
+        tr = Trainer(cfg, batch=2, seq_len=64, manager=mgr)
         for step in range(1, 7):
             tr.run(1)
-            info = diff.save(step, tr.params)
-            sizes.append(info)
-            kind = "keyframe" if info["keyframe"] else "delta   "
-            print(f"  step {step}: {kind} {info['compressed_bytes']/1e6:7.3f} MB "
-                  f"(raw {info['raw_bytes']/1e6:.3f} MB, "
-                  f"ratio {info['ratio']:.1f}x)")
+            mgr.save(tr.step, tr.state(), blocking=True)
+            m = mgr.repository.manifest(tr.step)
+            meta = m.meta["delta"]
+            kind = "keyframe" if meta["keyframe"] else \
+                f"delta→{meta['base_step']}"
+            print(f"  step {tr.step}: {kind:10s} "
+                  f"{m.total_bytes/1e6:7.3f} MB on disk "
+                  f"(chain depth {meta['chain_depth']})")
 
-        # restore the last step and verify bit-exactness
-        restored = diff.restore(6)
-        leaves, _ = jax.tree_util.tree_flatten_with_path(tr.params)
-        for path, leaf in leaves:
-            k = jax.tree_util.keystr(path)
-            a = np.asarray(leaf).view(np.uint8)
-            b = restored[k].view(np.uint8)
-            np.testing.assert_array_equal(a, b)
-        print("differential restore is bit-exact across keyframe+deltas ✓")
+        # restore the last step (a delta) and verify bit-exactness: the
+        # manager walks the chain, re-verifies every member's checksums,
+        # restores the keyframe, and folds the deltas in
+        restored = mgr.restore(tr.state(), step=tr.step)
+        for (pa, a), (_pb, b) in zip(
+                jax.tree_util.tree_flatten_with_path(tr.params)[0],
+                jax.tree_util.tree_flatten_with_path(restored["model"])[0]):
+            np.testing.assert_array_equal(
+                np.asarray(a).view(np.uint8), np.asarray(b).view(np.uint8))
+        print("differential chain restore is bit-exact ✓")
 
-        key_mb = np.mean([s["compressed_bytes"] for s in sizes if s["keyframe"]]) / 1e6
-        del_mb = np.mean([s["compressed_bytes"] for s in sizes if not s["keyframe"]]) / 1e6
+        steps = mgr.repository.steps()
+        key_mb = np.mean([mgr.repository.manifest(s).total_bytes
+                          for s in steps
+                          if mgr.repository.manifest(s)
+                          .meta["delta"]["keyframe"]]) / 1e6
+        del_mb = np.mean([mgr.repository.manifest(s).total_bytes
+                          for s in steps
+                          if not mgr.repository.manifest(s)
+                          .meta["delta"]["keyframe"]]) / 1e6
         print(f"mean keyframe {key_mb:.3f} MB vs mean delta {del_mb:.3f} MB "
-              f"→ {key_mb/max(del_mb,1e-9):.1f}x smaller increments")
+              f"→ {key_mb/max(del_mb, 1e-9):.1f}x smaller increments")
+
+        # chain-aware retention: keep-last-1 still keeps the keyframe the
+        # newest delta depends on
+        from repro.storage.repository import RetentionPolicy
+        mgr.repository.gc(retention=RetentionPolicy(keep_last_n=1))
+        print(f"after keep-last-1 GC the chain survives: "
+              f"{mgr.repository.local_steps()}")
+        mgr.close()
     return 0
 
 

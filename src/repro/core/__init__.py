@@ -1,14 +1,16 @@
 """DataStates-LLM core: composable state providers + lazy async checkpointing."""
 
-from .checkpoint import CheckpointManager, ENGINES, latest_step, step_dir
+from .checkpoint import (CheckpointManager, DeltaPolicy, ENGINES,
+                         latest_step, step_dir)
 from .restore import (RestoreEngine, RestoreError, RestoreIndex,
                       RestoreStats)
 from .engine import (CheckpointError, CheckpointFuture, CheckpointStats,
                      DataMovementEngine, FilePlan)
 from .host_cache import CacheFullError, HostCache, Reservation
 from .layout import FileLayout, FileReader, FileWriter, TensorEntry, ObjectEntry
-from .state_provider import (Chunk, CompositeStateProvider,
-                             ObjectStateProvider, StateProvider,
+from .state_provider import (Chunk, CompositeStateProvider, DeltaSaveSpec,
+                             DeltaStateProvider, ObjectStateProvider,
+                             SnapshotCache, StateProvider,
                              TensorStateProvider)
 from .baselines import (BaseCheckpointEngine, DataStatesEngine,
                         DataStatesOldEngine, SnapshotThenFlushEngine,
@@ -18,14 +20,15 @@ from .distributed import ShardRecord, group_by_rank, normalize_index, plan_shard
 from .consolidate import consolidate_step_dir
 
 __all__ = [
-    "CheckpointManager", "ENGINES", "latest_step", "step_dir",
+    "CheckpointManager", "DeltaPolicy", "ENGINES", "latest_step", "step_dir",
     "RestoreEngine", "RestoreError", "RestoreIndex", "RestoreStats",
     "CheckpointError", "CheckpointFuture", "CheckpointStats",
     "DataMovementEngine", "FilePlan",
     "CacheFullError", "HostCache", "Reservation",
     "FileLayout", "FileReader", "FileWriter", "TensorEntry", "ObjectEntry",
-    "Chunk", "CompositeStateProvider", "ObjectStateProvider",
-    "StateProvider", "TensorStateProvider",
+    "Chunk", "CompositeStateProvider", "DeltaSaveSpec", "DeltaStateProvider",
+    "ObjectStateProvider", "SnapshotCache", "StateProvider",
+    "TensorStateProvider",
     "BaseCheckpointEngine", "DataStatesEngine", "DataStatesOldEngine",
     "SnapshotThenFlushEngine", "SyncSerializedEngine",
     "load_snapshot_rank", "load_sync_rank",

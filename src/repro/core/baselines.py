@@ -33,9 +33,12 @@ from typing import Any, Dict, List, Optional, Sequence
 import numpy as np
 
 from .distributed import ShardRecord
-from .engine import CheckpointFuture, DataMovementEngine, FilePlan
+from .engine import CheckpointError, CheckpointFuture, DataMovementEngine, \
+    FilePlan
 from .layout import maybe_fsync
-from .state_provider import (CompositeStateProvider, ObjectStateProvider,
+from .state_provider import (CompositeStateProvider, DeltaSaveSpec,
+                             DeltaStateProvider, EncodeBudget,
+                             ObjectStateProvider, SnapshotCache,
                              TensorStateProvider)
 
 
@@ -57,7 +60,8 @@ class BaseCheckpointEngine:
     def save(self, directory: str,
              by_rank: Dict[int, List[ShardRecord]],
              objects: Dict[str, Any],
-             future: CheckpointFuture) -> None:
+             future: CheckpointFuture,
+             delta: Optional[DeltaSaveSpec] = None) -> None:
         raise NotImplementedError
 
     def drain(self) -> None:
@@ -90,6 +94,14 @@ class DataStatesEngine(BaseCheckpointEngine):
             flush_threads=self.flush_threads,
             chunk_bytes=self.chunk_bytes,
             throttle_mbps=self.throttle_mbps)
+        # Differential checkpointing: retained previous-snapshot copies,
+        # held inside the same pinned host-cache budget as staging.
+        self.snapshot_cache = SnapshotCache(self._engine.host_cache)
+        # Consecutive delta saves are ordered: save N+1 may only start
+        # streaming (mutating the snapshot cache) once save N's providers
+        # have finished streaming — tracked as (streamed_event, future).
+        self._delta_prev: Optional[tuple] = None
+        self._delta_gate_timeout_s = 600.0
 
     @property
     def host_cache(self):
@@ -113,34 +125,126 @@ class DataStatesEngine(BaseCheckpointEngine):
         future.stats.serialize_s += time.perf_counter() - t0
         return provs
 
-    def save(self, directory, by_rank, objects, future) -> None:
+    # -- differential-save plumbing -----------------------------------------
+    def _await_delta_turn(self) -> None:
+        """Block (briefly) until the previous delta save has finished
+        *streaming* — its providers are done mutating the snapshot cache;
+        its flush lanes may still be writing, which is fine."""
+        prev = self._delta_prev
+        if prev is None:
+            return
+        streamed, prev_future = prev
+        deadline = time.perf_counter() + self._delta_gate_timeout_s
+        while not streamed.is_set() \
+                and not prev_future._persisted.is_set():
+            streamed.wait(0.05)
+            if time.perf_counter() > deadline:
+                raise CheckpointError(
+                    "previous differential save never finished streaming — "
+                    "cannot order the snapshot-cache updates of the next one")
+
+    def _delta_precheck(self, delta: DeltaSaveSpec,
+                        records: List[ShardRecord]) -> None:
+        """Fail fast instead of deadlocking inside the cache allocator:
+        a delta save needs previous-version (snapshot cache) + in-flight
+        version (staging) bytes simultaneously."""
+        snap = sum(r.nbytes for r in records)
+        stage = sum(r.nbytes for r in records if r.device_resident)
+        if snap + stage > self._engine.host_cache.capacity:
+            raise CheckpointError(
+                f"differential checkpointing needs the host cache to hold "
+                f"the previous snapshot ({snap/2**20:.0f} MiB) plus the "
+                f"in-flight staging copy ({stage/2**20:.0f} MiB); raise "
+                f"host_cache_bytes above {(snap+stage)/2**20:.0f} MiB")
+        if not delta.keyframe:
+            for r in records:
+                prev = self.snapshot_cache.view(r.tensor_name)
+                if prev is None or len(prev) != r.nbytes:
+                    raise CheckpointError(
+                        f"delta save of step {delta.step}: no retained "
+                        f"snapshot for {r.tensor_name!r} — the chain "
+                        f"tracker should have forced a keyframe")
+
+    def save(self, directory, by_rank, objects, future, delta=None) -> None:
         plans: List[FilePlan] = []
         capture_items = []
+        streamed_cb = None
+        if delta is not None:
+            all_records = [r for recs in by_rank.values() for r in recs]
+            self._await_delta_turn()
+            self._delta_precheck(delta, all_records)
+            if delta.keyframe:
+                # elastic reshard: drop snapshot entries for tensors that
+                # left the shard set, then (re-)reserve the current set
+                self.snapshot_cache.retain_only(
+                    [r.tensor_name for r in all_records])
+            streamed = threading.Event()
+            n_pending = [len(all_records)]
+            pend_lock = threading.Lock()
+            if not all_records:
+                streamed.set()
+            # per-save: bounds in-flight fresh XOR payloads between
+            # producer and flush lanes (~4 chunks' worth, min 64 MiB)
+            encode_budget = EncodeBudget(max(4 * self.chunk_bytes, 64 << 20))
+
+            def streamed_cb() -> None:
+                with pend_lock:
+                    n_pending[0] -= 1
+                    done = n_pending[0] == 0
+                if done:
+                    streamed.set()
         obj_rank = min(by_rank) if by_rank else 0
         for rank, records in sorted(by_rank.items()):
             provs: List[Any] = []
             for rec in records:
-                tp = TensorStateProvider(
-                    rec.tensor_name, dtype=rec.dtype, shape=rec.shape,
-                    nbytes=rec.nbytes,
+                kw = dict(
+                    dtype=rec.dtype, shape=rec.shape, nbytes=rec.nbytes,
                     host_array=None if rec.device_resident else rec.data,
                     global_shape=rec.global_shape, index=rec.index,
                     chunk_bytes=self.chunk_bytes,
                     stream_intra_tensor=self._stream_intra_tensor)
+                if delta is not None:
+                    tp = DeltaStateProvider(
+                        rec.tensor_name,
+                        prev=self.snapshot_cache.ensure(rec.tensor_name,
+                                                        rec.nbytes),
+                        keyframe=delta.keyframe, codec=delta.codec, **kw)
+                    tp.on_stream_end = streamed_cb
+                    # defer encode work until the device is drained: the
+                    # staging lane runs uncontended, so delta saves add no
+                    # capture latency over raw snapshots
+                    tp.capture_gate = future._captured
+                    tp.encode_budget = encode_budget
+                else:
+                    tp = TensorStateProvider(rec.tensor_name, **kw)
                 provs.append(tp)
                 if rec.device_resident:
                     capture_items.append((tp, rec.data))
             if rank == obj_rank:
                 provs.extend(self._object_providers(objects, future))
+            meta = {"rank": rank}
+            if delta is not None:
+                meta["delta"] = delta.manifest_meta()
             plans.append(FilePlan(rank_file(directory, rank),
                                   CompositeStateProvider(f"rank{rank}", provs),
-                                  meta={"rank": rank}))
+                                  meta=meta))
         if not by_rank:  # objects only
             provs = self._object_providers(objects, future)
+            meta = {"rank": 0}
+            if delta is not None:
+                meta["delta"] = delta.manifest_meta()
             plans.append(FilePlan(rank_file(directory, 0),
                                   CompositeStateProvider("rank0", provs),
-                                  meta={"rank": 0}))
+                                  meta=meta))
         self._engine.submit(plans, capture_items, future)
+        if delta is not None:
+            # Registered only now: a prologue failure above (cache full,
+            # oversized payload) propagates to the caller without ever
+            # settling `streamed`/the future — gating the next save on it
+            # would stall the retry for the full gate timeout. Nothing has
+            # streamed before submit succeeds, so there is nothing to
+            # order against on those paths.
+            self._delta_prev = (streamed, future)
 
     def drain(self) -> None:
         self._engine.drain()
@@ -176,7 +280,11 @@ class SnapshotThenFlushEngine(BaseCheckpointEngine):
         for t in self._threads:
             t.start()
 
-    def save(self, directory, by_rank, objects, future) -> None:
+    def save(self, directory, by_rank, objects, future, delta=None) -> None:
+        if delta is not None:
+            raise ValueError(
+                "differential checkpointing requires a DataMovementEngine "
+                "mode; the snapshot baseline cannot encode deltas")
         stats = future.stats
         # (1) blocking: metadata/object serialization first (precompute the
         # layout manifest up front — §IV-D's "do the opposite" pattern).
@@ -281,7 +389,11 @@ class SyncSerializedEngine(BaseCheckpointEngine):
 
     name = "sync"
 
-    def save(self, directory, by_rank, objects, future) -> None:
+    def save(self, directory, by_rank, objects, future, delta=None) -> None:
+        if delta is not None:
+            raise ValueError(
+                "differential checkpointing requires a DataMovementEngine "
+                "mode; the sync baseline cannot encode deltas")
         stats = future.stats
         obj_rank = min(by_rank) if by_rank else 0
         ranks = sorted(by_rank) if by_rank else [0]

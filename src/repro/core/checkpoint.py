@@ -30,6 +30,8 @@ walk the catalog newest→oldest past damaged steps.
 
 from __future__ import annotations
 
+import contextlib
+import dataclasses
 import os
 import queue
 import threading
@@ -44,8 +46,9 @@ from .baselines import (BaseCheckpointEngine, DataStatesEngine,
                         DataStatesOldEngine, SnapshotThenFlushEngine,
                         SyncSerializedEngine)
 from .distributed import group_by_rank, plan_shards
-from .engine import CheckpointFuture
+from .engine import CheckpointError, CheckpointFuture
 from .restore import RestoreEngine, RestoreError, RestoreStats
+from .state_provider import DELTA_CODEC, DeltaSaveSpec
 
 ENGINES = {
     "datastates": DataStatesEngine,          # this paper
@@ -53,6 +56,81 @@ ENGINES = {
     "snapshot": SnapshotThenFlushEngine,     # TorchSnapshot-style
     "sync": SyncSerializedEngine,            # DeepSpeed default (torch.save)
 }
+
+
+@dataclasses.dataclass(frozen=True)
+class DeltaPolicy:
+    """Differential checkpointing on the main engine path (paper §VII).
+
+    Every save streams XOR deltas of each tensor against the previous
+    save's retained host copy, compressed on the flush lanes — except a
+    raw *keyframe* every ``keyframe_every`` saves, on the first save of a
+    run, and whenever the shard set / shapes / dtypes change (elastic
+    reshard). ``verify_chain_on_restore`` re-audits every chain member
+    (sizes + manifest checksums) before a chain restore, so silent
+    corruption of a keyframe can never be XOR-amplified into a restored
+    state.
+    """
+
+    keyframe_every: int = 4
+    codec: str = DELTA_CODEC
+    verify_chain_on_restore: bool = True
+
+    def __post_init__(self):
+        if self.keyframe_every < 1:
+            raise ValueError(
+                f"keyframe_every must be >= 1, got {self.keyframe_every}")
+
+
+class _DeltaChainTracker:
+    """Decides keyframe vs delta per save and tracks the chain position.
+
+    The fingerprint (shard names + dtypes + sizes) detects elastic
+    reshards; any engine/commit failure invalidates the tracker so the
+    next save re-arms the chain with a keyframe.
+    """
+
+    def __init__(self, policy: DeltaPolicy):
+        self.policy = policy
+        self._lock = threading.Lock()
+        self._fingerprint: Optional[tuple] = None
+        self._last_step: Optional[int] = None
+        self._n_since_keyframe = 0
+
+    def plan(self, step: int, records) -> DeltaSaveSpec:
+        fp = tuple(sorted((r.tensor_name, r.dtype, int(r.nbytes))
+                          for r in records))
+        with self._lock:
+            if self._last_step is not None and step <= self._last_step:
+                # rewind-resave: chaining onto a *later* step would record
+                # base_step > step (a cycle); re-arm with a keyframe
+                self._fingerprint = None
+                self._last_step = None
+            keyframe = (
+                self._fingerprint != fp
+                or self._last_step is None
+                or self._n_since_keyframe >= self.policy.keyframe_every - 1)
+            if keyframe:
+                spec = DeltaSaveSpec(step=step, keyframe=True,
+                                     codec=self.policy.codec)
+                self._n_since_keyframe = 0
+            else:
+                spec = DeltaSaveSpec(
+                    step=step, keyframe=False, base_step=self._last_step,
+                    chain_depth=self._n_since_keyframe + 1,
+                    codec=self.policy.codec)
+                self._n_since_keyframe += 1
+            self._fingerprint = fp
+            self._last_step = step
+        return spec
+
+    def invalidate(self) -> None:
+        """A save failed (engine error or commit abort): the snapshot
+        cache / on-disk chain can no longer be trusted as a base."""
+        with self._lock:
+            self._fingerprint = None
+            self._last_step = None
+            self._n_since_keyframe = 0
 
 
 def step_dir(directory: str, step: int) -> str:
@@ -84,7 +162,8 @@ class CheckpointManager:
                  manifest_checksums: bool = True,
                  world: Optional[int] = None,
                  coordinator: Optional[Any] = None,
-                 ack_timeout_s: Optional[float] = None):
+                 ack_timeout_s: Optional[float] = None,
+                 delta: Optional[DeltaPolicy] = None):
         """``world=N`` (N > 1) or an explicit ``coordinator=`` switches
         saves onto the multi-rank path: N simulated writer ranks, each
         with its own engine + host-cache lane, drain a balanced partition
@@ -99,6 +178,13 @@ class CheckpointManager:
         if mode not in ENGINES:
             raise ValueError(f"unknown engine mode {mode!r}; "
                              f"choose from {sorted(ENGINES)}")
+        if delta is not None and mode not in ("datastates", "datastates-old"):
+            raise ValueError(
+                f"differential checkpointing requires a DataMovementEngine "
+                f"mode (datastates / datastates-old), got {mode!r}")
+        self.delta_policy = delta
+        self._delta_tracker = _DeltaChainTracker(delta) \
+            if delta is not None else None
         self.directory = directory
         self.mode = mode
         os.makedirs(directory, exist_ok=True)
@@ -165,6 +251,10 @@ class CheckpointManager:
         objects["__checkpoint_meta__"] = {"step": step, "mode": self.mode,
                                           "n_shards": len(records),
                                           "world": world}
+        delta_spec = None
+        if self._delta_tracker is not None:
+            delta_spec = self._delta_tracker.plan(step, records)
+            future.stats.extra["delta"] = delta_spec.manifest_meta()
         # in-flight marker first: a crash at any later point leaves an
         # identifiable orphan, never a resume-eligible directory.
         self.repository.begin_step(step)
@@ -173,15 +263,18 @@ class CheckpointManager:
             if self.coordinator is not None:
                 future.stats.extra["world"] = world
                 self.coordinator.submit(step, future.directory, records,
-                                        objects, future)
+                                        objects, future, delta=delta_spec)
             else:
                 by_rank = group_by_rank(records)
-                self.engine.save(future.directory, by_rank, objects, future)
+                self.engine.save(future.directory, by_rank, objects, future,
+                                 delta=delta_spec)
         except BaseException:
             # A synchronous prologue failure (e.g. payload exceeds the
             # host cache) never reaches the committer: retract the active
             # claim so in-process GC can reclaim the orphaned directory.
             self.repository.abort_step(step)
+            if self._delta_tracker is not None:
+                self._delta_tracker.invalidate()
             raise
         future.stats.blocking_s = time.perf_counter() - t0
         self._inflight.append(future)
@@ -239,22 +332,43 @@ class CheckpointManager:
                     future.wait_persisted()
                 except BaseException:  # engine failed: orphan, not commit
                     self.repository.abort_step(future.step)
+                    if self._delta_tracker is not None:
+                        self._delta_tracker.invalidate()
                 else:
+                    meta = {"n_files": future.stats.n_files,
+                            "n_tensors": future.stats.n_tensors,
+                            "bytes_tensors": future.stats.bytes_tensors,
+                            "bytes_objects": future.stats.bytes_objects}
+                    dmeta = future.stats.extra.get("delta")
+                    if dmeta is not None:
+                        # chain gate: a delta may only commit onto a
+                        # committed base — the committer runs FIFO, so the
+                        # base's outcome is already settled here. A failed
+                        # base makes this step unrestorable; keep it an
+                        # invisible orphan instead of blessing it.
+                        base = dmeta.get("base_step")
+                        if not dmeta.get("keyframe", True) \
+                                and (base is None or
+                                     not self.repository.has_manifest(base)):
+                            raise CheckpointError(
+                                f"step {future.step}: delta base step "
+                                f"{base} never committed — refusing to "
+                                f"commit a broken chain")
+                        meta["delta"] = dmeta
                     # Multi-rank saves commit with expect_ranks: the
                     # phase-2 gate re-validates every rank's vote before
                     # the step becomes visible.
                     self.repository.commit_step(
                         future.step, engine_mode=self.mode,
                         expect_ranks=future.stats.extra.get("world"),
-                        meta={"n_files": future.stats.n_files,
-                              "n_tensors": future.stats.n_tensors,
-                              "bytes_tensors": future.stats.bytes_tensors,
-                              "bytes_objects": future.stats.bytes_objects})
+                        meta=meta)
             except BaseException as exc:  # noqa: BLE001
                 self.commit_errors.append((future.step, repr(exc)))
                 # a failed commit leaves the step an orphan (marker still
                 # present); retract the active claim so GC can reclaim it
                 self.repository.abort_step(future.step)
+                if self._delta_tracker is not None:
+                    self._delta_tracker.invalidate()
             finally:
                 # prune-then-set: anyone already holding the event still
                 # wakes, and the pending map stays bounded over long runs
@@ -314,12 +428,23 @@ class CheckpointManager:
             if fallback is None:
                 fallback = False
         last_exc: Optional[BaseException] = None
+        eng = engine or self.restore_engine
         for s in candidates:
             try:
-                with self.repository.reading(s):  # shield from auto-GC
-                    sdir = self.repository.resolve_for_restore(s)
-                    tree, stats = (engine or self.restore_engine).restore(
-                        sdir, template)
+                chain = self._delta_chain(s)
+                with contextlib.ExitStack() as stack:
+                    for c in chain:  # shield the whole chain from auto-GC
+                        stack.enter_context(self.repository.reading(c))
+                    sdirs = [self.repository.resolve_for_restore(c)
+                             for c in chain]
+                    if len(chain) > 1 and (
+                            self.delta_policy is None
+                            or self.delta_policy.verify_chain_on_restore):
+                        self._verify_chain(chain)
+                    if len(chain) == 1:
+                        tree, stats = eng.restore(sdirs[0], template)
+                    else:
+                        tree, stats = eng.restore_chain(sdirs, template)
             except (RestoreError, FileNotFoundError, KeyError, OSError,
                     BackendError, ValueError) as exc:
                 if not fallback:
@@ -332,6 +457,30 @@ class CheckpointManager:
         raise RestoreError(
             f"no restorable checkpoint among steps {candidates} in "
             f"{self.directory}") from last_exc
+
+    def _delta_chain(self, step: int) -> List[int]:
+        """[keyframe, ..., step] for a differential step (ascending), or
+        ``[step]`` for a full snapshot / legacy manifest-less step.
+        Strict walk: an unreadable ancestor or corrupt base metadata is a
+        broken chain, never a shorter one."""
+        try:
+            return self.repository.chain_steps(step, strict=True)
+        except (BackendError, OSError, ValueError) as exc:
+            raise RestoreError(
+                f"step {step}: delta chain unreadable — {exc}") from exc
+
+    def _verify_chain(self, chain: Sequence[int]) -> None:
+        """Every member of a delta chain must be checksum-clean before
+        replay: XOR folding silently amplifies a corrupt keyframe or
+        intermediate delta into every downstream tensor."""
+        for c in chain:
+            if not self.repository.has_manifest(c):
+                continue  # re-hydrated legacy copy: nothing to audit against
+            res = self.repository.verify_step(c)
+            if not res.ok:
+                raise RestoreError(
+                    f"delta-chain member step {c} failed verification "
+                    f"({', '.join(res.problems)}) — refusing chain replay")
 
     # -------------------------------------------------------------- misc
     def drain(self) -> None:

@@ -347,6 +347,14 @@ class DataMovementEngine:
         try:
             for k, v in plan.meta.items():
                 writer.set_meta(k, v)
+            # Encoded (delta) tensors never reach the fixed region: declare
+            # their footer metadata up front; their compressed chunks are
+            # appended by the flush lanes as they land.
+            for p in plan.composite.encoded_providers():
+                writer.declare_encoded_tensor(
+                    p.name, dtype=p.dtype, shape=p.shape, nbytes=p.nbytes,
+                    codec=getattr(p, "delta_codec", "raw"),
+                    global_shape=p.global_shape, index=p.index)
             providers = {p.name: p for p in plan.composite.tensor_providers}
             for chunk in plan.composite.chunks():
                 if chunk.kind == "object":
@@ -436,14 +444,28 @@ class DataMovementEngine:
             try:
                 t0 = time.perf_counter()
                 chunk = op.chunk
+                nb_written = None
                 if chunk.kind == "object":
                     op.writer.append_object(chunk.name, chunk.data,
                                             codec=chunk.codec)
+                elif chunk.codec != "raw":
+                    # codec-aware flush stage (differential checkpointing):
+                    # compress the XOR-delta payload here — off the capture
+                    # and producer paths — and log-append it.
+                    from .reduction import _compress
+                    payload = _compress(bytes(chunk.data))
+                    op.writer.append_encoded_chunk(chunk.name, payload,
+                                                   *chunk.raw_range)
+                    nb_written = len(payload)
                 else:
                     op.writer.write_at(chunk.offset, chunk.data)
                 if op.throttle:
-                    nb = len(chunk.data) if isinstance(chunk.data, bytes) \
-                        else chunk.data.nbytes
+                    if nb_written is not None:
+                        nb = nb_written
+                    elif isinstance(chunk.data, bytes):
+                        nb = len(chunk.data)
+                    else:
+                        nb = chunk.data.nbytes
                     target = nb / (op.throttle * 1e6)
                     elapsed = time.perf_counter() - t0
                     if target > elapsed:
@@ -466,4 +488,11 @@ class DataMovementEngine:
                 except BaseException:  # noqa: BLE001
                     pass
             finally:
+                # credit the producer's encode budget on every outcome —
+                # a failed write must not starve the (blocked) producer
+                if op.chunk.on_flushed is not None:
+                    try:
+                        op.chunk.on_flushed()
+                    except BaseException:  # noqa: BLE001
+                        pass
                 self._flush_q.task_done()

@@ -47,17 +47,24 @@ def align_up(n: int, align: int = ALIGN) -> int:
 
 @dataclasses.dataclass(frozen=True)
 class TensorEntry:
-    """A tensor (or tensor shard) placed at a fixed offset."""
+    """A tensor (or tensor shard), either placed at a fixed offset
+    (``codec == "raw"``) or encoded into log-appended compressed chunks
+    (differential checkpointing: ``codec == "xor+zstd"``)."""
 
     name: str
-    offset: int
-    nbytes: int
+    offset: int                    # fixed-region offset; -1 for encoded
+    nbytes: int                    # raw (decoded) byte size
     dtype: str
     shape: Tuple[int, ...]
     # Global-shard bookkeeping (which slice of the logical array this is).
     global_shape: Optional[Tuple[int, ...]] = None
     index: Optional[Tuple[Tuple[int, int], ...]] = None  # (start, stop) per dim
     checksum: Optional[int] = None
+    codec: str = "raw"
+    # Encoded tensors: (file_offset, comp_nbytes, raw_lo, raw_hi) per
+    # compressed chunk — raw addressing is explicit, so flush-lane append
+    # order never matters for reconstruction.
+    enc_chunks: Optional[List[Tuple[int, int, int, int]]] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -116,6 +123,11 @@ class FileWriter:
         self._append_cursor = layout.tensor_region_end
         self._objects: List[ObjectEntry] = []
         self._extra_meta: Dict[str, Any] = {}
+        # Encoded-tensor bookkeeping (differential checkpointing): static
+        # meta declared by the producer, per-chunk records appended by the
+        # flush lanes as compressed payloads land in the log region.
+        self._enc_meta: Dict[str, Dict[str, Any]] = {}
+        self._enc_chunks: Dict[str, List[Tuple[int, int, int, int]]] = {}
 
     # -- tensor region ------------------------------------------------------
     def write_at(self, offset: int, data) -> None:
@@ -135,12 +147,59 @@ class FileWriter:
             self._objects.append(entry)
         return entry
 
+    # -- encoded tensors (differential checkpointing) ------------------------
+    def declare_encoded_tensor(self, name: str, *, dtype: str,
+                               shape: Tuple[int, ...], nbytes: int,
+                               codec: str,
+                               global_shape: Optional[Tuple[int, ...]] = None,
+                               index: Optional[Tuple[Tuple[int, int], ...]]
+                               = None) -> None:
+        """Register the static metadata of a tensor whose payload arrives
+        as compressed log-append chunks (the footer needs dtype/shape even
+        though no fixed-region offset exists)."""
+        with self._append_lock:
+            self._enc_meta[name] = {
+                "dtype": dtype, "shape": tuple(shape), "nbytes": int(nbytes),
+                "codec": codec, "global_shape": global_shape, "index": index}
+
+    def append_encoded_chunk(self, name: str, payload: bytes,
+                             raw_lo: int, raw_hi: int) -> None:
+        """Append one compressed chunk of an encoded tensor; thread-safe
+        (called from concurrent flush lanes)."""
+        with self._append_lock:
+            off = self._append_cursor
+            self._append_cursor += len(payload)
+        os.pwrite(self._fd, payload, off)
+        with self._append_lock:
+            self._enc_chunks.setdefault(name, []).append(
+                (off, len(payload), int(raw_lo), int(raw_hi)))
+
     def set_meta(self, key: str, value: Any) -> None:
         self._extra_meta[key] = value
 
     # -- footer --------------------------------------------------------------
+    def _encoded_entries(self) -> List[TensorEntry]:
+        entries = []
+        for name, m in sorted(self._enc_meta.items()):
+            chunks = sorted(self._enc_chunks.get(name, ()),
+                            key=lambda c: c[2])
+            covered = 0
+            for _off, _nb, lo, hi in chunks:
+                if lo != covered:
+                    break
+                covered = hi
+            if covered != m["nbytes"]:
+                raise ValueError(
+                    f"encoded tensor {name!r}: chunks cover {covered} of "
+                    f"{m['nbytes']} raw bytes — a flush lane lost a chunk")
+            entries.append(TensorEntry(
+                name=name, offset=-1, nbytes=m["nbytes"], dtype=m["dtype"],
+                shape=m["shape"], global_shape=m["global_shape"],
+                index=m["index"], codec=m["codec"], enc_chunks=chunks))
+        return entries
+
     def finalize(self, tensor_checksums: Optional[Dict[str, int]] = None) -> None:
-        tensors = self.layout.tensors
+        tensors = self.layout.tensors + self._encoded_entries()
         if tensor_checksums:
             tensors = [dataclasses.replace(t, checksum=tensor_checksums.get(t.name))
                        for t in tensors]
@@ -192,7 +251,9 @@ class FileReader:
                 "global_shape": (tuple(t["global_shape"])
                                  if t["global_shape"] is not None else None),
                 "index": (tuple(map(tuple, t["index"]))
-                          if t["index"] is not None else None)})
+                          if t["index"] is not None else None),
+                "enc_chunks": (list(map(tuple, t["enc_chunks"]))
+                               if t.get("enc_chunks") is not None else None)})
             for t in footer["tensors"]
         }
         self.objects: Dict[str, ObjectEntry] = {
@@ -205,9 +266,34 @@ class FileReader:
 
     def read_tensor(self, name: str) -> np.ndarray:
         e = self.tensors[name]
+        if e.codec != "raw":
+            raise ValueError(
+                f"{name!r} is {e.codec}-encoded (a differential delta); its "
+                f"value depends on the chain base — restore the step through "
+                f"RestoreEngine.restore_chain / CheckpointManager.restore")
         mm = np.memmap(self.path, mode="r", dtype=np.uint8,
                        offset=e.offset, shape=(e.nbytes,))
         return np.asarray(mm).view(np.dtype(e.dtype)).reshape(e.shape)
+
+    def read_encoded_delta(self, name: str) -> np.ndarray:
+        """Decompressed (but still XOR-domain) bytes of an encoded tensor,
+        assembled in raw order. Used by chain replay."""
+        from repro.core.reduction import _decompress
+        e = self.tensors[name]
+        if e.codec == "raw":
+            raise ValueError(f"{name!r} is raw, not encoded")
+        out = np.empty(e.nbytes, dtype=np.uint8)
+        with open(self.path, "rb") as f:
+            for off, comp_nb, lo, hi in sorted(e.enc_chunks or (),
+                                               key=lambda c: c[2]):
+                f.seek(off)
+                raw = _decompress(f.read(comp_nb))
+                if len(raw) != hi - lo:
+                    raise ValueError(
+                        f"{name!r} chunk [{lo}:{hi}) decompressed to "
+                        f"{len(raw)} B — corrupt delta payload")
+                out[lo:hi] = np.frombuffer(raw, dtype=np.uint8)
+        return out
 
     def read_object_raw(self, name: str) -> bytes:
         """Serialized payload bytes (used by offline consolidation)."""

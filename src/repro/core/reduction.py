@@ -12,7 +12,12 @@ compression:
 ``DifferentialCheckpointer`` keeps the previous snapshot per tensor and
 writes either a keyframe (full) or a delta, with integrity checksums from
 ``kernels.ops.tensor_checksum``. Restore replays keyframe ⊕ deltas.
-"""
+
+NOTE: differential checkpointing is now a first-class *engine* path —
+``CheckpointManager(..., delta=DeltaPolicy())`` streams XOR deltas through
+the async data-movement engine with chain-aware catalog/GC/verify and
+parallel chain restore. The synchronous ``DifferentialCheckpointer`` here
+is deprecated for training use (see its docstring)."""
 
 from __future__ import annotations
 
@@ -67,9 +72,11 @@ def _decompress(b: bytes) -> bytes:
 
 
 def encode_tensor(arr: jax.Array, *, prev: Optional[np.ndarray] = None,
-                  quant: str = "none") -> EncodedTensor:
+                  quant: str = "none") -> Tuple[EncodedTensor, np.ndarray]:
     """Encode one tensor: optional on-device quantize, optional XOR delta
-    against ``prev`` (same quantized domain), then zstd."""
+    against ``prev`` (same quantized domain), then zstd. Returns the
+    encoded record *and* the working-precision array (the ``prev`` to
+    retain for the next delta)."""
     checksum = int(kops.tensor_checksum(arr))
     dtype, shape = str(arr.dtype), tuple(arr.shape)
     scales = None
@@ -127,7 +134,19 @@ def decode_tensor(enc: EncodedTensor, *, prev: Optional[np.ndarray] = None
 
 
 class DifferentialCheckpointer:
-    """Keyframe + delta checkpoint stream for a pytree of arrays."""
+    """Keyframe + delta checkpoint stream for a pytree of arrays.
+
+    .. deprecated::
+        This standalone sidecar predates differential checkpointing on the
+        main engine path and bypasses the async data-movement engine, the
+        crash-consistent catalog, multi-rank coordination, and the parallel
+        restore engine. Prefer ``CheckpointManager(..., delta=DeltaPolicy())``
+        (see ``repro.core.checkpoint``): same keyframe+XOR-delta reduction,
+        but lazy/async, chain-aware in GC/cascade/verify, and restored
+        through ``RestoreEngine`` chain replay. This class remains for
+        offline/sidecar use and as the reference for the quantized
+        (``bf16``/``int8``) encode path.
+    """
 
     def __init__(self, directory: str, *, keyframe_every: int = 4,
                  quant: str = "none"):
@@ -137,10 +156,32 @@ class DifferentialCheckpointer:
         self._prev: Dict[str, np.ndarray] = {}
         self._n_saves = 0
         os.makedirs(directory, exist_ok=True)
+        # Restart recovery: derive chain state from what is already on
+        # disk. Without this, a restarted process had _n_saves=0 (→
+        # keyframe cadence restarts) but ALSO wrote its first record with
+        # keyframe=False whenever the cadence said "delta" — while
+        # actually raw-encoding every tensor (_prev empty) — so restore()
+        # across the restart failed its `chain[0]["keyframe"]` assertion.
+        existing = self._existing_steps()
+        if existing:
+            self._n_saves = len(existing)
+            try:
+                # re-arm the delta bases from the last restorable step so
+                # the chain continues across the restart
+                self._prev = self.restore(existing[-1])
+            except Exception:
+                self._prev = {}  # damaged tail: next save re-keyframes
+
+    def _existing_steps(self) -> List[int]:
+        return sorted(int(f[5:13]) for f in os.listdir(self.directory)
+                      if f.startswith("diff_") and f.endswith(".pkl"))
 
     def save(self, step: int, tree) -> Dict[str, Any]:
         leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
-        keyframe = (self._n_saves % self.keyframe_every == 0)
+        # no retained bases ⇒ this save is raw-encoded whatever the
+        # cadence says; record it as the keyframe it actually is
+        keyframe = (self._n_saves % self.keyframe_every == 0) \
+            or not self._prev
         record: Dict[str, Any] = {"step": step, "keyframe": keyframe,
                                   "tensors": {}}
         raw_total = comp_total = 0
@@ -172,8 +213,15 @@ class DifferentialCheckpointer:
             s = int(f[5:13])
             if s > step:
                 break
-            with open(os.path.join(self.directory, f), "rb") as fh:
-                rec = pickle.load(fh)
+            try:
+                with open(os.path.join(self.directory, f), "rb") as fh:
+                    rec = pickle.load(fh)
+            except Exception:
+                # A broken link invalidates everything accumulated so far
+                # — only a later keyframe can re-anchor the chain. Never
+                # splice across a damaged record.
+                chain = []
+                continue
             if rec["keyframe"]:
                 chain = [rec]
             else:

@@ -274,6 +274,11 @@ class RestoreIndex:
     def __init__(self, sdir: str):
         self.sdir = sdir
         self.tensors: Dict[str, List[_ShardSource]] = {}
+        # Differential steps: encoded (XOR-domain) shards, keyed like
+        # ``tensors`` but holding ``(FileReader, TensorEntry)`` pairs —
+        # their payloads are compressed log chunks, not byte-addressable
+        # regions, and their values only exist relative to a chain base.
+        self.delta_tensors: Dict[str, List[Tuple[Any, Any]]] = {}
         self.objects: Dict[str, Callable[[], Any]] = {}
         self.n_files = 0
 
@@ -334,8 +339,12 @@ class RestoreEngine:
                 idx.n_files += 1
                 for entry in rd.tensors.values():
                     base = entry.name.split("@[", 1)[0]
-                    idx.tensors.setdefault(base, []).append(
-                        _DsllmShard(p, entry))
+                    if entry.codec != "raw":
+                        idx.delta_tensors.setdefault(base, []).append(
+                            (rd, entry))
+                    else:
+                        idx.tensors.setdefault(base, []).append(
+                            _DsllmShard(p, entry))
                 for oname, oe in rd.objects.items():
                     idx.objects[oname] = _OnceLoader(
                         (lambda r=rd, n=oname: r.read_object(n)),
@@ -544,6 +553,100 @@ class RestoreEngine:
         return tmp
 
     # ------------------------------------------------------------- restore
+    def _run_tasks(self, run: _Run,
+                   tasks: List[Callable[[], Tuple[int, int]]]) -> None:
+        """Fan the read/apply tasks over the pool; fold I/O accounting."""
+        stats = run.stats
+        t0 = time.perf_counter()
+        if tasks:
+            if self.threads == 1:
+                for t in tasks:
+                    nb, nr = t()
+                    stats.bytes_read += nb
+                    stats.n_ranges += nr
+            else:
+                with concurrent.futures.ThreadPoolExecutor(
+                        self.threads) as pool:
+                    for nb, nr in pool.map(lambda t: t(), tasks):
+                        stats.bytes_read += nb
+                        stats.n_ranges += nr
+        stats.read_s += time.perf_counter() - t0
+
+    def _read_step(self, run: _Run, sdir: str, template: Any):
+        """Index ``sdir``, plan per-leaf regions/buffers, execute the
+        ranged-read fan-out. Returns ``(treedef, assembled, idx)`` with
+        the host buffers filled but not yet assembled into leaves."""
+        stats = run.stats
+        t0 = time.perf_counter()
+        idx = self.index(sdir, stats, run.lock)
+        stats.index_s += time.perf_counter() - t0
+        stats.n_files += idx.n_files
+
+        # ---- plan: regions, buffers, and the full read-task list
+        t0 = time.perf_counter()
+        leaves, treedef = jax.tree_util.tree_flatten_with_path(template)
+        tasks: List[Callable[[], Tuple[int, int]]] = []
+        # (kind, leaf, aux, pstr) per template leaf
+        assembled: List[Tuple[str, Any, Any, str]] = []
+        for path, leaf in leaves:
+            pstr = f"state/{_path_str(path)}"
+            if isinstance(leaf, (jax.Array, jax.ShapeDtypeStruct,
+                                 np.ndarray)):
+                if pstr not in idx.tensors:
+                    if pstr in idx.delta_tensors:
+                        raise RestoreError(
+                            f"tensor {pstr!r} is delta-encoded in {sdir!r} "
+                            f"— a differential step cannot be restored "
+                            f"alone; replay its chain (restore_chain / "
+                            f"CheckpointManager.restore)")
+                    raise KeyError(
+                        f"tensor {pstr!r} not found in checkpoint "
+                        f"(have {sorted(idx.tensors)[:5]}...)")
+                stats.n_leaves += 1
+                regions, kind = self._leaf_regions(leaf)
+                dtype = np.dtype(leaf.dtype)
+                buffers: Dict[Region, np.ndarray] = {}
+                for region in regions:
+                    buf = np.empty(
+                        tuple(hi - lo for lo, hi in region), dtype)
+                    buffers[region] = buf
+                    self._plan_region(run, idx.tensors[pstr], region,
+                                      buf, tasks, pstr)
+                assembled.append((kind, leaf, buffers, pstr))
+            else:
+                assembled.append(("object", leaf, None, pstr))
+        stats.plan_s += time.perf_counter() - t0
+
+        self._run_tasks(run, tasks)
+        return treedef, assembled, idx
+
+    def _assemble(self, run: _Run, treedef, assembled,
+                  idx: RestoreIndex) -> Any:
+        """Host buffers -> leaves; objects resolved from ``idx`` (for a
+        chain restore: the newest step's object log)."""
+        stats = run.stats
+        t0 = time.perf_counter()
+        out = []
+        for kind, leaf, aux, pstr in assembled:
+            if kind == "object":
+                out.append(idx.objects[pstr]()
+                           if pstr in idx.objects else leaf)
+            elif kind == "numpy":
+                out.append(next(iter(aux.values())))
+            elif kind == "jax_full":
+                out.append(jax.numpy.asarray(next(iter(aux.values()))))
+            else:  # jax_sharded
+                shape = tuple(leaf.shape)
+                buffers = aux
+
+                def cb(index, shape=shape, buffers=buffers):
+                    return buffers[normalize_index(index, shape)]
+                out.append(jax.make_array_from_callback(
+                    shape, leaf.sharding, cb))
+        tree = jax.tree_util.tree_unflatten(treedef, out)
+        stats.assemble_s += time.perf_counter() - t0
+        return tree
+
     def restore(self, sdir: str, template: Any
                 ) -> Tuple[Any, RestoreStats]:
         """Rebuild a ``template``-shaped pytree from ``sdir``.
@@ -554,79 +657,122 @@ class RestoreEngine:
         template value). Returns ``(tree, stats)``.
         """
         run = _Run(RestoreStats(threads=self.threads))
-        stats = run.stats
         try:
-            t0 = time.perf_counter()
-            idx = self.index(sdir, stats, run.lock)
-            stats.index_s = time.perf_counter() - t0
-            stats.n_files = idx.n_files
-
-            # ---- plan: regions, buffers, and the full read-task list
-            t0 = time.perf_counter()
-            leaves, treedef = jax.tree_util.tree_flatten_with_path(template)
-            tasks: List[Callable[[], Tuple[int, int]]] = []
-            assembled: List[Tuple[str, Any, Any]] = []  # (kind, leaf, aux)
-            for path, leaf in leaves:
-                pstr = f"state/{_path_str(path)}"
-                if isinstance(leaf, (jax.Array, jax.ShapeDtypeStruct,
-                                     np.ndarray)):
-                    if pstr not in idx.tensors:
-                        raise KeyError(
-                            f"tensor {pstr!r} not found in checkpoint "
-                            f"(have {sorted(idx.tensors)[:5]}...)")
-                    stats.n_leaves += 1
-                    regions, kind = self._leaf_regions(leaf)
-                    dtype = np.dtype(leaf.dtype)
-                    buffers: Dict[Region, np.ndarray] = {}
-                    for region in regions:
-                        buf = np.empty(
-                            tuple(hi - lo for lo, hi in region), dtype)
-                        buffers[region] = buf
-                        self._plan_region(run, idx.tensors[pstr], region,
-                                          buf, tasks, pstr)
-                    assembled.append((kind, leaf, buffers))
-                else:
-                    assembled.append(("object", leaf, pstr))
-            stats.plan_s = time.perf_counter() - t0
-
-            # ---- fan out every ranged read across the pool
-            t0 = time.perf_counter()
-            if tasks:
-                if self.threads == 1:
-                    for t in tasks:
-                        nb, nr = t()
-                        stats.bytes_read += nb
-                        stats.n_ranges += nr
-                else:
-                    with concurrent.futures.ThreadPoolExecutor(
-                            self.threads) as pool:
-                        for nb, nr in pool.map(lambda t: t(), tasks):
-                            stats.bytes_read += nb
-                            stats.n_ranges += nr
-            stats.read_s = time.perf_counter() - t0
-
-            # ---- assemble: host buffers -> leaves
-            t0 = time.perf_counter()
-            out = []
-            for kind, leaf, aux in assembled:
-                if kind == "object":
-                    pstr = aux
-                    out.append(idx.objects[pstr]()
-                               if pstr in idx.objects else leaf)
-                elif kind == "numpy":
-                    out.append(next(iter(aux.values())))
-                elif kind == "jax_full":
-                    out.append(jax.numpy.asarray(next(iter(aux.values()))))
-                else:  # jax_sharded
-                    shape = tuple(leaf.shape)
-                    buffers = aux
-
-                    def cb(index, shape=shape, buffers=buffers):
-                        return buffers[normalize_index(index, shape)]
-                    out.append(jax.make_array_from_callback(
-                        shape, leaf.sharding, cb))
-            tree = jax.tree_util.tree_unflatten(treedef, out)
-            stats.assemble_s = time.perf_counter() - t0
-            return tree, stats
+            treedef, assembled, idx = self._read_step(run, sdir, template)
+            tree = self._assemble(run, treedef, assembled, idx)
+            return tree, run.stats
         finally:
             run.fds.close()
+
+    # ------------------------------------------------------- chain restore
+    def restore_chain(self, sdirs: Sequence[str], template: Any
+                      ) -> Tuple[Any, RestoreStats]:
+        """Replay a differential chain: ``sdirs[0]`` is the keyframe step
+        directory, ``sdirs[1:]`` the delta steps in chain order.
+
+        The keyframe restores exactly like a full snapshot (same planned
+        ranged-read fan-out, elastic across target shardings); each delta
+        step's compressed XOR payloads are then decompressed (once per
+        stored shard, whatever the target sharding) and folded into the
+        in-place host buffers (kernel-backed XOR). Steps apply strictly
+        in chain order, and within a step any raw re-saved tensors
+        overwrite *before* XOR folds run, so mixed raw/encoded steps are
+        deterministic. Objects (RNG state, data-pipeline cursors, step
+        metadata) always come from the *newest* step — every save
+        persists its objects in full.
+        """
+        if not sdirs:
+            raise ValueError("restore_chain needs at least one step dir")
+        run = _Run(RestoreStats(threads=self.threads))
+        try:
+            treedef, assembled, idx = self._read_step(run, sdirs[0],
+                                                      template)
+            for sdir in sdirs[1:]:
+                idx = self._apply_delta_dir(run, sdir, assembled)
+            tree = self._assemble(run, treedef, assembled, idx)
+            return tree, run.stats
+        finally:
+            run.fds.close()
+
+    def _apply_delta_dir(self, run: _Run, sdir: str,
+                         assembled) -> RestoreIndex:
+        """Fold one delta step's encoded shards into the leaf buffers."""
+        stats = run.stats
+        t0 = time.perf_counter()
+        idx = self.index(sdir, stats, run.lock)
+        stats.index_s += time.perf_counter() - t0
+        stats.n_files += idx.n_files
+        xor_tasks: List[Callable[[], Tuple[int, int]]] = []
+        raw_tasks: List[Callable[[], Tuple[int, int]]] = []
+        t0 = time.perf_counter()
+        for kind, leaf, aux, pstr in assembled:
+            if kind == "object":
+                continue
+            enc = idx.delta_tensors.get(pstr, ())
+            raw = idx.tensors.get(pstr, ())
+            if not enc and not raw:
+                raise RestoreError(
+                    f"delta step {sdir!r} does not cover tensor {pstr!r} "
+                    f"— the chain was built across a reshard without a "
+                    f"keyframe?")
+            # one task per stored shard: the payload is decompressed once
+            # and folded into every intersecting target region
+            for rd, entry in enc:
+                xor_tasks.append(self._make_delta_task(run, rd, entry,
+                                                       aux, pstr))
+            if raw:
+                # a raw tensor inside a delta step (re-saved whole):
+                # overwrite semantics via the normal ranged-read path —
+                # executed as a separate batch *before* the XOR folds so
+                # mixed raw/encoded steps stay deterministic
+                for region, buf in aux.items():
+                    self._plan_region(run, list(raw), region, buf,
+                                      raw_tasks, pstr)
+        stats.plan_s += time.perf_counter() - t0
+        self._run_tasks(run, raw_tasks)
+        self._run_tasks(run, xor_tasks)
+        return idx
+
+    def _make_delta_task(self, run: _Run, rd, entry,
+                         buffers: Dict[Region, np.ndarray], pstr: str
+                         ) -> Callable[[], Tuple[int, int]]:
+        def task():
+            src_index = entry.index if entry.index is not None \
+                else tuple((0, d) for d in entry.shape)
+            inters = []
+            for region, buf in buffers.items():
+                inter = tuple((max(a, c), min(b, d))
+                              for (a, b), (c, d) in zip(region, src_index))
+                if not any(lo >= hi for lo, hi in inter):
+                    inters.append((region, buf, inter))
+            if not inters:
+                return 0, 0
+            dtype = np.dtype(entry.dtype)
+            if any(dtype != buf.dtype for _r, buf, _i in inters):
+                raise RestoreError(
+                    f"{pstr!r}: template dtype != stored dtype {dtype} — "
+                    f"dtype-converting restore is not defined for XOR "
+                    f"delta chains")
+            from .state_provider import xor_bytes
+            comp_nb = sum(c[1] for c in entry.enc_chunks or ())
+            delta = rd.read_encoded_delta(entry.name) \
+                .view(dtype).reshape(entry.shape)
+            for region, buf, inter in inters:
+                src_sl = tuple(slice(lo - c, hi - c)
+                               for (lo, hi), (c, _d) in zip(inter,
+                                                            src_index))
+                dst_sl = tuple(slice(lo - a, hi - a)
+                               for (lo, hi), (a, _b) in zip(inter, region))
+                dst_view = buf[dst_sl] if dst_sl else buf[...]
+                sub = delta[src_sl] if src_sl else delta[...]
+                cur = np.ascontiguousarray(dst_view)
+                cur_b = cur.reshape(-1).view(np.uint8)
+                sub_b = np.ascontiguousarray(sub).reshape(-1).view(np.uint8)
+                folded = xor_bytes(cur_b, sub_b) \
+                    .view(cur.dtype).reshape(cur.shape)
+                if dst_sl:
+                    buf[dst_sl] = folded
+                else:
+                    buf[...] = folded
+            return comp_nb, len(entry.enc_chunks or ())
+        return task

@@ -17,6 +17,13 @@ engine stays agnostic to heterogeneity and only optimizes multi-tier I/O.
 * :class:`CompositeStateProvider` — hierarchical composition: plans the
   fixed-offset tensor region for one file, orders the stream tensors-first
   (largest first) so object serialization overlaps with bulk tensor I/O.
+* :class:`DeltaStateProvider` — differential checkpointing on the main
+  engine path (paper §VII / ByteCheckpoint): XOR-deltas each staged chunk
+  against a retained previous-snapshot copy held in a
+  :class:`SnapshotCache` (inside the same pinned host-cache budget), and
+  emits ``codec="xor+zstd"`` chunks that the engine's flush lanes compress
+  and log-append. Keyframe saves stream raw (fixed-offset) chunks while
+  refreshing the snapshot cache, so the chain can restart at any time.
 """
 
 from __future__ import annotations
@@ -24,7 +31,8 @@ from __future__ import annotations
 import dataclasses
 import pickle
 import threading
-from typing import Any, Callable, Iterator, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, Iterator, List, Optional, Sequence, \
+    Tuple
 
 import msgpack
 import numpy as np
@@ -33,6 +41,8 @@ from .host_cache import HostCache, Reservation
 from .layout import FileLayout, align_up
 
 DEFAULT_CHUNK_BYTES = 16 * 1024 * 1024
+
+DELTA_CODEC = "xor+zstd"
 
 
 @dataclasses.dataclass
@@ -45,6 +55,129 @@ class Chunk:
     offset: Optional[int] = None   # fixed file offset; None = append
     codec: str = "raw"
     last: bool = False             # last chunk of this logical item
+    # For encoded (``codec != "raw"``) tensor chunks: which byte range of
+    # the *raw* tensor this chunk encodes — the flush lane compresses the
+    # payload, so raw addressing must travel with the chunk.
+    raw_range: Optional[Tuple[int, int]] = None
+    # Invoked by the flush lane once this chunk's payload is written (or
+    # its write failed) — encoded chunks use it to credit the producer's
+    # in-flight byte budget.
+    on_flushed: Optional[Callable[[], None]] = None
+
+
+class EncodeBudget:
+    """Caps the bytes of freshly-allocated encoded (XOR) payloads queued
+    between producer and flush lanes.
+
+    Raw-path chunks are zero-copy views into budgeted cache reservations,
+    but delta chunks are fresh heap arrays: an unbounded flush queue would
+    transiently hold ~one full uncompressed state copy outside the pinned
+    host-cache budget (producers XOR at memcpy speed, flush lanes drain at
+    compress+disk speed). Producers acquire before allocating; the flush
+    lane credits back after the write — always, including error paths, so
+    a failed save cannot starve the producer. A single over-cap request is
+    admitted when nothing is in flight, so the cap never deadlocks.
+    """
+
+    def __init__(self, cap_bytes: int):
+        self.cap = int(cap_bytes)
+        self._used = 0
+        self._cond = threading.Condition()
+
+    def acquire(self, nbytes: int) -> None:
+        with self._cond:
+            while self._used > 0 and self._used + nbytes > self.cap:
+                self._cond.wait(timeout=60.0)
+            self._used += nbytes
+
+    def release(self, nbytes: int) -> None:
+        with self._cond:
+            self._used -= nbytes
+            self._cond.notify_all()
+
+
+@dataclasses.dataclass(frozen=True)
+class DeltaSaveSpec:
+    """One save's position in a delta chain (decided by the manager).
+
+    ``keyframe=True`` → stream full raw tensors (and refresh the snapshot
+    cache); ``keyframe=False`` → stream XOR deltas against the snapshot
+    cache, with ``base_step`` naming the previous save in the chain and
+    ``chain_depth`` counting hops back to the keyframe (keyframe = 0).
+    """
+
+    step: int
+    keyframe: bool
+    base_step: Optional[int] = None
+    chain_depth: int = 0
+    codec: str = DELTA_CODEC
+
+    def manifest_meta(self) -> Dict[str, Any]:
+        return {"keyframe": self.keyframe, "base_step": self.base_step,
+                "chain_depth": self.chain_depth, "codec": self.codec}
+
+
+class SnapshotCache:
+    """Per-engine retained previous-snapshot copies, one per tensor name.
+
+    Entries live inside the engine's pinned :class:`HostCache`, so the
+    snapshot budget and the staging budget share one back-pressure pool
+    (the cache must hold previous-version + in-flight-version bytes for a
+    delta save — checked up front by the engine). Thread-safe for the
+    per-name access pattern the engine uses (consecutive saves are gated,
+    so no two saves mutate the same entry concurrently).
+    """
+
+    def __init__(self, cache: HostCache, reserve_timeout_s: float = 60.0):
+        self._cache = cache
+        self._timeout = reserve_timeout_s
+        self._lock = threading.Lock()
+        self._entries: Dict[str, Reservation] = {}
+
+    def names(self) -> List[str]:
+        with self._lock:
+            return list(self._entries)
+
+    def nbytes(self) -> int:
+        with self._lock:
+            return sum(r.nbytes for r in self._entries.values())
+
+    def view(self, name: str) -> Optional[memoryview]:
+        with self._lock:
+            res = self._entries.get(name)
+        return None if res is None else res.view
+
+    def ensure(self, name: str, nbytes: int) -> memoryview:
+        """Reservation for ``name`` sized ``nbytes`` (re-reserved on size
+        change). Raises :class:`~.host_cache.CacheFullError` rather than
+        deadlocking when the pool cannot hold it."""
+        with self._lock:
+            res = self._entries.get(name)
+            if res is not None and res.nbytes == nbytes:
+                return res.view
+            if res is not None:
+                del self._entries[name]
+        if res is not None:
+            res.release()
+        res = self._cache.reserve(nbytes, timeout=self._timeout)
+        with self._lock:
+            self._entries[name] = res
+        return res.view
+
+    def retain_only(self, names: Sequence[str]) -> None:
+        """Drop entries for tensors no longer in the shard set (elastic
+        reshard forced a keyframe with a new name set)."""
+        keep = set(names)
+        with self._lock:
+            doomed = [(n, r) for n, r in self._entries.items()
+                      if n not in keep]
+            for n, _r in doomed:
+                del self._entries[n]
+        for _n, r in doomed:
+            r.release()
+
+    def clear(self) -> None:
+        self.retain_only(())
 
 
 class StateProvider:
@@ -151,6 +284,117 @@ class TensorStateProvider(StateProvider):
             pos = end
 
 
+def xor_bytes(cur: np.ndarray, prev: np.ndarray) -> np.ndarray:
+    """Bit-exact XOR of two equal-length byte arrays via the Pallas delta
+    kernel (``kernels/delta.py``); returns a fresh uint8 array."""
+    from repro.kernels import ops as kops  # deferred: jax import is heavy
+    out = np.asarray(kops.delta_xor(cur, prev)).view(np.uint8)
+    return out[:cur.nbytes]
+
+
+class DeltaStateProvider(TensorStateProvider):
+    """Differential SP: streams XOR deltas against the previous snapshot.
+
+    Two modes, chosen per save by the manager's chain tracker
+    (:class:`DeltaSaveSpec`):
+
+    * **keyframe** — behaves like :class:`TensorStateProvider` (raw chunks
+      at fixed offsets) but additionally copies each staged chunk into the
+      engine's :class:`SnapshotCache`, re-arming the chain;
+    * **delta** — each staged chunk is XORed against the retained snapshot
+      bytes (kernel-backed), the snapshot entry is advanced to the current
+      bytes, and the XOR payload is emitted as a ``codec="xor+zstd"``
+      log-append chunk (``offset=None`` — encoded tensors never occupy the
+      fixed region, so bytes-on-disk shrink with the delta). Compression
+      happens downstream on the engine's flush lanes, keeping capture and
+      producer latency flat.
+
+    XOR is associative and order-insensitive, so restore may fold a chain
+    of deltas onto the keyframe in any order (``RestoreEngine.restore_chain``).
+    """
+
+    def __init__(self, name: str, *, prev: memoryview, keyframe: bool,
+                 codec: str = DELTA_CODEC, **kw):
+        super().__init__(name, **kw)
+        self.keyframe = keyframe
+        self.delta_codec = codec
+        self._prev = prev
+        # set by the engine: fired exactly once when this provider's chunk
+        # stream ends (exhausted, closed, or abandoned by a failed
+        # producer) — the signal that its snapshot-cache entry is settled
+        # and the next save may start streaming.
+        self.on_stream_end: Optional[Callable[[], None]] = None
+        # Set by the engine to the save's `captured` event: streaming (and
+        # with it every producer-lane memcpy/XOR) is deferred until the
+        # device is fully drained, so the D2H staging lane never contends
+        # with encode work for the GIL — capture latency (the metric that
+        # blocks training) stays identical to the raw path; the XOR +
+        # compress pipeline runs in the shadow of the next iteration.
+        # Applied to keyframe mode too, deliberately: the keyframe's
+        # snapshot-cache refresh is a producer-lane memcpy that measurably
+        # (~2×) inflated capture when overlapped with staging; trading
+        # async persist tail for zero training stall is the right side of
+        # that bargain.
+        self.capture_gate: Optional[threading.Event] = None
+        # Set by the engine: bounds in-flight freshly-allocated XOR
+        # payload bytes between producer and flush lanes.
+        self.encode_budget: Optional[EncodeBudget] = None
+        assert len(prev) == self.nbytes, (
+            f"snapshot cache entry for {name} is {len(prev)} B, "
+            f"tensor is {self.nbytes} B")
+
+    @property
+    def fixed_offset(self) -> bool:
+        """Keyframes live in the planned fixed-offset region; deltas are
+        compressed downstream and log-appended."""
+        return self.keyframe
+
+    def _signal_stream_end(self) -> None:
+        cb, self.on_stream_end = self.on_stream_end, None
+        if cb is not None:
+            cb()
+
+    def chunks(self) -> Iterator[Chunk]:
+        try:
+            if self.capture_gate is not None:
+                self.capture_gate.wait()
+            view = self._byte_view()
+            prev = np.frombuffer(self._prev, dtype=np.uint8)
+            n = self.nbytes
+            pos = 0
+            while pos < n:
+                end = min(pos + self.chunk_bytes, n)
+                if self._host_array is None:
+                    with self._cond:
+                        while self._staged < end:
+                            self._cond.wait()
+                cur = np.frombuffer(view[pos:end], dtype=np.uint8)
+                if self.keyframe:
+                    # refresh the snapshot, stream the raw bytes
+                    prev[pos:end] = cur
+                    yield Chunk(name=self.name, kind="tensor",
+                                data=view[pos:end],
+                                offset=self.offset + pos
+                                if self.offset is not None else None,
+                                last=end >= n)
+                else:
+                    nb = end - pos
+                    budget = self.encode_budget
+                    on_flushed = None
+                    if budget is not None:
+                        budget.acquire(nb)
+                        on_flushed = (lambda b=budget, nb=nb: b.release(nb))
+                    delta = xor_bytes(cur, prev[pos:end])
+                    prev[pos:end] = cur  # advance the chain base
+                    yield Chunk(name=self.name, kind="tensor", data=delta,
+                                offset=None, codec=self.delta_codec,
+                                raw_range=(pos, end), last=end >= n,
+                                on_flushed=on_flushed)
+                pos = end
+        finally:
+            self._signal_stream_end()
+
+
 class ObjectStateProvider(StateProvider):
     """SP for non-tensor Python state (dicts, RNG seeds, config, ...).
 
@@ -218,15 +462,26 @@ class CompositeStateProvider(StateProvider):
         self._layout: Optional[FileLayout] = None
 
     def plan_layout(self) -> FileLayout:
-        """Fix tensor offsets (largest-first order = stream order)."""
+        """Fix tensor offsets (largest-first order = stream order).
+
+        Only providers with ``fixed_offset`` (raw tensors, keyframes) get
+        fixed-region offsets; encoded providers (delta mode) are excluded —
+        their compressed chunks log-append, so the file never reserves
+        their raw footprint."""
         if self._layout is None:
             self.tensor_providers.sort(key=lambda p: -p.nbytes)
-            specs = [(p.name, p.nbytes, p.dtype, p.shape, p.global_shape, p.index)
-                     for p in self.tensor_providers]
+            fixed = [p for p in self.tensor_providers
+                     if getattr(p, "fixed_offset", True)]
+            specs = [(p.name, p.nbytes, p.dtype, p.shape, p.global_shape,
+                      p.index) for p in fixed]
             self._layout = FileLayout.plan(specs)
-            for p, entry in zip(self.tensor_providers, self._layout.tensors):
+            for p, entry in zip(fixed, self._layout.tensors):
                 p.offset = entry.offset
         return self._layout
+
+    def encoded_providers(self) -> List[TensorStateProvider]:
+        return [p for p in self.tensor_providers
+                if not getattr(p, "fixed_offset", True)]
 
     def nbytes_hint(self) -> Optional[int]:
         return sum(p.nbytes for p in self.tensor_providers)

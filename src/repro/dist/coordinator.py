@@ -50,6 +50,7 @@ from repro.core.baselines import (DataStatesEngine, DataStatesOldEngine,
                                   rank_file)
 from repro.core.distributed import ShardRecord
 from repro.core.engine import CheckpointFuture
+from repro.core.state_provider import DeltaSaveSpec
 from repro.storage.manifest import RankManifest
 
 from .barrier import BarrierBroken, CollectiveBarrier
@@ -216,8 +217,9 @@ class RankRuntime:
         return self.engine.host_cache
 
     def submit(self, job: _SaveJob, records: List[ShardRecord],
-               objects: Dict[str, Any]) -> None:
-        self._q.put((job, records, objects))
+               objects: Dict[str, Any],
+               delta: Optional[DeltaSaveSpec] = None) -> None:
+        self._q.put((job, records, objects, delta))
 
     # ------------------------------------------------------------- internals
     def _fault(self, point: str, job: _SaveJob, files: List[str]) -> None:
@@ -232,20 +234,26 @@ class RankRuntime:
             if item is None:
                 self._q.task_done()
                 return
-            job, records, objects = item
+            job, records, objects, delta = item
             try:
-                self._run_save(job, records, objects)
+                self._run_save(job, records, objects, delta)
             except BaseException as exc:  # noqa: BLE001
                 job.rank_failed(self.rank, exc)
             finally:
                 self._q.task_done()
 
     def _run_save(self, job: _SaveJob, records: List[ShardRecord],
-                  objects: Dict[str, Any]) -> None:
+                  objects: Dict[str, Any],
+                  delta: Optional[DeltaSaveSpec] = None) -> None:
         job.start_watchdog()  # first rank to dequeue arms the ack timeout
         fut = CheckpointFuture(job.step, job.directory)
-        # phase 1a: drain this rank's shards through this rank's lane
-        self.engine.save(job.directory, {self.rank: records}, objects, fut)
+        # phase 1a: drain this rank's shards through this rank's lane.
+        # Differential saves keep *per-rank* delta bases: each rank's
+        # engine retains the previous snapshot of exactly the shards it
+        # writes (the partition is deterministic for an unchanged shard
+        # set, and any reshard forces a keyframe upstream).
+        self.engine.save(job.directory, {self.rank: records}, objects, fut,
+                        delta=delta)
         fut.wait_captured()
         job.rank_captured(self.rank, fut)
         fut.wait_persisted()
@@ -295,11 +303,16 @@ class Coordinator:
 
     def submit(self, step: int, directory: str,
                records: Sequence[ShardRecord], objects: Dict[str, Any],
-               future: CheckpointFuture) -> None:
+               future: CheckpointFuture,
+               delta: Optional[DeltaSaveSpec] = None) -> None:
         """Fan one save out across all ranks. Returns immediately; the
         aggregated ``future`` captures when every rank has captured and
         persists only when every rank has voted *and* acked (phase 1
-        complete — the committer performs phase 2 behind it)."""
+        complete — the committer performs phase 2 behind it).
+        ``delta`` (a :class:`DeltaSaveSpec`) puts the save on the
+        differential path: every rank streams XOR deltas against its own
+        retained bases, and the step commits through the same two-phase
+        vote."""
         by_rank = partition_records(records, self.world)
         # objects ride with the least-loaded rank (deterministic tie-break)
         loads = {r: sum(rec.nbytes for rec in recs)
@@ -312,7 +325,8 @@ class Coordinator:
                        CollectiveBarrier(self.world), self.ack_timeout_s)
         for rank in self.ranks:
             rank.submit(job, by_rank[rank.rank],
-                        objects if rank.rank == obj_rank else {})
+                        objects if rank.rank == obj_rank else {},
+                        delta=delta)
 
     def drain(self) -> None:
         for rank in self.ranks:

@@ -62,17 +62,32 @@ def cmd_ls(args) -> int:
     return 0
 
 
+def _chain_ancestors(repo: CheckpointRepository, step: int) -> List[int]:
+    """Chain ancestors of a differential step (nearest base first), empty
+    for keyframes / full snapshots. Lenient walk (the repository's
+    shared one): an unreadable ancestor truncates the list — its direct
+    dependent still gets flagged, via the not-committed check."""
+    return list(reversed(repo.chain_steps(step)[:-1]))
+
+
 def cmd_verify(args) -> int:
     repo = _repo(args)
-    bad = 0
+    bad_steps = set()
     all_orphans = repo.orphans()
+    committed = repo.steps()
     if args.step is not None:
-        if args.step not in repo.steps() and args.step not in all_orphans:
+        if args.step not in committed and args.step not in all_orphans:
             print(f"step {args.step}: NOT FOUND — no such step on any tier")
             return 1
         steps = [args.step] if args.step not in all_orphans else []
+        # a differential step is only as trustworthy as its chain: pull
+        # every ancestor into this audit too
+        for b in _chain_ancestors(repo, args.step):
+            if b in committed and b not in steps:
+                steps.append(b)
+        steps.sort()
     else:
-        steps = repo.steps()
+        steps = committed
     for step in steps:
         if not repo.has_manifest(step):
             print(f"step {step}: legacy directory (no manifest) — "
@@ -83,8 +98,21 @@ def cmd_verify(args) -> int:
             print(f"step {step}: OK ({len(repo.manifest(step).files)} files"
                   f"{', sizes only' if args.fast else ', checksums verified'})")
         else:
-            bad += 1
+            bad_steps.add(step)
             print(f"step {step}: CORRUPT — {', '.join(res.problems)}")
+    # Chain propagation: a delta step whose keyframe or any intermediate
+    # delta is damaged/missing cannot be replayed — fail it too, even
+    # though its own files are byte-perfect.
+    for step in steps:
+        if step in bad_steps:
+            continue
+        for b in _chain_ancestors(repo, step):
+            if b in bad_steps or b in all_orphans or b not in committed:
+                bad_steps.add(step)
+                print(f"step {step}: CHAIN-BROKEN — delta depends on "
+                      f"damaged or missing step {b}")
+                break
+    bad = len(bad_steps)
     orphans = 0
     for step in all_orphans:
         if args.step is not None and step != args.step:

@@ -96,11 +96,32 @@ def file_checksum(path: str,
 
 @dataclasses.dataclass(frozen=True)
 class FileEntry:
-    """One checkpoint file inside a step."""
+    """One checkpoint file inside a step.
+
+    ``codec`` records how the file's tensor payload is encoded
+    (differential checkpointing): ``"raw"`` for full snapshots/keyframes,
+    ``"xor+zstd"`` for delta files — chain-aware GC and ``cli verify``
+    use it to tell chain roots from dependents. ``None`` for non-tensor
+    files (votes, legacy formats)."""
 
     name: str
     nbytes: int
     checksum: Optional[int] = None
+    codec: Optional[str] = None
+
+
+def dsllm_file_codec(path: str) -> Optional[str]:
+    """Tensor codec of one ``.dsllm`` file, from its footer meta (written
+    by the engine's file plan). ``None`` when unreadable / not declared."""
+    try:
+        from repro.core.layout import FileReader
+        meta = FileReader(path).meta or {}
+    except Exception:
+        return None
+    d = meta.get("delta") or {}
+    if not d:
+        return None
+    return "raw" if d.get("keyframe", True) else d.get("codec", "raw")
 
 
 def rank_manifest_name(rank: int) -> str:
@@ -278,15 +299,24 @@ class StepManifest:
                     f"declared by any rank manifest — stale shards or a "
                     f"foreign writer; refusing to bless them")
         files = []
+        # Per-file codec is only meaningful for differential saves (the
+        # committer passes delta meta for those); probing every footer on
+        # every commit would tax the non-delta path for nothing.
+        probe_codec = (meta or {}).get("delta") is not None
         for n in names:
             path = os.path.join(sdir, n)
             fe = declared.get(n)
             if fe is not None and (fe.checksum is not None or not checksum):
-                files.append(fe)  # reuse the rank lane's hash
+                pass  # reuse the rank lane's hash
             else:
-                files.append(FileEntry(
+                fe = FileEntry(
                     name=n, nbytes=os.path.getsize(path),
-                    checksum=file_checksum(path) if checksum else None))
+                    checksum=file_checksum(path) if checksum else None)
+            if probe_codec and n.endswith(".dsllm") and fe.codec is None:
+                codec = dsllm_file_codec(path)
+                if codec is not None:
+                    fe = dataclasses.replace(fe, codec=codec)
+            files.append(fe)
         if expect_ranks is not None:
             meta = dict(meta or {})
             meta.setdefault("world", expect_ranks)

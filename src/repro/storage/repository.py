@@ -290,6 +290,12 @@ class CheckpointRepository:
                     self._manifest_cache.pop(step, None)
                     break
             time.sleep(0.01)
+        # Rewind-resave: any committed step whose delta chain passes
+        # through this step was XOR-encoded against the bytes about to be
+        # replaced — replaying it over the new bytes would restore
+        # garbage that passes every checksum. Retract such dependents
+        # everywhere before touching the data.
+        self._retract_delta_dependents(step)
         try:
             os.unlink(self._entry_path(step))
         except FileNotFoundError:
@@ -301,6 +307,48 @@ class CheckpointRepository:
             shutil.rmtree(sdir)
         os.makedirs(sdir, exist_ok=True)
         return sdir
+
+    def _retract_delta_dependents(self, step: int) -> None:
+        """Turn committed delta steps that depend on ``step`` into
+        invisible orphans (local catalog entry → in-flight marker; remote
+        tier copies deleted). Chains only point backwards, so on the
+        normal forward-progress path (``step`` newer than everything
+        committed) this scans nothing."""
+        later = [s for s in self.steps() if s > step]
+        for s in later:
+            try:
+                # strict walk: a truncated/lenient chain could silently
+                # omit `step` and leave a stale dependent committed
+                chain = self.chain_steps(s, strict=True)
+                dependent = step in chain
+            except (BackendError, OSError, ValueError):
+                # cannot prove s is independent of the bytes being
+                # replaced — correctness over retention: retract it
+                dependent = True
+            if not dependent:
+                continue
+            while True:  # let an in-flight cascade of s finish first
+                with self._lock:
+                    busy = s in self._mid_cascade
+                if not busy:
+                    break
+                time.sleep(0.01)
+            try:
+                os.unlink(self._entry_path(s))
+            except FileNotFoundError:
+                pass
+            with open(self._marker_path(s), "w") as f:
+                f.write(str(time.time()))
+            with self._lock:
+                self._manifest_cache.pop(s, None)
+            for tier in self.remote_tiers:
+                try:
+                    if self.tier_has_step(tier, s):
+                        self._delete_tier_step(tier, s)
+                except BackendError:
+                    pass  # best effort: a tier failing deletes is failing
+                          # reads too; the local retraction already makes
+                          # the step invisible to this repository
 
     def abort_step(self, step: int) -> None:
         """A save failed after ``begin_step``: the marker stays (the step
@@ -373,6 +421,84 @@ class CheckpointRepository:
 
     def has_manifest(self, step: int) -> bool:
         return os.path.isfile(self._entry_path(step))
+
+    def manifest_any_tier(self, step: int) -> StepManifest:
+        """Manifest from the local catalog, else the first remote tier
+        holding the step (a chain base GC'd locally is still a chain
+        base — its metadata must stay reachable)."""
+        try:
+            return self.manifest(step)
+        except (BackendError, OSError, ValueError):
+            for tier in self.remote_tiers:
+                try:
+                    if self.tier_has_step(tier, step):
+                        m = StepManifest.from_json_bytes(
+                            tier.backend.get(catalog_key(step)))
+                        with self._lock:
+                            self._manifest_cache[step] = m
+                        return m
+                except (BackendError, OSError, ValueError):
+                    continue
+            raise
+
+    # ----------------------------------------------------------- delta chains
+    def delta_base(self, step: int) -> Optional[int]:
+        """Base step of a differential step, or None for keyframes / full
+        snapshots / steps without readable chain metadata."""
+        try:
+            m = self.manifest_any_tier(step)
+        except (BackendError, OSError, ValueError):
+            return None
+        d = (m.meta or {}).get("delta") or {}
+        if d.get("keyframe", True):
+            return None
+        return d.get("base_step")
+
+    def chain_steps(self, step: int, *, strict: bool = False) -> List[int]:
+        """``[keyframe, ..., step]`` for a differential step (ascending);
+        ``[step]`` for keyframes / full snapshots / manifest-less steps.
+
+        Lenient mode (the default — GC/audit callers) treats an
+        unreadable ancestor manifest or corrupt base metadata as the
+        chain root and returns what it could walk; ``strict=True``
+        (restore) raises instead, so a broken chain is never silently
+        replayed from mid-way."""
+        chain = [step]
+        seen = {step}
+        cur = step
+        while True:
+            try:
+                m = self.manifest_any_tier(cur)
+            except (BackendError, OSError, ValueError):
+                if strict and cur != step:
+                    raise
+                return list(reversed(chain))  # legacy/unreadable root
+            d = (m.meta or {}).get("delta") or {}
+            if d.get("keyframe", True):
+                return list(reversed(chain))
+            base = d.get("base_step")
+            if base is None or base in seen:
+                if strict:
+                    raise BackendError(
+                        f"step {step}: corrupt delta-chain metadata at "
+                        f"step {cur} (base_step={base})")
+                return list(reversed(chain))
+            chain.append(base)
+            seen.add(base)
+            cur = base
+
+    def chain_closure(self, steps: Iterable[int]) -> Set[int]:
+        """``steps`` plus every chain ancestor (base, base-of-base, ...)
+        down to each keyframe — the retention unit of differential
+        checkpointing: a retained/pinned delta step pins its whole chain."""
+        out: Set[int] = set(steps)
+        stack = list(out)
+        while stack:
+            base = self.delta_base(stack.pop())
+            if base is not None and base not in out:
+                out.add(base)
+                stack.append(base)
+        return out
 
     # ------------------------------------------------------------------ pins
     @property
@@ -452,51 +578,69 @@ class CheckpointRepository:
     def cascade_step(self, step: int) -> None:
         """Replicate one committed step to every remote tier (synchronous;
         the background worker calls this off the training path)."""
+        for tier in self.remote_tiers:
+            self._cascade_step_to_tier(step, tier)
+
+    def _cascade_step_to_tier(self, step: int, tier: Tier,
+                              _depth: int = 0) -> None:
+        """One step onto one tier — chains ship whole or not at all: a
+        differential step's ancestors are uploaded first (recursively), so
+        the tier never holds a delta whose keyframe it cannot produce."""
+        if _depth > 4096:
+            raise BackendError(
+                f"step {step}: delta-chain recursion exceeded sanity bound")
         manifest = self.manifest(step)
         sdir = self.step_dir(step)
         payload = manifest.to_json_bytes()
-        for tier in self.remote_tiers:
-            if self.tier_has_step(tier, step):
-                # Identical manifest ⇒ identical bytes already landed. A
-                # *different* manifest means the step was re-saved after an
-                # earlier cascade (rewind): re-upload, or a later local GC
-                # would re-hydrate the stale bytes.
-                if tier.backend.get(catalog_key(step)) == payload:
-                    continue
-                tier.backend.delete(catalog_key(step))  # invisible first
-            t0 = time.perf_counter()
-            nbytes = 0
-            uploaded: List[str] = []
-            try:
-                for fe in manifest.files:
-                    key = data_key(step, fe.name)
-                    nbytes += tier.backend.put_file(
-                        key, os.path.join(sdir, fe.name))
-                    uploaded.append(key)
-                # manifest last: the step is visible on the tier iff
-                # complete
-                tier.backend.put(catalog_key(step), payload)
-                # drop data objects a superseded upload left behind that
-                # the new manifest no longer references
-                expected = {data_key(step, fe.name)
-                            for fe in manifest.files}
-                for key in tier.backend.list(f"{step_dirname(step)}/"):
-                    if key not in expected:
-                        tier.backend.delete(key)
-            except BaseException:
-                # Never leak manifest-less data objects: tier GC only
-                # enumerates cataloged steps, so stragglers would be
-                # undeletable (and could wedge a capacity-bound tier).
-                for key in uploaded:
-                    try:
-                        tier.backend.delete(key)
-                    except BaseException:  # noqa: BLE001
-                        pass
-                raise
-            with self._lock:
-                self.cascade_log.append(CascadeEvent(
-                    step=step, tier=tier.name, nbytes=nbytes,
-                    t_start=t0, t_end=time.perf_counter()))
+        d = (manifest.meta or {}).get("delta") or {}
+        base = None if d.get("keyframe", True) else d.get("base_step")
+        if base is not None and not self.tier_has_step(tier, base):
+            if not self._local_complete(base):
+                raise BackendError(
+                    f"step {step}: chain base {base} is neither on tier "
+                    f"{tier.name!r} nor complete locally — shipping "
+                    f"nothing (chains cascade whole or not at all)")
+            self._cascade_step_to_tier(base, tier, _depth + 1)
+        if self.tier_has_step(tier, step):
+            # Identical manifest ⇒ identical bytes already landed. A
+            # *different* manifest means the step was re-saved after an
+            # earlier cascade (rewind): re-upload, or a later local GC
+            # would re-hydrate the stale bytes.
+            if tier.backend.get(catalog_key(step)) == payload:
+                return
+            tier.backend.delete(catalog_key(step))  # invisible first
+        t0 = time.perf_counter()
+        nbytes = 0
+        uploaded: List[str] = []
+        try:
+            for fe in manifest.files:
+                key = data_key(step, fe.name)
+                nbytes += tier.backend.put_file(
+                    key, os.path.join(sdir, fe.name))
+                uploaded.append(key)
+            # manifest last: the step is visible on the tier iff complete
+            tier.backend.put(catalog_key(step), payload)
+            # drop data objects a superseded upload left behind that
+            # the new manifest no longer references
+            expected = {data_key(step, fe.name)
+                        for fe in manifest.files}
+            for key in tier.backend.list(f"{step_dirname(step)}/"):
+                if key not in expected:
+                    tier.backend.delete(key)
+        except BaseException:
+            # Never leak manifest-less data objects: tier GC only
+            # enumerates cataloged steps, so stragglers would be
+            # undeletable (and could wedge a capacity-bound tier).
+            for key in uploaded:
+                try:
+                    tier.backend.delete(key)
+                except BaseException:  # noqa: BLE001
+                    pass
+            raise
+        with self._lock:
+            self.cascade_log.append(CascadeEvent(
+                step=step, tier=tier.name, nbytes=nbytes,
+                t_start=t0, t_end=time.perf_counter()))
 
     def _cascade_worker(self) -> None:
         q = self._cascade_q
@@ -646,6 +790,11 @@ class CheckpointRepository:
         protected = self._protected(self.steps())
         policy = retention or self.retention
         retained = policy.retained(steps) if policy else set(steps)
+        # chain-aware: a kept delta step keeps its keyframe and every
+        # intermediate delta — collecting any ancestor would orphan the
+        # whole tail of the chain.
+        retained = self.chain_closure(retained
+                                      | (protected & set(steps)))
         for step in steps:
             if step in retained or step in protected:
                 continue
@@ -668,8 +817,9 @@ class CheckpointRepository:
             if tier.retention is None:
                 continue
             tsteps = self.tier_steps(tier)
-            keep = tier.retention.retained(tsteps) \
-                | (self._protected(tsteps) & set(tsteps))
+            keep = self.chain_closure(
+                tier.retention.retained(tsteps)
+                | (self._protected(tsteps) & set(tsteps)))
             doomed = [s for s in tsteps if s not in keep]
             if doomed:
                 report.remote_deleted[tier.name] = doomed

@@ -111,6 +111,15 @@ class Trainer:
         committed step — and restore is elastic across worlds: an N-rank
         save resumes onto any M-rank mesh.
 
+        Differential checkpoints (``CheckpointManager(delta=...)``)
+        resume transparently: a delta step's chain (keyframe + every
+        intermediate delta) is discovered from the catalog, re-verified
+        against manifest checksums, and replayed bit-exactly — including
+        the data-pipeline cursor and RNG objects, which ride every save
+        in full, so a run resumed from a delta step reproduces the
+        uninterrupted loss trajectory exactly
+        (``tests/test_delta_faults.py::test_exact_resume_from_delta_step``).
+
         The manager's :class:`~repro.core.restore.RestoreEngine` indexes
         the step directory once, plans shard↔target intersections, and fans
         ranged reads out over a thread pool; per-phase timings land in

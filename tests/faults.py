@@ -17,6 +17,12 @@ there, so tests can walk every window of the two-phase commit:
 ``action="stall"`` blocks the rank on an event instead of killing it
 (the straggler case — the coordinator's ack timeout must fire); call
 :meth:`release` to let the stalled rank finish so engines can drain.
+
+Differential-checkpoint faults: the same protocol points cover delta
+saves (a rank killed mid-delta-save must leave the *chain* restorable at
+the previous committed step), and :func:`tamper_file` models post-commit
+bitrot — flip payload bytes of a committed keyframe/delta in place, so
+chain-aware ``storage.cli verify`` must fail every dependent step.
 """
 
 from __future__ import annotations
@@ -28,6 +34,20 @@ from typing import Any, Dict, Optional
 
 class InjectedFault(RuntimeError):
     """The deterministic 'kill' raised inside a writer rank."""
+
+
+def tamper_file(path: str, *, offset: int = 64, nbytes: int = 8) -> None:
+    """Flip ``nbytes`` payload bytes of ``path`` in place (post-commit
+    bitrot). The file length is unchanged, so only checksum audits — not
+    size checks — can catch it; delta-chain tests use this on keyframes
+    and intermediate deltas."""
+    size = os.path.getsize(path)
+    offset = max(0, min(offset, size - nbytes))
+    with open(path, "r+b") as f:
+        f.seek(offset)
+        data = f.read(nbytes)
+        f.seek(offset)
+        f.write(bytes(b ^ 0xFF for b in data))
 
 
 class FaultInjector:

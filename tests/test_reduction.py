@@ -1,9 +1,13 @@
 """Differential/compressed checkpointing (beyond-paper, kernel-backed)."""
 
+import os
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+from conftest import HealthCheck, given, settings, st
 
 from repro.core.reduction import (DifferentialCheckpointer, decode_tensor,
                                   encode_tensor)
@@ -62,6 +66,118 @@ def test_differential_checkpointer_roundtrip(tmp_path):
         np.testing.assert_array_equal(state["['a']"], np.asarray(tree["a"]))
         np.testing.assert_array_equal(state["['b']['c']"],
                                       np.asarray(tree["b"]["c"]))
+
+
+def test_differential_checkpointer_restart_continues_chain(tmp_path):
+    """ISSUE-4 satellite bugfix: a restarted process must derive its
+    keyframe/chain state from disk. Pre-fix, a restart reset _n_saves
+    with an empty _prev, so a cadence-said-delta save was written
+    ``keyframe=False`` while actually raw-encoded and restore() died on
+    its ``chain[0]["keyframe"]`` assertion."""
+    t0 = {"a": jnp.arange(1000, dtype=jnp.float32)}
+    t1 = {"a": t0["a"].at[::9].add(1.0)}
+    t2 = {"a": t1["a"].at[::9].add(1.0)}
+    t3 = {"a": t2["a"].at[::9].add(1.0)}
+    ck = DifferentialCheckpointer(str(tmp_path), keyframe_every=4)
+    ck.save(0, t0)
+    ck.save(1, t1)
+    # process restart
+    ck2 = DifferentialCheckpointer(str(tmp_path), keyframe_every=4)
+    assert ck2._n_saves == 2  # cadence derived from disk
+    info = ck2.save(2, t2)
+    # the chain *continues* as deltas (bases re-armed from disk)...
+    assert not info["keyframe"]
+    import pickle
+    with open(os.path.join(tmp_path, "diff_00000002.pkl"), "rb") as fh:
+        rec = pickle.load(fh)
+    assert all(e.codec == "delta-xor" for e in rec["tensors"].values())
+    ck2.save(3, t3)
+    # ...and every step restores across the restart boundary
+    for step, tree in ((0, t0), (1, t1), (2, t2), (3, t3)):
+        state = DifferentialCheckpointer(str(tmp_path)).restore(step)
+        np.testing.assert_array_equal(state["['a']"], np.asarray(tree["a"]))
+
+
+def test_differential_checkpointer_restart_with_damaged_tail(tmp_path):
+    """If the on-disk chain tail is unreadable at restart, the next save
+    must fall back to a keyframe (never a delta against nothing)."""
+    t0 = {"a": jnp.arange(512, dtype=jnp.float32)}
+    ck = DifferentialCheckpointer(str(tmp_path), keyframe_every=4)
+    ck.save(0, t0)
+    ck.save(1, {"a": t0["a"] + 1})
+    for f in sorted(os.listdir(tmp_path)):  # corrupt every record
+        with open(os.path.join(tmp_path, f), "r+b") as fh:
+            fh.truncate(8)
+    ck2 = DifferentialCheckpointer(str(tmp_path), keyframe_every=4)
+    t2 = {"a": t0["a"] + 2}
+    info = ck2.save(2, t2)
+    assert info["keyframe"]  # forced: no usable bases on disk
+    state = ck2.restore(2)
+    np.testing.assert_array_equal(state["['a']"], np.asarray(t2["a"]))
+
+
+# ----------------------------------------------- property-based round-trips
+_PROP_DTYPES = ("float32", "float16", "int32", "uint8", "int8")
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       dtype=st.sampled_from(_PROP_DTYPES),
+       shape=st.lists(st.integers(1, 17), min_size=0, max_size=3),
+       n_deltas=st.integers(0, 3))
+def test_property_encode_decode_roundtrip(seed, dtype, shape, n_deltas):
+    """encode/decode is bit-exact for arbitrary dtypes/shapes (odd sizes
+    exercise the u32-padding path) through raw and delta-chain codecs."""
+    rng = np.random.default_rng(seed)
+    dt = np.dtype(dtype)
+    shape = tuple(shape)
+    if dt.kind == "f":
+        arr = rng.standard_normal(shape).astype(dt)
+    else:
+        arr = rng.integers(0, 100, size=shape).astype(dt)
+    enc, work = encode_tensor(jnp.asarray(arr))
+    assert enc.codec == "raw"
+    np.testing.assert_array_equal(decode_tensor(enc), arr)
+    cur, prev_work, prev_dec = arr, work, arr
+    for _ in range(n_deltas):
+        nxt = np.array(cur, copy=True)
+        flat = nxt.reshape(-1)
+        if flat.size:
+            idx = rng.integers(0, flat.size, size=max(1, flat.size // 7))
+            flat[idx] += np.asarray(1, dt) if dt.kind != "f" \
+                else np.asarray(0.5, dt)
+        enc, work = encode_tensor(jnp.asarray(nxt), prev=prev_work)
+        if cur.size:
+            assert enc.codec == "delta-xor"
+        dec = decode_tensor(enc, prev=np.asarray(prev_dec))
+        np.testing.assert_array_equal(dec, nxt)
+        cur, prev_work, prev_dec = nxt, work, dec
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       quant=st.sampled_from(("none", "bf16", "int8")),
+       then_delta=st.booleans())
+def test_property_quant_delta_codec_mixes(seed, quant, then_delta):
+    """raw↔delta↔quant mixes: quantized encodes chain with deltas in the
+    quantized working domain and decode returns that domain bit-exactly."""
+    rng = np.random.default_rng(seed)
+    x0 = rng.standard_normal((256, 256)).astype(np.float32)
+    enc0, w0 = encode_tensor(jnp.asarray(x0), quant=quant)
+    assert enc0.quant == quant
+    dec0 = decode_tensor(enc0)
+    np.testing.assert_array_equal(dec0,
+                                  np.asarray(w0).reshape(dec0.shape))
+    if not then_delta:
+        return
+    x1 = np.array(x0, copy=True)
+    x1[::5] += 0.25
+    enc1, _w1 = encode_tensor(jnp.asarray(x1), quant=quant, prev=w0)
+    assert enc1.codec == "delta-xor"
+    dec1 = decode_tensor(enc1, prev=dec0)
+    _enc_ref, w1_ref = encode_tensor(jnp.asarray(x1), quant=quant)
+    np.testing.assert_array_equal(dec1,
+                                  np.asarray(w1_ref).reshape(dec1.shape))
 
 
 def test_differential_smaller_than_full_for_slow_state(tmp_path):
