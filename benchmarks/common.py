@@ -70,10 +70,11 @@ def make_trainer(cfg, manager: Optional[CheckpointManager], batch=2,
 def manager_for(mode: str, directory: str, *, cache_mb: int = 1536,
                 throttle: Optional[float] = THROTTLE_MBPS,
                 flush_threads: int = 4) -> CheckpointManager:
-    return CheckpointManager(directory, mode=mode,
-                             host_cache_bytes=cache_mb << 20,
-                             flush_threads=flush_threads,
-                             throttle_mbps=throttle)
+    from repro.core import CheckpointPolicy, EnginePolicy
+    return CheckpointManager.from_policy(
+        directory, CheckpointPolicy(engine=EnginePolicy(
+            mode=mode, host_cache_bytes=cache_mb << 20,
+            flush_threads=flush_threads, throttle_mbps=throttle)))
 
 
 def save_results(name: str, rows: List[Dict[str, Any]],

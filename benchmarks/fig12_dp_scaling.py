@@ -22,7 +22,7 @@ import os, json, time, tempfile, shutil
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
-from repro.core import CheckpointManager
+from repro.core import CheckpointManager, CheckpointPolicy, EnginePolicy
 from repro.launch.mesh import make_mesh
 
 results = []
@@ -37,8 +37,9 @@ for dp in (1, 2, 4, 8):
     state = {"model": {"w": params}, "optimizer": {"m": opt},
              "meta": {"dp": dp}}
     d = tempfile.mkdtemp()
-    mgr = CheckpointManager(d, mode="datastates",
-                            host_cache_bytes=128 << 20, throttle_mbps=600.0)
+    mgr = CheckpointManager.from_policy(
+        d, CheckpointPolicy(engine=EnginePolicy(
+            host_cache_bytes=128 << 20, throttle_mbps=600.0)))
     fut = mgr.save(0, state)
     fut.wait_persisted()
     stats = fut.stats

@@ -33,7 +33,8 @@ from typing import Dict, List
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import CheckpointManager, DeltaPolicy
+from repro.core import (CheckpointManager, CheckpointPolicy,
+                        DeltaPolicy, EnginePolicy, StoragePolicy)
 
 from .common import TempDir, save_results
 
@@ -81,10 +82,13 @@ def _run_variant(name: str, shape, n_saves: int) -> dict:
     state = _initial_state(shape)
     payload = _state_nbytes(state)
     with TempDir() as d:
-        mgr = CheckpointManager(
-            d, mode="datastates",
-            host_cache_bytes=int(payload * 2.5) + (64 << 20),
-            flush_threads=4, manifest_checksums=False, delta=delta)
+        mgr = CheckpointManager.from_policy(
+            d, CheckpointPolicy(
+                engine=EnginePolicy(
+                    host_cache_bytes=int(payload * 2.5) + (64 << 20),
+                    flush_threads=4),
+                storage=StoragePolicy(manifest_checksums=False),
+                delta=delta))
         captures: List[float] = []
         persists: List[float] = []
         bytes_per_step: List[int] = []

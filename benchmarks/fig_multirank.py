@@ -30,7 +30,9 @@ from typing import List
 
 import numpy as np
 
-from repro.core import CheckpointManager, FileReader
+from repro.core import (CheckpointManager, CheckpointPolicy,
+                        DistPolicy, EnginePolicy, FileReader,
+                        StoragePolicy)
 
 from .common import TempDir, save_results
 
@@ -82,10 +84,13 @@ def _run_variant(world: int, state, repeats: int) -> dict:
                 world, mode="datastates",
                 host_cache_bytes=(64 << 20) // world, flush_threads=1,
                 throttle_mbps=LANE_MBPS, checksum_files=False)
-        mgr = CheckpointManager(
-            d, mode="datastates", host_cache_bytes=64 << 20,
-            flush_threads=1, throttle_mbps=LANE_MBPS,
-            manifest_checksums=False, coordinator=coordinator)
+        mgr = CheckpointManager.from_policy(
+            d, CheckpointPolicy(
+                engine=EnginePolicy(host_cache_bytes=64 << 20,
+                                    flush_threads=1,
+                                    throttle_mbps=LANE_MBPS),
+                storage=StoragePolicy(manifest_checksums=False),
+                dist=DistPolicy(coordinator=coordinator)))
         best = None
         for rep in range(repeats):
             step = rep + 1

@@ -38,7 +38,8 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 os.environ.setdefault("REPRO_NO_FSYNC", "1")
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
-from repro.core import CheckpointManager, RestoreEngine, step_dir
+from repro.core import (CheckpointManager, CheckpointPolicy,
+                        EnginePolicy, RestoreEngine, step_dir)
 from repro.core.baselines import load_snapshot_rank, load_sync_rank
 from repro.core.distributed import _path_str
 from repro.core.layout import FileReader
@@ -166,8 +167,9 @@ def check(tree):
 rows = []
 for mode in ("datastates", "snapshot", "sync"):
     d = tempfile.mkdtemp(prefix="fig_restore_")
-    mgr = CheckpointManager(d, mode=mode, host_cache_bytes=1 << 30,
-                            throttle_mbps=None)
+    mgr = CheckpointManager.from_policy(
+        d, CheckpointPolicy(engine=EnginePolicy(
+            mode=mode, host_cache_bytes=1 << 30)))
     mgr.save(0, state, blocking=True)
     mgr.close()
     sdir = step_dir(d, 0)

@@ -21,7 +21,8 @@ from typing import List
 
 import numpy as np
 
-from repro.core import CheckpointManager
+from repro.core import (CheckpointManager, CheckpointPolicy,
+                        EnginePolicy, StoragePolicy)
 from repro.storage import ObjectStoreBackend, RetentionPolicy, Tier
 
 from .common import (THROTTLE_MBPS, TempDir, bench_cfg, make_trainer,
@@ -38,10 +39,12 @@ def _train_variant(cfg, n_steps: int, ckpt_interval: int, warmup: int,
         if tiers:
             remote = ObjectStoreBackend(latency_s=REMOTE_LATENCY_S,
                                         bandwidth_mbps=REMOTE_BANDWIDTH_MBPS)
-        mgr = CheckpointManager(
-            d, mode="datastates", host_cache_bytes=1536 << 20,
-            throttle_mbps=THROTTLE_MBPS,
-            tiers=[Tier("object", remote)] if remote else ())
+        mgr = CheckpointManager.from_policy(
+            d, CheckpointPolicy(
+                engine=EnginePolicy(host_cache_bytes=1536 << 20,
+                                    throttle_mbps=THROTTLE_MBPS),
+                storage=StoragePolicy(
+                    tiers=(Tier("object", remote),) if remote else ())))
         tr = make_trainer(cfg, mgr)
         tr.run(warmup, ckpt_interval=0)  # jit compile outside the window
         t0 = time.perf_counter()
@@ -77,10 +80,12 @@ def _train_variant(cfg, n_steps: int, ckpt_interval: int, warmup: int,
 
 def _gc_bound(cfg, keep_last: int, n_saves: int) -> dict:
     with TempDir() as d:
-        mgr = CheckpointManager(
-            d, mode="datastates", host_cache_bytes=1536 << 20,
-            throttle_mbps=THROTTLE_MBPS,
-            retention=RetentionPolicy(keep_last_n=keep_last))
+        mgr = CheckpointManager.from_policy(
+            d, CheckpointPolicy(
+                engine=EnginePolicy(host_cache_bytes=1536 << 20,
+                                    throttle_mbps=THROTTLE_MBPS),
+                storage=StoragePolicy(
+                    retention=RetentionPolicy(keep_last_n=keep_last))))
         tr = make_trainer(cfg, mgr)
         state = tr.state()
         per_step = state_nbytes(state)

@@ -15,7 +15,7 @@ import time
 from . import (fig04_serialization, fig07_throughput, fig08_iteration,
                fig09_end_to_end, fig12_dp_scaling, fig13_frequency,
                fig14_flush, fig15_timeline, fig_differential, fig_multirank,
-               fig_restore, fig_tiered, table1_heterogeneity,
+               fig_quantized, fig_restore, fig_tiered, table1_heterogeneity,
                table3_breakdown)
 
 MODULES = {
@@ -29,6 +29,7 @@ MODULES = {
     "fig15": fig15_timeline,
     "fig_differential": fig_differential,
     "fig_multirank": fig_multirank,
+    "fig_quantized": fig_quantized,
     "fig_restore": fig_restore,
     "fig_tiered": fig_tiered,
     "table1": table1_heterogeneity,

@@ -21,7 +21,7 @@ import jax
 import numpy as np
 
 from repro.configs import get_config, smoke_variant
-from repro.core import CheckpointManager, DeltaPolicy
+from repro.core import CheckpointManager, CheckpointPolicy, DeltaPolicy
 from repro.training.loop import Trainer
 
 
@@ -29,7 +29,8 @@ def main() -> int:
     cfg = smoke_variant(get_config("llama3.2-1b"))
 
     with tempfile.TemporaryDirectory() as d:
-        mgr = CheckpointManager(d, delta=DeltaPolicy(keyframe_every=4))
+        mgr = CheckpointManager.from_policy(
+            d, CheckpointPolicy(delta=DeltaPolicy(keyframe_every=4)))
         tr = Trainer(cfg, batch=2, seq_len=64, manager=mgr)
         for step in range(1, 7):
             tr.run(1)

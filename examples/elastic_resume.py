@@ -39,7 +39,7 @@ def main() -> int:
              "meta": {"step": 12, "mesh": "4x2"}}
 
     with tempfile.TemporaryDirectory() as d:
-        mgr = CheckpointManager(d, mode="datastates")
+        mgr = CheckpointManager.from_policy(d)
         mgr.save(12, state, blocking=True)
         print(f"saved on mesh {mesh_a.devices.shape} "
               f"({len(jax.devices())} devices)")

@@ -16,7 +16,7 @@ import tempfile
 import time
 
 from repro.configs import get_config, uniform_groups
-from repro.core import CheckpointManager
+from repro.core import CheckpointManager, CheckpointPolicy, EnginePolicy
 from repro.training.loop import Trainer
 
 
@@ -31,9 +31,12 @@ def small_model():
 def run_engine(mode: str, steps: int = 8):
     cfg = small_model()
     with tempfile.TemporaryDirectory() as d:
-        # throttle flushes to ~300 MB/s to emulate a contended PFS share
-        mgr = CheckpointManager(d, mode=mode, host_cache_bytes=1 << 30,
-                                throttle_mbps=300.0)
+        # throttle flushes to ~300 MB/s to emulate a contended PFS share;
+        # only the EnginePolicy differs between variants — policy objects
+        # make that explicit (CheckpointManager.from_policy)
+        mgr = CheckpointManager.from_policy(
+            d, CheckpointPolicy(engine=EnginePolicy(
+                mode=mode, host_cache_bytes=1 << 30, throttle_mbps=300.0)))
         tr = Trainer(cfg, batch=4, seq_len=128, manager=mgr)
         t0 = time.perf_counter()
         recs = tr.run(steps, ckpt_interval=1)

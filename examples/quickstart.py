@@ -4,6 +4,12 @@ Trains a reduced llama3.2-1b on synthetic data with the DataStates engine
 checkpointing every iteration, then restores into a fresh trainer and shows
 the two runs continue identically.
 
+The manager is configured the policy-first way (``CheckpointPolicy`` +
+``CheckpointManager.from_policy``): one composable config object per
+subsystem instead of a flat kwarg list, plus a ``StateProviderRegistry``
+making the per-domain provider routing explicit — the paper's composable
+state providers as the public API.
+
     PYTHONPATH=src python examples/quickstart.py
 """
 
@@ -12,7 +18,8 @@ import tempfile
 import numpy as np
 
 from repro.configs import get_config, smoke_variant
-from repro.core import CheckpointManager
+from repro.core import (CheckpointManager, CheckpointPolicy, EnginePolicy,
+                        StateProviderRegistry)
 from repro.training.loop import Trainer
 
 
@@ -20,10 +27,22 @@ def main() -> int:
     cfg = smoke_variant(get_config("llama3.2-1b"))
     print(f"arch={cfg.name}  layers={cfg.n_layers}  d_model={cfg.d_model}")
 
+    # Policy: engine tuning + per-domain provider routing. The registry's
+    # rules match in order; here model tensors are pinned raw and the rest
+    # takes the adaptive default ("auto": raw, or XOR-delta under a
+    # DeltaPolicy). To trade optimizer bytes for bounded loss, add
+    #   .add_rule(provider="quantized", domain="optimizer",
+    #             dtype="float32")
+    # ahead of the catch-all (benchmarks/fig_quantized.py measures it).
+    policy = CheckpointPolicy(
+        engine=EnginePolicy(mode="datastates", host_cache_bytes=256 << 20),
+        providers=(StateProviderRegistry()
+                   .add_rule(provider="tensor", domain="model")
+                   .add_rule(provider="auto")))
+
     with tempfile.TemporaryDirectory() as ckpt_dir:
         # --- train 6 steps, lazy-checkpoint every 2 -----------------------
-        mgr = CheckpointManager(ckpt_dir, mode="datastates",
-                                host_cache_bytes=256 << 20)
+        mgr = CheckpointManager.from_policy(ckpt_dir, policy)
         trainer = Trainer(cfg, batch=4, seq_len=64, manager=mgr)
         records = trainer.run(6, ckpt_interval=2)
         for r in records:
@@ -31,6 +50,10 @@ def main() -> int:
             print(f"  step {r.step}: loss={r.loss:.4f} "
                   f"iter={r.iter_s*1e3:.0f}ms "
                   f"stall={r.ckpt_stall_s*1e6:.0f}us{flag}")
+        mgr.wait_for_commit()
+        man = mgr.repository.manifest(mgr.latest_step())
+        print("domain routing on disk:",
+              {d: v["providers"] for d, v in man.meta["domains"].items()})
 
         # --- resume from the latest checkpoint ----------------------------
         resumed = Trainer(cfg, batch=4, seq_len=64, manager=mgr)
@@ -44,6 +67,13 @@ def main() -> int:
         print(f"  original  continues: {la}")
         print(f"  restored  continues: {lb}")
         np.testing.assert_allclose(la, lb, rtol=1e-6)
+
+        # --- selective restore: model domain only -------------------------
+        serving = Trainer(cfg, batch=4, seq_len=64, manager=mgr)
+        serving.resume(domains=("model",))
+        print(f"model-only resume read "
+              f"{mgr.last_restore_stats.bytes_read/2**20:.1f} MiB "
+              f"(optimizer bytes never touched)")
         print("restored trainer reproduces the original trajectory ✓")
         mgr.close()
     return 0

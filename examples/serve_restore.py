@@ -21,7 +21,7 @@ from repro.training.loop import Trainer
 def main() -> int:
     cfg = smoke_variant(get_config("starcoder2-7b"))
     with tempfile.TemporaryDirectory() as d:
-        mgr = CheckpointManager(d, mode="datastates")
+        mgr = CheckpointManager.from_policy(d)
         tr = Trainer(cfg, batch=4, seq_len=64, manager=mgr)
         tr.run(4, ckpt_interval=4)
         mgr.wait_for_persist()

@@ -53,8 +53,10 @@ def main() -> int:
     # fresh run: this example demonstrates crash+resume WITHIN one run
     import shutil
     shutil.rmtree(args.ckpt_dir, ignore_errors=True)
-    mgr = CheckpointManager(args.ckpt_dir, mode="datastates",
-                            host_cache_bytes=2 << 30)
+    from repro.core import CheckpointPolicy, EnginePolicy
+    mgr = CheckpointManager.from_policy(
+        args.ckpt_dir, CheckpointPolicy(engine=EnginePolicy(
+            mode="datastates", host_cache_bytes=2 << 30)))
     tr = Trainer(cfg, batch=args.batch, seq_len=args.seq_len, manager=mgr,
                  hp=AdamWConfig(lr=3e-4))
 

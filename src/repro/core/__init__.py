@@ -1,7 +1,12 @@
 """DataStates-LLM core: composable state providers + lazy async checkpointing."""
 
-from .checkpoint import (CheckpointManager, DeltaPolicy, ENGINES,
-                         latest_step, step_dir)
+from .checkpoint import (CheckpointManager, ENGINES, latest_step,
+                         restore_from_repository, step_dir)
+from .policy import (CheckpointPolicy, DeltaPolicy, DistPolicy,
+                     EnginePolicy, StoragePolicy)
+from .registry import (ProviderRoute, ProviderRule, RegistryError,
+                       StateProviderRegistry)
+from .codecs import CodecError, DELTA_CODEC, INT8_CODEC
 from .restore import (RestoreEngine, RestoreError, RestoreIndex,
                       RestoreStats)
 from .engine import (CheckpointError, CheckpointFuture, CheckpointStats,
@@ -10,28 +15,36 @@ from .host_cache import CacheFullError, HostCache, Reservation
 from .layout import FileLayout, FileReader, FileWriter, TensorEntry, ObjectEntry
 from .state_provider import (Chunk, CompositeStateProvider, DeltaSaveSpec,
                              DeltaStateProvider, ObjectStateProvider,
-                             SnapshotCache, StateProvider,
-                             TensorStateProvider)
+                             QuantizedStateProvider, SnapshotCache,
+                             StateProvider, TensorStateProvider)
 from .baselines import (BaseCheckpointEngine, DataStatesEngine,
                         DataStatesOldEngine, SnapshotThenFlushEngine,
                         SyncSerializedEngine, load_snapshot_rank,
                         load_sync_rank)
-from .distributed import ShardRecord, group_by_rank, normalize_index, plan_shards
+from .distributed import (ShardRecord, group_by_rank, normalize_index,
+                          plan_shards, state_domain)
 from .consolidate import consolidate_step_dir
 
 __all__ = [
-    "CheckpointManager", "DeltaPolicy", "ENGINES", "latest_step", "step_dir",
+    "CheckpointManager", "ENGINES", "latest_step", "step_dir",
+    "restore_from_repository",
+    "CheckpointPolicy", "DeltaPolicy", "DistPolicy", "EnginePolicy",
+    "StoragePolicy",
+    "ProviderRoute", "ProviderRule", "RegistryError",
+    "StateProviderRegistry",
+    "CodecError", "DELTA_CODEC", "INT8_CODEC",
     "RestoreEngine", "RestoreError", "RestoreIndex", "RestoreStats",
     "CheckpointError", "CheckpointFuture", "CheckpointStats",
     "DataMovementEngine", "FilePlan",
     "CacheFullError", "HostCache", "Reservation",
     "FileLayout", "FileReader", "FileWriter", "TensorEntry", "ObjectEntry",
     "Chunk", "CompositeStateProvider", "DeltaSaveSpec", "DeltaStateProvider",
-    "ObjectStateProvider", "SnapshotCache", "StateProvider",
-    "TensorStateProvider",
+    "ObjectStateProvider", "QuantizedStateProvider", "SnapshotCache",
+    "StateProvider", "TensorStateProvider",
     "BaseCheckpointEngine", "DataStatesEngine", "DataStatesOldEngine",
     "SnapshotThenFlushEngine", "SyncSerializedEngine",
     "load_snapshot_rank", "load_sync_rank",
     "ShardRecord", "group_by_rank", "normalize_index", "plan_shards",
+    "state_domain",
     "consolidate_step_dir",
 ]

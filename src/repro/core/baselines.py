@@ -38,8 +38,62 @@ from .engine import CheckpointError, CheckpointFuture, DataMovementEngine, \
 from .layout import maybe_fsync
 from .state_provider import (CompositeStateProvider, DeltaSaveSpec,
                              DeltaStateProvider, EncodeBudget,
-                             ObjectStateProvider, SnapshotCache,
-                             TensorStateProvider)
+                             ObjectStateProvider, QuantizedStateProvider,
+                             SnapshotCache, TensorStateProvider)
+
+
+def resolve_provider(rec: ShardRecord, delta: Optional[DeltaSaveSpec]):
+    """Resolve one shard record's registry route to a concrete provider
+    kind: ``(kind, factory)`` where kind is a stock name and factory is
+    the user callable for custom providers (else None). ``"auto"`` (and
+    records without a route) adapts to the save mode: delta when the save
+    is differential, raw otherwise — the pre-registry behavior."""
+    route = rec.route
+    if route is None or (route.provider == "auto" and route.factory is None):
+        return ("delta" if delta is not None else "tensor"), None
+    return route.provider, route.factory
+
+
+def _object_domain(key: str) -> Optional[str]:
+    """State-domain of an object-log key (None for engine-internal keys
+    like ``__checkpoint_meta__``)."""
+    parts = key.split("/")
+    name = parts[1] if len(parts) > 1 else parts[0]
+    return None if name.startswith("__") else name
+
+
+def merge_domains_meta(dst: Dict[str, Dict[str, List[str]]],
+                       src: Dict[str, Dict[str, List[str]]]
+                       ) -> Dict[str, Dict[str, List[str]]]:
+    """Fold one ``{domain: {providers, codecs}}`` map into another
+    (union, sorted). Used to aggregate per-file maps into the save-level
+    summary and per-rank summaries across coordinator lanes — one
+    derivation (from the live provider instances) feeds both the ``.dsllm``
+    footers and ``StepManifest.meta['domains']``, so they can never drift."""
+    for domain, e in src.items():
+        t = dst.setdefault(domain, {"providers": [], "codecs": []})
+        for k in ("providers", "codecs"):
+            for v in e.get(k, ()):
+                if v not in t[k]:
+                    t[k].append(v)
+            t[k].sort()
+    return dst
+
+
+def _reject_encoded_routes(by_rank, engine_name: str) -> None:
+    """Baseline (non-DataMovementEngine) engines stream raw only — a
+    registry route to an encoding provider must fail loudly, not be
+    silently dropped."""
+    for recs in by_rank.values():
+        for r in recs:
+            if r.route is not None \
+                    and r.route.provider not in ("auto", "tensor"):
+                raise ValueError(
+                    f"engine {engine_name!r} cannot honor provider route "
+                    f"{r.route.provider!r} for {r.tensor_name!r}; "
+                    f"registry-routed delta/quantized/custom providers "
+                    f"require a DataMovementEngine mode "
+                    f"(datastates / datastates-old)")
 
 
 def rank_file(directory: str, rank: int, ext: str = "dsllm") -> str:
@@ -144,12 +198,14 @@ class DataStatesEngine(BaseCheckpointEngine):
                     "cannot order the snapshot-cache updates of the next one")
 
     def _delta_precheck(self, delta: DeltaSaveSpec,
-                        records: List[ShardRecord]) -> None:
+                        delta_records: List[ShardRecord],
+                        all_records: List[ShardRecord]) -> None:
         """Fail fast instead of deadlocking inside the cache allocator:
-        a delta save needs previous-version (snapshot cache) + in-flight
-        version (staging) bytes simultaneously."""
-        snap = sum(r.nbytes for r in records)
-        stage = sum(r.nbytes for r in records if r.device_resident)
+        a delta save needs previous-version (snapshot cache — only the
+        delta-routed tensors retain one) + in-flight version (staging,
+        every device tensor) bytes simultaneously."""
+        snap = sum(r.nbytes for r in delta_records)
+        stage = sum(r.nbytes for r in all_records if r.device_resident)
         if snap + stage > self._engine.host_cache.capacity:
             raise CheckpointError(
                 f"differential checkpointing needs the host cache to hold "
@@ -157,7 +213,7 @@ class DataStatesEngine(BaseCheckpointEngine):
                 f"in-flight staging copy ({stage/2**20:.0f} MiB); raise "
                 f"host_cache_bytes above {(snap+stage)/2**20:.0f} MiB")
         if not delta.keyframe:
-            for r in records:
+            for r in delta_records:
                 prev = self.snapshot_cache.view(r.tensor_name)
                 if prev is None or len(prev) != r.nbytes:
                     raise CheckpointError(
@@ -169,23 +225,40 @@ class DataStatesEngine(BaseCheckpointEngine):
         plans: List[FilePlan] = []
         capture_items = []
         streamed_cb = None
-        if delta is not None:
-            all_records = [r for recs in by_rank.values() for r in recs]
-            self._await_delta_turn()
-            self._delta_precheck(delta, all_records)
-            if delta.keyframe:
-                # elastic reshard: drop snapshot entries for tensors that
-                # left the shard set, then (re-)reserve the current set
-                self.snapshot_cache.retain_only(
-                    [r.tensor_name for r in all_records])
-            streamed = threading.Event()
-            n_pending = [len(all_records)]
-            pend_lock = threading.Lock()
-            if not all_records:
-                streamed.set()
-            # per-save: bounds in-flight fresh XOR payloads between
-            # producer and flush lanes (~4 chunks' worth, min 64 MiB)
+        encode_budget = None
+        all_records = [r for recs in by_rank.values() for r in recs]
+        # registry routing resolves here, once per record: "auto" adapts to
+        # the save mode, explicit routes pin a provider per state domain.
+        resolved = {id(r): resolve_provider(r, delta) for r in all_records}
+        delta_records = [r for r in all_records
+                         if resolved[id(r)][0] == "delta"]
+        if delta is None and delta_records:
+            doms = sorted({r.domain for r in delta_records})
+            raise CheckpointError(
+                f"state domains {doms} are routed to the 'delta' provider "
+                f"but the manager has no DeltaPolicy — set "
+                f"CheckpointPolicy.delta, or route them to 'auto'/'tensor'")
+        if delta is not None or any(
+                resolved[id(r)][0] == "quantized"
+                or resolved[id(r)][1] is not None  # custom: may encode too
+                for r in all_records):
+            # bounds in-flight freshly-allocated encoded (XOR / quantized /
+            # custom) payloads between producer and flush lanes (~4 chunks'
+            # worth, min 64 MiB)
             encode_budget = EncodeBudget(max(4 * self.chunk_bytes, 64 << 20))
+        if delta is not None:
+            self._await_delta_turn()
+            self._delta_precheck(delta, delta_records, all_records)
+            if delta.keyframe:
+                # elastic reshard / re-route: drop snapshot entries for
+                # tensors that left the delta set, then (re-)reserve it
+                self.snapshot_cache.retain_only(
+                    [r.tensor_name for r in delta_records])
+            streamed = threading.Event()
+            n_pending = [len(delta_records)]
+            pend_lock = threading.Lock()
+            if not delta_records:
+                streamed.set()
 
             def streamed_cb() -> None:
                 with pend_lock:
@@ -194,38 +267,76 @@ class DataStatesEngine(BaseCheckpointEngine):
                 if done:
                     streamed.set()
         obj_rank = min(by_rank) if by_rank else 0
+        save_domains: Dict[str, Dict[str, List[str]]] = {}
+        file_domains: Dict[str, Dict[str, Any]] = {}
         for rank, records in sorted(by_rank.items()):
             provs: List[Any] = []
+            domains_meta: Dict[str, Dict[str, List[str]]] = {}
+
+            def note_domain(domain: str, provider: str, codec: str) -> None:
+                e = domains_meta.setdefault(domain,
+                                            {"providers": [], "codecs": []})
+                if provider not in e["providers"]:
+                    e["providers"].append(provider)
+                if codec not in e["codecs"]:
+                    e["codecs"].append(codec)
+
             for rec in records:
+                kind, factory = resolved[id(rec)]
                 kw = dict(
                     dtype=rec.dtype, shape=rec.shape, nbytes=rec.nbytes,
                     host_array=None if rec.device_resident else rec.data,
                     global_shape=rec.global_shape, index=rec.index,
                     chunk_bytes=self.chunk_bytes,
                     stream_intra_tensor=self._stream_intra_tensor)
-                if delta is not None:
+                if factory is not None:
+                    tp = factory(rec, **kw)
+                    if not isinstance(tp, TensorStateProvider):
+                        raise CheckpointError(
+                            f"custom provider factory {kind!r} returned "
+                            f"{type(tp).__name__} for {rec.tensor_name!r}"
+                            f" — factories must build TensorStateProvider "
+                            f"subclasses")
+                elif kind == "quantized":
+                    tp = QuantizedStateProvider(rec.tensor_name, **kw)
+                elif kind == "delta":
                     tp = DeltaStateProvider(
                         rec.tensor_name,
                         prev=self.snapshot_cache.ensure(rec.tensor_name,
                                                         rec.nbytes),
                         keyframe=delta.keyframe, codec=delta.codec, **kw)
                     tp.on_stream_end = streamed_cb
-                    # defer encode work until the device is drained: the
-                    # staging lane runs uncontended, so delta saves add no
-                    # capture latency over raw snapshots
-                    tp.capture_gate = future._captured
-                    tp.encode_budget = encode_budget
                 else:
                     tp = TensorStateProvider(rec.tensor_name, **kw)
+                # uniform encoded-provider wiring: defer encode work until
+                # the device is drained (the staging lane runs uncontended,
+                # so encoded saves add no capture latency over raw
+                # snapshots) and bound in-flight payload allocations.
+                if getattr(tp, "capture_gate", False) is None:
+                    tp.capture_gate = future._captured
+                if getattr(tp, "encode_budget", False) is None:
+                    tp.encode_budget = encode_budget
+                note_domain(rec.domain, kind,
+                            "raw" if getattr(tp, "fixed_offset", True)
+                            else getattr(tp, "enc_codec", "raw"))
                 provs.append(tp)
                 if rec.device_resident:
                     capture_items.append((tp, rec.data))
             if rank == obj_rank:
                 provs.extend(self._object_providers(objects, future))
+                for key in objects:
+                    dom = _object_domain(key)
+                    if dom is not None:
+                        note_domain(dom, "object", "pickle")
             meta = {"rank": rank}
             if delta is not None:
                 meta["delta"] = delta.manifest_meta()
-            plans.append(FilePlan(rank_file(directory, rank),
+            path = rank_file(directory, rank)
+            if domains_meta:
+                meta["domains"] = domains_meta
+                merge_domains_meta(save_domains, domains_meta)
+                file_domains[os.path.basename(path)] = domains_meta
+            plans.append(FilePlan(path,
                                   CompositeStateProvider(f"rank{rank}", provs),
                                   meta=meta))
         if not by_rank:  # objects only
@@ -233,9 +344,31 @@ class DataStatesEngine(BaseCheckpointEngine):
             meta = {"rank": 0}
             if delta is not None:
                 meta["delta"] = delta.manifest_meta()
-            plans.append(FilePlan(rank_file(directory, 0),
+            domains_meta = {}
+            for key in objects:
+                dom = _object_domain(key)
+                if dom is not None:
+                    domains_meta.setdefault(dom, {"providers": ["object"],
+                                                  "codecs": ["pickle"]})
+            path = rank_file(directory, 0)
+            if domains_meta:
+                meta["domains"] = domains_meta
+                merge_domains_meta(save_domains, domains_meta)
+                file_domains[os.path.basename(path)] = domains_meta
+            plans.append(FilePlan(path,
                                   CompositeStateProvider("rank0", provs),
                                   meta=meta))
+        if save_domains:
+            # one derivation feeds the per-file footers (above), the
+            # per-file FileEntry.domains catalog records (file_domains —
+            # threaded to the committer so commit never has to re-parse
+            # footers), and the step-level StepManifest.meta["domains"] —
+            # all from the live provider instances (merged across rank
+            # lanes by the coordinator).
+            merge_domains_meta(
+                future.stats.extra.setdefault("domains", {}), save_domains)
+            future.stats.extra.setdefault("file_domains", {}).update(
+                file_domains)
         self._engine.submit(plans, capture_items, future)
         if delta is not None:
             # Registered only now: a prologue failure above (cache full,
@@ -285,6 +418,7 @@ class SnapshotThenFlushEngine(BaseCheckpointEngine):
             raise ValueError(
                 "differential checkpointing requires a DataMovementEngine "
                 "mode; the snapshot baseline cannot encode deltas")
+        _reject_encoded_routes(by_rank, self.name)
         stats = future.stats
         # (1) blocking: metadata/object serialization first (precompute the
         # layout manifest up front — §IV-D's "do the opposite" pattern).
@@ -394,6 +528,7 @@ class SyncSerializedEngine(BaseCheckpointEngine):
             raise ValueError(
                 "differential checkpointing requires a DataMovementEngine "
                 "mode; the sync baseline cannot encode deltas")
+        _reject_encoded_routes(by_rank, self.name)
         stats = future.stats
         obj_rank = min(by_rank) if by_rank else 0
         ranks = sorted(by_rank) if by_rank else [0]

@@ -1,9 +1,13 @@
 """Checkpoint manager: lazy non-blocking capture + globally consistent restore.
 
 The manager is the training-runtime-facing API (paper §V-B — the "drop-in
-engine"). It owns an engine (DataStates or one of the baselines), plans the
-per-rank shard composition, and exposes the two consistency points of the
-lazy protocol (paper §V-A2, Fig 6(c,d)):
+engine"). It is configured by a declarative
+:class:`~repro.core.policy.CheckpointPolicy` (``from_policy``; the legacy
+flat-kwarg constructor is a deprecation shim), owns an engine (DataStates
+or one of the baselines), plans the per-rank shard composition — routing
+each leaf of the named state domains through the policy's
+:class:`~repro.core.registry.StateProviderRegistry` — and exposes the two
+consistency points of the lazy protocol (paper §V-A2, Fig 6(c,d)):
 
 * ``save(step, state)`` — returns immediately after the blocking prologue
   (planning + coalesced reservation + async D2H launch);
@@ -31,12 +35,12 @@ walk the catalog newest→oldest past damaged steps.
 from __future__ import annotations
 
 import contextlib
-import dataclasses
 import os
 import queue
 import threading
 import time
-from typing import Any, Dict, List, Optional, Sequence
+import warnings
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from repro.storage.backend import BackendError
 from repro.storage.repository import (CheckpointRepository, RetentionPolicy,
@@ -47,8 +51,12 @@ from .baselines import (BaseCheckpointEngine, DataStatesEngine,
                         SyncSerializedEngine)
 from .distributed import group_by_rank, plan_shards
 from .engine import CheckpointError, CheckpointFuture
+# DeltaPolicy moved to repro.core.policy; re-exported here (and from
+# repro.core) for backward compatibility.
+from .policy import (CheckpointPolicy, DeltaPolicy, DistPolicy,  # noqa: F401
+                     EnginePolicy, StoragePolicy)
 from .restore import RestoreEngine, RestoreError, RestoreStats
-from .state_provider import DELTA_CODEC, DeltaSaveSpec
+from .state_provider import DeltaSaveSpec
 
 ENGINES = {
     "datastates": DataStatesEngine,          # this paper
@@ -57,29 +65,9 @@ ENGINES = {
     "sync": SyncSerializedEngine,            # DeepSpeed default (torch.save)
 }
 
-
-@dataclasses.dataclass(frozen=True)
-class DeltaPolicy:
-    """Differential checkpointing on the main engine path (paper §VII).
-
-    Every save streams XOR deltas of each tensor against the previous
-    save's retained host copy, compressed on the flush lanes — except a
-    raw *keyframe* every ``keyframe_every`` saves, on the first save of a
-    run, and whenever the shard set / shapes / dtypes change (elastic
-    reshard). ``verify_chain_on_restore`` re-audits every chain member
-    (sizes + manifest checksums) before a chain restore, so silent
-    corruption of a keyframe can never be XOR-amplified into a restored
-    state.
-    """
-
-    keyframe_every: int = 4
-    codec: str = DELTA_CODEC
-    verify_chain_on_restore: bool = True
-
-    def __post_init__(self):
-        if self.keyframe_every < 1:
-            raise ValueError(
-                f"keyframe_every must be >= 1, got {self.keyframe_every}")
+# Sentinel distinguishing "kwarg not passed" from an explicit value, so the
+# deprecation shim can tell legacy constructor use from plain defaults.
+_UNSET: Any = object()
 
 
 class _DeltaChainTracker:
@@ -150,62 +138,236 @@ def latest_step(directory: str) -> Optional[int]:
     return steps[-1] if steps else None
 
 
+# ---------------------------------------------------------------------------
+# Shared catalog-driven restore path. CheckpointManager.restore,
+# Trainer.resume, and serving.load_params_for_serving all land here, so
+# selective (per-domain) restore, delta-chain replay, tier fallback, and
+# damaged-step skipping behave identically everywhere.
+
+def _subset_template(template: Any, domains: Optional[Sequence[str]]) -> Any:
+    """Restrict ``template`` to the requested state domains."""
+    if domains is None:
+        return template
+    if not isinstance(template, dict):
+        raise ValueError(
+            "restore(domains=...) needs the template to be a mapping of "
+            "named state domains at its top level "
+            "({'model': ..., 'optimizer': ..., ...})")
+    missing = [d for d in domains if d not in template]
+    if missing:
+        raise KeyError(
+            f"requested domains {missing} not in template "
+            f"(have {sorted(template)})")
+    return {d: template[d] for d in domains}
+
+
+def _chain_for(repository: CheckpointRepository, step: int) -> List[int]:
+    """[keyframe, ..., step] for a differential step (ascending), or
+    ``[step]`` for a full snapshot / legacy manifest-less step. Strict
+    walk: an unreadable ancestor or corrupt base metadata is a broken
+    chain, never a shorter one."""
+    try:
+        return repository.chain_steps(step, strict=True)
+    except (BackendError, OSError, ValueError) as exc:
+        raise RestoreError(
+            f"step {step}: delta chain unreadable — {exc}") from exc
+
+
+def _verify_chain(repository: CheckpointRepository,
+                  chain: Sequence[int]) -> None:
+    """Every member of a delta chain must be checksum-clean before
+    replay: XOR folding silently amplifies a corrupt keyframe or
+    intermediate delta into every downstream tensor."""
+    for c in chain:
+        if not repository.has_manifest(c):
+            continue  # re-hydrated legacy copy: nothing to audit against
+        res = repository.verify_step(c)
+        if not res.ok:
+            raise RestoreError(
+                f"delta-chain member step {c} failed verification "
+                f"({', '.join(res.problems)}) — refusing chain replay")
+
+
+def restore_from_repository(
+        repository: CheckpointRepository, template: Any, *,
+        step: Optional[int] = None,
+        engine: Optional[RestoreEngine] = None,
+        fallback: Optional[bool] = None,
+        domains: Optional[Sequence[str]] = None,
+        verify_chain: bool = True) -> Tuple[Any, RestoreStats, int]:
+    """Rebuild ``template``-shaped state from a repository's catalog.
+
+    ``domains`` restricts the restore to the named state domains (top-level
+    keys of the template mapping): only those sub-trees are planned, so
+    only their byte ranges are read — the bytes-minimal selective restore
+    of arXiv 2512.24511 — and the returned tree keeps the template's own
+    values for every unrequested domain.
+
+    Step selection, tier fallback, and delta-chain replay follow
+    :meth:`CheckpointManager.restore` semantics exactly (this *is* that
+    path): ``step=None`` walks committed steps newest→oldest past damaged
+    ones, an explicit step surfaces its own error, and a step evicted
+    from the local tier is re-hydrated from the first remote tier holding
+    a complete copy. Returns ``(tree, stats, restored_step)``.
+    """
+    sub_template = _subset_template(template, domains)
+    if step is None:
+        candidates = list(reversed(repository.steps()))
+        if not candidates:
+            raise FileNotFoundError(f"no checkpoints in {repository.root}")
+        if fallback is None:
+            fallback = True
+    else:
+        candidates = [step]
+        if fallback is None:
+            fallback = False
+    eng = engine or RestoreEngine()
+    last_exc: Optional[BaseException] = None
+    for s in candidates:
+        try:
+            chain = _chain_for(repository, s)
+            with contextlib.ExitStack() as stack:
+                for c in chain:  # shield the whole chain from auto-GC
+                    stack.enter_context(repository.reading(c))
+                sdirs = [repository.resolve_for_restore(c) for c in chain]
+                if len(chain) > 1 and verify_chain:
+                    _verify_chain(repository, chain)
+                if len(chain) == 1:
+                    tree, stats = eng.restore(sdirs[0], sub_template)
+                else:
+                    tree, stats = eng.restore_chain(sdirs, sub_template)
+        except (RestoreError, FileNotFoundError, KeyError, OSError,
+                BackendError, ValueError) as exc:
+            if not fallback:
+                raise
+            last_exc = exc
+            continue
+        if domains is not None:
+            merged = dict(template)
+            merged.update(tree)
+            tree = merged
+        return tree, stats, s
+    raise RestoreError(
+        f"no restorable checkpoint among steps {candidates} in "
+        f"{repository.root}") from last_exc
+
+
 class CheckpointManager:
-    def __init__(self, directory: str, mode: str = "datastates",
-                 host_cache_bytes: int = 1 << 30,
-                 flush_threads: int = 4,
-                 chunk_bytes: int = 4 << 20,
-                 throttle_mbps: Optional[float] = None,
-                 restore_threads: Optional[int] = None,
-                 tiers: Sequence[Tier] = (),
-                 retention: Optional[RetentionPolicy] = None,
-                 manifest_checksums: bool = True,
-                 world: Optional[int] = None,
-                 coordinator: Optional[Any] = None,
-                 ack_timeout_s: Optional[float] = None,
-                 delta: Optional[DeltaPolicy] = None):
-        """``world=N`` (N > 1) or an explicit ``coordinator=`` switches
-        saves onto the multi-rank path: N simulated writer ranks, each
-        with its own engine + host-cache lane, drain a balanced partition
-        of the shards concurrently; the step becomes visible only after
-        every rank acks and the global manifest commits (two-phase
-        commit — see :mod:`repro.dist.coordinator`). ``host_cache_bytes``
-        and ``flush_threads`` stay *node totals*: they are divided across
-        the ranks, so ``world=N`` neither multiplies the staging budget
-        nor loosens back-pressure (a coordinator built by hand takes
-        per-rank values instead). Restore is unchanged (and elastic): an
-        N-rank save restores onto any mesh/world."""
-        if mode not in ENGINES:
-            raise ValueError(f"unknown engine mode {mode!r}; "
+    def __init__(self, directory: str, mode: str = _UNSET,
+                 host_cache_bytes: int = _UNSET,
+                 flush_threads: int = _UNSET,
+                 chunk_bytes: int = _UNSET,
+                 throttle_mbps: Optional[float] = _UNSET,
+                 restore_threads: Optional[int] = _UNSET,
+                 tiers: Sequence[Tier] = _UNSET,
+                 retention: Optional[RetentionPolicy] = _UNSET,
+                 manifest_checksums: bool = _UNSET,
+                 world: Optional[int] = _UNSET,
+                 coordinator: Optional[Any] = _UNSET,
+                 ack_timeout_s: Optional[float] = _UNSET,
+                 delta: Optional[DeltaPolicy] = _UNSET,
+                 *, policy: Optional[CheckpointPolicy] = None):
+        """Construct a manager.
+
+        .. deprecated::
+            The flat-kwarg surface (``mode=``, ``tiers=``, ``world=``,
+            ``delta=``, ...) is deprecated: every kwarg maps onto exactly
+            one field of a :class:`~repro.core.policy.CheckpointPolicy`
+            (see ``LEGACY_KWARG_MAP`` / the README migration table).
+            Compose a policy and call :meth:`from_policy` instead; legacy
+            kwargs keep working through
+            :meth:`CheckpointPolicy.from_legacy_kwargs` but emit a
+            ``DeprecationWarning``.
+        """
+        legacy = {k: v for k, v in dict(
+            mode=mode, host_cache_bytes=host_cache_bytes,
+            flush_threads=flush_threads, chunk_bytes=chunk_bytes,
+            throttle_mbps=throttle_mbps, restore_threads=restore_threads,
+            tiers=tiers, retention=retention,
+            manifest_checksums=manifest_checksums, world=world,
+            coordinator=coordinator, ack_timeout_s=ack_timeout_s,
+            delta=delta).items() if v is not _UNSET}
+        if policy is not None and legacy:
+            raise ValueError(
+                f"pass either policy= or legacy constructor kwargs, not "
+                f"both (got {sorted(legacy)} alongside a policy)")
+        if policy is None:
+            if legacy:
+                warnings.warn(
+                    "CheckpointManager(directory, mode=..., tiers=..., "
+                    "world=..., delta=..., ...) flat kwargs are "
+                    "deprecated; compose a CheckpointPolicy and use "
+                    "CheckpointManager.from_policy(directory, policy) — "
+                    "see the README 'Policy & providers' migration table",
+                    DeprecationWarning, stacklevel=2)
+            policy = CheckpointPolicy.from_legacy_kwargs(**legacy)
+        self._init_from_policy(directory, policy)
+
+    @classmethod
+    def from_policy(cls, directory: str,
+                    policy: Optional[CheckpointPolicy] = None
+                    ) -> "CheckpointManager":
+        """The policy-first constructor: one composable
+        :class:`~repro.core.policy.CheckpointPolicy` (engine/storage/dist
+        sections, an optional
+        :class:`~repro.core.policy.DeltaPolicy` chain schedule, and an
+        optional :class:`~repro.core.registry.StateProviderRegistry`
+        routing state domains to providers) replaces the legacy kwarg
+        sprawl. ``policy=None`` means all defaults."""
+        return cls(directory, policy=policy or CheckpointPolicy())
+
+    def _init_from_policy(self, directory: str,
+                          policy: CheckpointPolicy) -> None:
+        ep, sp, dp = policy.engine, policy.storage, policy.dist
+        if ep.mode not in ENGINES:
+            raise ValueError(f"unknown engine mode {ep.mode!r}; "
                              f"choose from {sorted(ENGINES)}")
-        if delta is not None and mode not in ("datastates", "datastates-old"):
+        delta = policy.delta
+        if delta is not None and ep.mode not in ("datastates",
+                                                 "datastates-old"):
             raise ValueError(
                 f"differential checkpointing requires a DataMovementEngine "
-                f"mode (datastates / datastates-old), got {mode!r}")
+                f"mode (datastates / datastates-old), got {ep.mode!r}")
+        self.policy = policy
+        self.registry = policy.providers
         self.delta_policy = delta
         self._delta_tracker = _DeltaChainTracker(delta) \
             if delta is not None else None
         self.directory = directory
-        self.mode = mode
+        self.mode = ep.mode
         os.makedirs(directory, exist_ok=True)
         self.repository = CheckpointRepository(
-            directory, remote_tiers=tiers, retention=retention,
-            checksum=manifest_checksums)
-        if coordinator is None and world is not None and world > 1:
+            directory, remote_tiers=sp.tiers, retention=sp.retention,
+            checksum=sp.manifest_checksums)
+        coordinator = dp.coordinator
+        if coordinator is None and dp.world is not None and dp.world > 1:
             from repro.dist.coordinator import Coordinator
+
+            # ``world=N`` (N > 1) or an explicit coordinator switches
+            # saves onto the multi-rank path: N simulated writer ranks,
+            # each with its own engine + host-cache lane, drain a
+            # balanced partition of the shards concurrently; the step
+            # becomes visible only after every rank acks and the global
+            # manifest commits (two-phase commit — repro.dist.
+            # coordinator). host_cache_bytes and flush_threads stay
+            # *node totals*: divided across the ranks, so world=N
+            # neither multiplies the staging budget nor loosens
+            # back-pressure (a coordinator built by hand takes per-rank
+            # values instead). Restore is unchanged (and elastic): an
+            # N-rank save restores onto any mesh/world.
             coordinator = Coordinator(
-                world, mode=mode,
-                host_cache_bytes=max(1, host_cache_bytes // world),
-                flush_threads=max(1, flush_threads // world),
-                chunk_bytes=chunk_bytes,
-                throttle_mbps=throttle_mbps,
-                checksum_files=manifest_checksums,
-                ack_timeout_s=ack_timeout_s)
-        if coordinator is not None and world is not None \
-                and coordinator.world != world:
+                dp.world, mode=ep.mode,
+                host_cache_bytes=max(1, ep.host_cache_bytes // dp.world),
+                flush_threads=max(1, ep.flush_threads // dp.world),
+                chunk_bytes=ep.chunk_bytes,
+                throttle_mbps=ep.throttle_mbps,
+                checksum_files=sp.manifest_checksums,
+                ack_timeout_s=dp.ack_timeout_s)
+        if coordinator is not None and dp.world is not None \
+                and coordinator.world != dp.world:
             raise ValueError(
-                f"world={world} does not match the provided coordinator's "
-                f"world={coordinator.world}")
+                f"world={dp.world} does not match the provided "
+                f"coordinator's world={coordinator.world}")
         self.coordinator = coordinator
         # Multi-rank managers save through the coordinator's per-rank
         # engines; constructing the single-writer engine too would burn a
@@ -213,12 +375,12 @@ class CheckpointManager:
         # that never runs.
         self.engine: Optional[BaseCheckpointEngine] = None
         if coordinator is None:
-            self.engine = ENGINES[mode](
-                host_cache_bytes=host_cache_bytes,
-                flush_threads=flush_threads,
-                chunk_bytes=chunk_bytes,
-                throttle_mbps=throttle_mbps)
-        self.restore_engine = RestoreEngine(threads=restore_threads)
+            self.engine = ENGINES[ep.mode](
+                host_cache_bytes=ep.host_cache_bytes,
+                flush_threads=ep.flush_threads,
+                chunk_bytes=ep.chunk_bytes,
+                throttle_mbps=ep.throttle_mbps)
+        self.restore_engine = RestoreEngine(threads=ep.restore_threads)
         self.last_restore_stats: Optional[RestoreStats] = None
         self.last_restored_step: Optional[int] = None
         self._inflight: List[CheckpointFuture] = []
@@ -246,7 +408,8 @@ class CheckpointManager:
         # its committer could then manifest our half-written files. Settle
         # it first (no-op unless the caller re-saves the same step).
         self.wait_for_commit(step)
-        records, objects = plan_shards(state, group="state")
+        records, objects = plan_shards(state, group="state",
+                                       registry=self.registry)
         world = self.coordinator.world if self.coordinator is not None else 1
         objects["__checkpoint_meta__"] = {"step": step, "mode": self.mode,
                                           "n_shards": len(records),
@@ -255,6 +418,9 @@ class CheckpointManager:
         if self._delta_tracker is not None:
             delta_spec = self._delta_tracker.plan(step, records)
             future.stats.extra["delta"] = delta_spec.manifest_meta()
+        # (the engines fill stats.extra["domains"] — the step-level
+        # domain→provider/codec summary — from their live provider
+        # instances, so it can never drift from the per-file footers)
         # in-flight marker first: a crash at any later point leaves an
         # identifiable orphan, never a resume-eligible directory.
         self.repository.begin_step(step)
@@ -355,6 +521,16 @@ class CheckpointManager:
                                 f"{base} never committed — refusing to "
                                 f"commit a broken chain")
                         meta["delta"] = dmeta
+                    doms = future.stats.extra.get("domains")
+                    if doms:
+                        meta["domains"] = doms
+                        # per-file maps, known since plan time: lets the
+                        # manifest fill FileEntry.domains without re-
+                        # parsing footers (StepManifest.build pops this —
+                        # it is never stored in the manifest meta itself)
+                        fdoms = future.stats.extra.get("file_domains")
+                        if fdoms:
+                            meta["file_domains"] = fdoms
                     # Multi-rank saves commit with expect_ranks: the
                     # phase-2 gate re-validates every rank's vote before
                     # the step becomes visible.
@@ -383,13 +559,21 @@ class CheckpointManager:
 
     def restore(self, template: Any, step: Optional[int] = None,
                 engine: Optional[RestoreEngine] = None,
-                fallback: Optional[bool] = None) -> Any:
+                fallback: Optional[bool] = None,
+                domains: Optional[Sequence[str]] = None) -> Any:
         """Rebuild ``template``-shaped state from a stored checkpoint.
 
         ``template`` leaves may be concrete arrays or ``ShapeDtypeStruct``s
         carrying a ``.sharding``; array leaves are reassembled shard-by-shard
         (elastic — target sharding need not match the stored one, so a run
         can resume onto a different mesh shape).
+
+        ``domains`` selects named state domains (top-level template keys):
+        ``restore(state, domains=("model",))`` plans and reads *only* the
+        model sub-tree's byte ranges — ``last_restore_stats.bytes_read``
+        is the audit — and returns the full template with unrequested
+        domains untouched. Serving's ``load_params_for_serving`` is this
+        same path.
 
         Step selection goes through the repository: with ``step=None`` the
         committed steps are tried newest→oldest (``fallback`` defaults on),
@@ -417,70 +601,15 @@ class CheckpointManager:
         # yet committed their manifest; settle the catalog before reading
         # it so a just-finished step is eligible.
         self.wait_for_commit()
-        if step is None:
-            candidates = list(reversed(self.repository.steps()))
-            if not candidates:
-                raise FileNotFoundError(f"no checkpoints in {self.directory}")
-            if fallback is None:
-                fallback = True
-        else:
-            candidates = [step]
-            if fallback is None:
-                fallback = False
-        last_exc: Optional[BaseException] = None
-        eng = engine or self.restore_engine
-        for s in candidates:
-            try:
-                chain = self._delta_chain(s)
-                with contextlib.ExitStack() as stack:
-                    for c in chain:  # shield the whole chain from auto-GC
-                        stack.enter_context(self.repository.reading(c))
-                    sdirs = [self.repository.resolve_for_restore(c)
-                             for c in chain]
-                    if len(chain) > 1 and (
-                            self.delta_policy is None
-                            or self.delta_policy.verify_chain_on_restore):
-                        self._verify_chain(chain)
-                    if len(chain) == 1:
-                        tree, stats = eng.restore(sdirs[0], template)
-                    else:
-                        tree, stats = eng.restore_chain(sdirs, template)
-            except (RestoreError, FileNotFoundError, KeyError, OSError,
-                    BackendError, ValueError) as exc:
-                if not fallback:
-                    raise
-                last_exc = exc
-                continue
-            self.last_restore_stats = stats
-            self.last_restored_step = s
-            return tree
-        raise RestoreError(
-            f"no restorable checkpoint among steps {candidates} in "
-            f"{self.directory}") from last_exc
-
-    def _delta_chain(self, step: int) -> List[int]:
-        """[keyframe, ..., step] for a differential step (ascending), or
-        ``[step]`` for a full snapshot / legacy manifest-less step.
-        Strict walk: an unreadable ancestor or corrupt base metadata is a
-        broken chain, never a shorter one."""
-        try:
-            return self.repository.chain_steps(step, strict=True)
-        except (BackendError, OSError, ValueError) as exc:
-            raise RestoreError(
-                f"step {step}: delta chain unreadable — {exc}") from exc
-
-    def _verify_chain(self, chain: Sequence[int]) -> None:
-        """Every member of a delta chain must be checksum-clean before
-        replay: XOR folding silently amplifies a corrupt keyframe or
-        intermediate delta into every downstream tensor."""
-        for c in chain:
-            if not self.repository.has_manifest(c):
-                continue  # re-hydrated legacy copy: nothing to audit against
-            res = self.repository.verify_step(c)
-            if not res.ok:
-                raise RestoreError(
-                    f"delta-chain member step {c} failed verification "
-                    f"({', '.join(res.problems)}) — refusing chain replay")
+        tree, stats, s = restore_from_repository(
+            self.repository, template, step=step,
+            engine=engine or self.restore_engine, fallback=fallback,
+            domains=domains,
+            verify_chain=(self.delta_policy is None
+                          or self.delta_policy.verify_chain_on_restore))
+        self.last_restore_stats = stats
+        self.last_restored_step = s
+        return tree
 
     # -------------------------------------------------------------- misc
     def drain(self) -> None:

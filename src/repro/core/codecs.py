@@ -1,0 +1,156 @@
+"""Tensor chunk codecs for encoded (non-raw) checkpoint payloads.
+
+The engine's flush lanes treat any chunk with ``codec != "raw"`` the same
+way: compress the producer-encoded payload and log-append it with explicit
+raw-range addressing (``layout.FileWriter.append_encoded_chunk``). What
+differs per codec is (a) how the producer turns raw tensor bytes into the
+payload and (b) how a reader turns the decompressed payload back into raw
+bytes — and, crucially, whether that inversion is *self-contained* or
+*chained*:
+
+* **chained** codecs (``xor+zstd`` — differential checkpointing) encode a
+  chunk relative to a previous checkpoint's bytes; their payloads only
+  have meaning during chain replay (``RestoreEngine.restore_chain``).
+* **self-contained** codecs (``int8q+zstd`` — blockwise int8 quantization
+  of fp32 state, built on the Pallas kernels in ``kernels/quantize.py``)
+  decode standalone, so a quantized tensor restores like any raw tensor,
+  including through selective (per-domain) restore.
+
+This module is the single registry both sides consult: providers name a
+codec on each :class:`~repro.core.state_provider.Chunk`, and
+``layout.FileReader`` / ``core.restore`` dispatch decode through
+:func:`decode_chunk_payload` / classify through :func:`is_chained_codec`.
+
+``int8q`` payload layout (before the flush lane's zstd/zlib compression),
+covering raw fp32 bytes ``[raw_lo, raw_hi)`` of the tensor:
+
+    u32 n_rows | u32 raw_nbytes | f32 scales[n_rows] | i8 q[n_rows * 256]
+
+Rows are the kernel's native (256-lane) quantization rows: the raw bytes
+are viewed as fp32, padded to whole rows, and each row gets a symmetric
+per-row scale ``max|x|/127``. Decode dequantizes and truncates the pad.
+"""
+
+from __future__ import annotations
+
+import struct
+from typing import Callable, Dict
+
+import numpy as np
+
+#: fp32 elements per quantization row (the Pallas kernel's lane width).
+INT8_ROW_ELEMS = 256
+#: raw bytes per quantization row.
+INT8_ROW_BYTES = INT8_ROW_ELEMS * 4
+#: the kernel's row-tile granularity (grid dimension), see kernels/quantize.
+_KERNEL_ROW_TILE = 256
+
+_INT8_HEADER = struct.Struct("<II")
+
+DELTA_CODEC = "xor+zstd"
+INT8_CODEC = "int8q+zstd"
+
+
+class CodecError(ValueError):
+    """A payload failed to decode (corrupt, truncated, or wrong codec)."""
+
+
+def codec_base(codec: str) -> str:
+    """``"int8q+zstd"`` → ``"int8q"`` (strip the host-compression suffix)."""
+    return codec.split("+", 1)[0]
+
+
+def is_chained_codec(codec: str) -> bool:
+    """True for codecs whose payloads only decode relative to a chain base
+    (differential XOR deltas); such tensors cannot restore standalone."""
+    return codec != "raw" and codec_base(codec) == "xor"
+
+
+# --------------------------------------------------------------------- int8q
+
+def _pad_rows(x: np.ndarray) -> np.ndarray:
+    """Pad an (R, 256) fp32 block to the kernel's row-tile multiple."""
+    pad = (-x.shape[0]) % _KERNEL_ROW_TILE
+    if pad:
+        x = np.concatenate([x, np.zeros((pad, INT8_ROW_ELEMS), np.float32)])
+    return x
+
+
+def encode_int8_block(raw: np.ndarray) -> bytes:
+    """Quantize one chunk of raw fp32 bytes into an ``int8q`` payload.
+
+    ``raw`` is a uint8 view of the chunk's raw bytes; its length need not
+    be a multiple of a row (the tensor tail) — the pad is zeros, which
+    quantize exactly and are truncated by :func:`decode_int8_block`.
+    """
+    from repro.kernels import ops as kops  # deferred: jax import is heavy
+
+    raw = np.ascontiguousarray(raw, dtype=np.uint8)
+    raw_nbytes = raw.nbytes
+    pad = (-raw_nbytes) % INT8_ROW_BYTES
+    if pad:
+        raw = np.concatenate([raw, np.zeros(pad, np.uint8)])
+    f32 = raw.view(np.float32).reshape(-1, INT8_ROW_ELEMS)
+    n_rows = f32.shape[0]
+    q, scales = kops.quantize_int8(_pad_rows(f32))
+    q = np.asarray(q)[:n_rows]
+    scales = np.asarray(scales)[:n_rows]
+    return (_INT8_HEADER.pack(n_rows, raw_nbytes)
+            + scales.astype(np.float32).tobytes()
+            + q.astype(np.int8).tobytes())
+
+
+def decode_int8_block(payload: bytes, raw_lo: int, raw_hi: int) -> np.ndarray:
+    """Inverse of :func:`encode_int8_block`: dequantized raw bytes of
+    ``[raw_lo, raw_hi)`` as a fresh uint8 array of length ``raw_hi-raw_lo``.
+    Lossy-bounded: each fp32 value is within one quantization step
+    (``row max|x| / 127``) of the original."""
+    from repro.kernels import ops as kops  # deferred: jax import is heavy
+
+    if len(payload) < _INT8_HEADER.size:
+        raise CodecError("int8q payload shorter than its header")
+    n_rows, raw_nbytes = _INT8_HEADER.unpack_from(payload)
+    if raw_nbytes != raw_hi - raw_lo:
+        raise CodecError(
+            f"int8q payload declares {raw_nbytes} raw bytes, chunk "
+            f"addressing says [{raw_lo}:{raw_hi}) — corrupt payload")
+    want = _INT8_HEADER.size + n_rows * 4 + n_rows * INT8_ROW_ELEMS
+    if len(payload) != want:
+        raise CodecError(
+            f"int8q payload is {len(payload)} B, expected {want} B for "
+            f"{n_rows} rows — truncated or corrupt")
+    off = _INT8_HEADER.size
+    scales = np.frombuffer(payload, np.float32, n_rows, off).reshape(-1, 1)
+    q = np.frombuffer(payload, np.int8, n_rows * INT8_ROW_ELEMS,
+                      off + n_rows * 4).reshape(-1, INT8_ROW_ELEMS)
+    pad = (-n_rows) % _KERNEL_ROW_TILE
+    if pad:
+        q = np.concatenate([q, np.zeros((pad, INT8_ROW_ELEMS), np.int8)])
+        scales = np.concatenate([scales, np.ones((pad, 1), np.float32)])
+    deq = np.asarray(kops.dequantize_int8(q, scales))[:n_rows]
+    out = deq.astype(np.float32).reshape(-1).view(np.uint8)
+    return np.array(out[:raw_nbytes])
+
+
+# ------------------------------------------------------------------ registry
+
+#: self-contained decoders: codec base → fn(payload, raw_lo, raw_hi) → u8.
+_DECODERS: Dict[str, Callable[[bytes, int, int], np.ndarray]] = {
+    "int8q": decode_int8_block,
+}
+
+
+def decode_chunk_payload(codec: str, payload: bytes,
+                         raw_lo: int, raw_hi: int) -> np.ndarray:
+    """Decode one decompressed encoded-chunk payload back to raw bytes.
+
+    Only valid for self-contained codecs; chained codecs (XOR deltas) must
+    go through chain replay instead."""
+    if is_chained_codec(codec):
+        raise CodecError(
+            f"codec {codec!r} is chained (differential) — its payloads "
+            f"only decode during chain replay, not standalone")
+    fn = _DECODERS.get(codec_base(codec))
+    if fn is None:
+        raise CodecError(f"unknown tensor chunk codec {codec!r}")
+    return fn(payload, raw_lo, raw_hi)

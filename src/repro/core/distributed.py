@@ -53,7 +53,16 @@ def normalize_index(index, shape) -> Tuple[Tuple[int, int], ...]:
 
 @dataclasses.dataclass
 class ShardRecord:
-    """One device shard of one pytree leaf, assigned to an owning rank."""
+    """One device shard of one pytree leaf, assigned to an owning rank.
+
+    ``domain`` is the leaf's state-domain name (the first component of its
+    state path — ``"model"`` for ``state/model/...``); ``route`` is the
+    :class:`~repro.core.registry.ProviderRoute` resolved by the manager's
+    registry at plan time (``None`` → the engine's adaptive default).
+    Routes ride the record so every consumer — the single-writer engine
+    and each rank lane of a multi-writer coordinator — honors the same
+    per-domain provider decision without re-consulting the registry.
+    """
 
     leaf_path: str
     tensor_name: str            # unique name within the rank file
@@ -65,6 +74,8 @@ class ShardRecord:
     nbytes: int
     data: Any                   # jax single-device array or numpy array
     device_resident: bool
+    domain: str = "state"
+    route: Optional[Any] = None  # ProviderRoute | None
 
 
 def assign_replica_writers(
@@ -94,12 +105,31 @@ def assign_replica_writers(
     return owners
 
 
-def plan_shards(tree, group: str) -> Tuple[List[ShardRecord], Dict[str, Any]]:
+def state_domain(path_str: str, group: str) -> str:
+    """State-domain name of a leaf: the first component of its path within
+    the tree (``"model"`` for a leaf under ``{"model": ...}``), or the
+    group itself for a bare (single-leaf / non-mapping-rooted) tree."""
+    head = path_str.split("/", 1)[0]
+    return head or group
+
+
+def plan_shards(tree, group: str, registry=None
+                ) -> Tuple[List[ShardRecord], Dict[str, Any]]:
     """Flatten ``tree``; return shard records for arrays + dict of host objects.
 
     Replicated shards are deduplicated — each unique shard is written
     exactly once — with writers balanced across replica groups by byte
     count (see :func:`assign_replica_writers`).
+
+    With ``registry`` (a
+    :class:`~repro.core.registry.StateProviderRegistry`), every leaf —
+    tensor shards *and* object leaves — is routed through the ordered
+    rules here, at plan time: tensor shards carry their resolved
+    :class:`~repro.core.registry.ProviderRoute` on the record (sized per
+    *shard*, so byte-threshold rules see what each writer actually
+    moves), and object leaves are validated (a strict registry turns an
+    unmatched or mis-routed leaf into an error naming its state path
+    before any I/O starts).
     """
     records: List[ShardRecord] = []
     objects: Dict[str, Any] = {}
@@ -107,12 +137,16 @@ def plan_shards(tree, group: str) -> Tuple[List[ShardRecord], Dict[str, Any]]:
     replicas: Dict[Tuple[str, Tuple], Dict[int, Any]] = {}
     shapes: Dict[str, Tuple[int, ...]] = {}
     dtypes: Dict[str, str] = {}
+    domains: Dict[str, str] = {}
     leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
     for path, leaf in leaves:
-        pstr = f"{group}/{_path_str(path)}"
+        p = _path_str(path)
+        pstr = f"{group}/{p}"
+        domain = state_domain(p, group)
         if isinstance(leaf, jax.Array):
             shapes[pstr] = tuple(leaf.shape)
             dtypes[pstr] = str(leaf.dtype)
+            domains[pstr] = domain
             for shard in leaf.addressable_shards:
                 idx = normalize_index(shard.index, leaf.shape)
                 replicas.setdefault((pstr, idx), {})[shard.device.id] = \
@@ -120,13 +154,25 @@ def plan_shards(tree, group: str) -> Tuple[List[ShardRecord], Dict[str, Any]]:
         elif isinstance(leaf, np.ndarray):
             idx = tuple((0, d) for d in leaf.shape)
             suffix = ",".join(f"{a}:{b}" for a, b in idx)
+            route = None
+            if registry is not None:
+                route = registry.route(
+                    domain=domain, path=pstr, dtype=str(leaf.dtype),
+                    nbytes=int(leaf.nbytes), kind="tensor")
             records.append(ShardRecord(
                 leaf_path=pstr, tensor_name=f"{pstr}@[{suffix}]",
                 rank=0, index=idx, global_shape=tuple(leaf.shape),
                 shape=tuple(leaf.shape), dtype=str(leaf.dtype),
-                nbytes=int(leaf.nbytes), data=leaf, device_resident=False))
+                nbytes=int(leaf.nbytes), data=leaf, device_resident=False,
+                domain=domain, route=route))
         else:
             objects[pstr] = leaf
+            if registry is not None:
+                # objects always stream through ObjectStateProvider; the
+                # routing pass exists for validation — strict registries
+                # surface unmatched/mis-routed leaves by state path here
+                registry.route(domain=domain, path=pstr, dtype=None,
+                               nbytes=None, kind="object")
     if replicas:
         shard_meta = []
         for (pstr, idx), by_dev in replicas.items():
@@ -139,13 +185,19 @@ def plan_shards(tree, group: str) -> Tuple[List[ShardRecord], Dict[str, Any]]:
             dev_id = owners[(pstr, idx)]
             shape = tuple(b - a for a, b in idx)
             suffix = ",".join(f"{a}:{b}" for a, b in idx)
+            route = None
+            if registry is not None:
+                route = registry.route(
+                    domain=domains[pstr], path=pstr, dtype=dtypes[pstr],
+                    nbytes=nbytes, kind="tensor")
             records.append(ShardRecord(
                 leaf_path=pstr,
                 tensor_name=f"{pstr}@[{suffix}]",
                 rank=dev_id, index=idx,
                 global_shape=shapes[pstr],
                 shape=shape, dtype=dtypes[pstr], nbytes=nbytes,
-                data=by_dev[dev_id], device_resident=True))
+                data=by_dev[dev_id], device_resident=True,
+                domain=domains[pstr], route=route))
     return records, objects
 
 

@@ -347,13 +347,14 @@ class DataMovementEngine:
         try:
             for k, v in plan.meta.items():
                 writer.set_meta(k, v)
-            # Encoded (delta) tensors never reach the fixed region: declare
-            # their footer metadata up front; their compressed chunks are
-            # appended by the flush lanes as they land.
+            # Encoded (delta / quantized / custom) tensors never reach the
+            # fixed region: declare their footer metadata up front; their
+            # compressed chunks are appended by the flush lanes as they
+            # land.
             for p in plan.composite.encoded_providers():
                 writer.declare_encoded_tensor(
                     p.name, dtype=p.dtype, shape=p.shape, nbytes=p.nbytes,
-                    codec=getattr(p, "delta_codec", "raw"),
+                    codec=getattr(p, "enc_codec", "raw"),
                     global_shape=p.global_shape, index=p.index)
             providers = {p.name: p for p in plan.composite.tensor_providers}
             for chunk in plan.composite.chunks():

@@ -267,10 +267,16 @@ class FileReader:
     def read_tensor(self, name: str) -> np.ndarray:
         e = self.tensors[name]
         if e.codec != "raw":
-            raise ValueError(
-                f"{name!r} is {e.codec}-encoded (a differential delta); its "
-                f"value depends on the chain base — restore the step through "
-                f"RestoreEngine.restore_chain / CheckpointManager.restore")
+            from repro.core.codecs import is_chained_codec
+            if is_chained_codec(e.codec):
+                raise ValueError(
+                    f"{name!r} is {e.codec}-encoded (a differential delta); "
+                    f"its value depends on the chain base — restore the step "
+                    f"through RestoreEngine.restore_chain / "
+                    f"CheckpointManager.restore")
+            # self-contained encoding (e.g. int8 quantized): decode in place
+            return self.read_encoded_tensor(name) \
+                .view(np.dtype(e.dtype)).reshape(e.shape)
         mm = np.memmap(self.path, mode="r", dtype=np.uint8,
                        offset=e.offset, shape=(e.nbytes,))
         return np.asarray(mm).view(np.dtype(e.dtype)).reshape(e.shape)
@@ -293,6 +299,39 @@ class FileReader:
                         f"{name!r} chunk [{lo}:{hi}) decompressed to "
                         f"{len(raw)} B — corrupt delta payload")
                 out[lo:hi] = np.frombuffer(raw, dtype=np.uint8)
+        return out
+
+    def read_encoded_tensor(self, name: str) -> np.ndarray:
+        """Raw (decoded) bytes of a *self-contained* encoded tensor
+        (e.g. ``int8q+zstd`` quantized payloads), assembled in raw order.
+        Chained codecs (XOR deltas) must go through
+        :meth:`read_encoded_delta` + chain replay instead."""
+        from repro.core.codecs import decode_chunk_payload, is_chained_codec
+        from repro.core.reduction import _decompress
+        e = self.tensors[name]
+        if e.codec == "raw":
+            raise ValueError(f"{name!r} is raw, not encoded")
+        if is_chained_codec(e.codec):
+            raise ValueError(
+                f"{name!r} is {e.codec}-encoded (a differential delta); "
+                f"restore it through chain replay, not standalone decode")
+        out = np.empty(e.nbytes, dtype=np.uint8)
+        covered = 0
+        with open(self.path, "rb") as f:
+            for off, comp_nb, lo, hi in sorted(e.enc_chunks or (),
+                                               key=lambda c: c[2]):
+                if lo != covered:
+                    break
+                f.seek(off)
+                payload = _decompress(f.read(comp_nb))
+                out[lo:hi] = decode_chunk_payload(e.codec, payload, lo, hi)
+                covered = hi
+        if covered != e.nbytes:
+            # without this, a gap in the chunk list would silently hand
+            # uninitialized buffer bytes to the restored tensor
+            raise ValueError(
+                f"{name!r}: encoded chunks cover {covered} of {e.nbytes} "
+                f"raw bytes — corrupt or truncated footer")
         return out
 
     def read_object_raw(self, name: str) -> bytes:

@@ -1,0 +1,150 @@
+"""Declarative checkpoint policy: the composable public configuration.
+
+The manager grew one constructor kwarg per subsystem (engine tuning,
+storage tiers, multi-rank world, differential chains) until the sprawl hid
+the architecture. :class:`CheckpointPolicy` makes the composition explicit
+— one frozen config object per subsystem, composed into one policy:
+
+* :class:`EnginePolicy`  — which data-movement engine and its lane tuning;
+* :class:`StoragePolicy` — where committed steps live (tiers), how many
+  survive (retention), and integrity checksums;
+* :class:`DistPolicy`    — the multi-rank writer world / coordinator;
+* :class:`DeltaPolicy`   — the differential-checkpointing chain schedule;
+* a :class:`~repro.core.registry.StateProviderRegistry` routing each
+  state leaf to its provider.
+
+Construct managers with ``CheckpointManager.from_policy(directory,
+policy)``; the legacy kwarg constructor still works (every old kwarg maps
+onto exactly one policy field — see
+:meth:`CheckpointPolicy.from_legacy_kwargs`) but emits a
+``DeprecationWarning``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Sequence, Tuple
+
+from repro.storage.repository import RetentionPolicy, Tier
+
+from .codecs import DELTA_CODEC
+from .registry import StateProviderRegistry
+
+
+@dataclasses.dataclass(frozen=True)
+class EnginePolicy:
+    """Data-movement engine selection and lane tuning (paper §V-A)."""
+
+    mode: str = "datastates"
+    host_cache_bytes: int = 1 << 30
+    flush_threads: int = 4
+    chunk_bytes: int = 4 << 20
+    throttle_mbps: Optional[float] = None
+    restore_threads: Optional[int] = None
+
+    def __post_init__(self):
+        if self.host_cache_bytes < 1:
+            raise ValueError("host_cache_bytes must be positive")
+        if self.flush_threads < 1 or self.chunk_bytes < 1:
+            raise ValueError("flush_threads and chunk_bytes must be >= 1")
+
+
+@dataclasses.dataclass(frozen=True)
+class StoragePolicy:
+    """Tiered residence + retention of committed steps (repository layer)."""
+
+    tiers: Tuple[Tier, ...] = ()
+    retention: Optional[RetentionPolicy] = None
+    manifest_checksums: bool = True
+
+    def __post_init__(self):
+        # accept any sequence of tiers; freeze to a tuple
+        object.__setattr__(self, "tiers", tuple(self.tiers))
+
+
+@dataclasses.dataclass(frozen=True)
+class DistPolicy:
+    """Multi-rank writer world (two-phase commit coordinator)."""
+
+    world: Optional[int] = None
+    coordinator: Optional[Any] = None
+    ack_timeout_s: Optional[float] = None
+
+    def __post_init__(self):
+        if self.world is not None and self.world < 1:
+            raise ValueError(f"world must be >= 1, got {self.world}")
+
+
+@dataclasses.dataclass(frozen=True)
+class DeltaPolicy:
+    """Differential checkpointing on the main engine path (paper §VII).
+
+    Every save streams XOR deltas of each delta-routed tensor against the
+    previous save's retained host copy, compressed on the flush lanes —
+    except a raw *keyframe* every ``keyframe_every`` saves, on the first
+    save of a run, and whenever the shard set / shapes / dtypes change
+    (elastic reshard). ``verify_chain_on_restore`` re-audits every chain
+    member (sizes + manifest checksums) before a chain restore, so silent
+    corruption of a keyframe can never be XOR-amplified into a restored
+    state.
+    """
+
+    keyframe_every: int = 4
+    codec: str = DELTA_CODEC
+    verify_chain_on_restore: bool = True
+
+    def __post_init__(self):
+        if self.keyframe_every < 1:
+            raise ValueError(
+                f"keyframe_every must be >= 1, got {self.keyframe_every}")
+
+
+# Legacy CheckpointManager kwarg → (policy section, field) — the migration
+# table in README mirrors this mapping.
+LEGACY_KWARG_MAP = {
+    "mode": ("engine", "mode"),
+    "host_cache_bytes": ("engine", "host_cache_bytes"),
+    "flush_threads": ("engine", "flush_threads"),
+    "chunk_bytes": ("engine", "chunk_bytes"),
+    "throttle_mbps": ("engine", "throttle_mbps"),
+    "restore_threads": ("engine", "restore_threads"),
+    "tiers": ("storage", "tiers"),
+    "retention": ("storage", "retention"),
+    "manifest_checksums": ("storage", "manifest_checksums"),
+    "world": ("dist", "world"),
+    "coordinator": ("dist", "coordinator"),
+    "ack_timeout_s": ("dist", "ack_timeout_s"),
+    "delta": (None, "delta"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class CheckpointPolicy:
+    """The complete declarative configuration of a checkpoint manager."""
+
+    engine: EnginePolicy = dataclasses.field(default_factory=EnginePolicy)
+    storage: StoragePolicy = dataclasses.field(default_factory=StoragePolicy)
+    dist: DistPolicy = dataclasses.field(default_factory=DistPolicy)
+    delta: Optional[DeltaPolicy] = None
+    providers: Optional[StateProviderRegistry] = None
+
+    @classmethod
+    def from_legacy_kwargs(cls, **kwargs) -> "CheckpointPolicy":
+        """Build a policy from the deprecated flat-kwarg constructor
+        surface. Every legacy kwarg maps onto exactly one policy field;
+        unknown names raise ``TypeError`` like a normal bad kwarg."""
+        sections: dict = {"engine": {}, "storage": {}, "dist": {}}
+        top: dict = {}
+        for name, value in kwargs.items():
+            where = LEGACY_KWARG_MAP.get(name)
+            if where is None:
+                raise TypeError(
+                    f"unknown CheckpointManager argument {name!r}")
+            section, field = where
+            (top if section is None else sections[section])[field] = value
+        return cls(engine=EnginePolicy(**sections["engine"]),
+                   storage=StoragePolicy(**sections["storage"]),
+                   dist=DistPolicy(**sections["dist"]), **top)
+
+    def replace(self, **kw) -> "CheckpointPolicy":
+        return dataclasses.replace(self, **kw)

@@ -49,6 +49,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 import jax
 import numpy as np
 
+from .codecs import is_chained_codec
 from .distributed import normalize_index, _path_str
 from .layout import FileReader
 
@@ -222,6 +223,27 @@ class _SnapshotShard(_ShardSource):
                     yield path, a - lo, b - a
 
 
+class _EncodedShard(_ShardSource):
+    """A self-contained encoded tensor (e.g. an int8-quantized optimizer
+    moment) in a native file: its compressed log chunks decode without a
+    chain base, so it restores standalone — decoded at most once per
+    restore (thread-safe), then sliced in memory."""
+
+    __slots__ = ("loader",)
+
+    def __init__(self, index: Region, shape, dtype,
+                 loader: Callable[[], np.ndarray]):
+        super().__init__(index, shape, dtype)
+        self.loader = loader
+
+    def byte_ranges(self, local_region: Region):
+        return None
+
+    def read_fallback(self, local_region: Region) -> np.ndarray:
+        arr = self.loader()
+        return arr[tuple(slice(lo, hi) for lo, hi in local_region)]
+
+
 class _GraphShard(_ShardSource):
     """A shard inside a pickled object graph (sync format): the graph is
     loaded at most once per restore; slicing happens in memory."""
@@ -339,9 +361,23 @@ class RestoreEngine:
                 idx.n_files += 1
                 for entry in rd.tensors.values():
                     base = entry.name.split("@[", 1)[0]
-                    if entry.codec != "raw":
+                    if entry.codec != "raw" and is_chained_codec(entry.codec):
                         idx.delta_tensors.setdefault(base, []).append(
                             (rd, entry))
+                    elif entry.codec != "raw":
+                        # self-contained encoding (quantized): restorable
+                        # standalone through a decode-once shard source
+                        region = entry.index if entry.index is not None \
+                            else tuple((0, d) for d in entry.shape)
+                        comp_nb = sum(c[1] for c in entry.enc_chunks or ())
+                        loader = _OnceLoader(
+                            (lambda r=rd, e=entry:
+                             r.read_encoded_tensor(e.name)
+                             .view(np.dtype(e.dtype)).reshape(e.shape)),
+                            comp_nb, stats, stats_lock)
+                        idx.tensors.setdefault(base, []).append(
+                            _EncodedShard(tuple(map(tuple, region)),
+                                          entry.shape, entry.dtype, loader))
                     else:
                         idx.tensors.setdefault(base, []).append(
                             _DsllmShard(p, entry))

@@ -17,6 +17,9 @@ engine stays agnostic to heterogeneity and only optimizes multi-tier I/O.
 * :class:`CompositeStateProvider` — hierarchical composition: plans the
   fixed-offset tensor region for one file, orders the stream tensors-first
   (largest first) so object serialization overlaps with bulk tensor I/O.
+* :class:`QuantizedStateProvider` — blockwise int8 quantization of fp32
+  state on the Pallas kernels (self-contained ``int8q+zstd`` payloads, so
+  quantized tensors restore standalone — see :mod:`repro.core.codecs`).
 * :class:`DeltaStateProvider` — differential checkpointing on the main
   engine path (paper §VII / ByteCheckpoint): XOR-deltas each staged chunk
   against a retained previous-snapshot copy held in a
@@ -37,12 +40,12 @@ from typing import Any, Callable, Dict, Iterator, List, Optional, Sequence, \
 import msgpack
 import numpy as np
 
+from .codecs import (DELTA_CODEC, INT8_CODEC, INT8_ROW_BYTES,
+                     encode_int8_block)
 from .host_cache import HostCache, Reservation
 from .layout import FileLayout, align_up
 
 DEFAULT_CHUNK_BYTES = 16 * 1024 * 1024
-
-DELTA_CODEC = "xor+zstd"
 
 
 @dataclasses.dataclass
@@ -318,6 +321,7 @@ class DeltaStateProvider(TensorStateProvider):
         super().__init__(name, **kw)
         self.keyframe = keyframe
         self.delta_codec = codec
+        self.enc_codec = codec  # uniform encoded-provider attribute
         self._prev = prev
         # set by the engine: fired exactly once when this provider's chunk
         # stream ends (exhausted, closed, or abandoned by a failed
@@ -393,6 +397,79 @@ class DeltaStateProvider(TensorStateProvider):
                 pos = end
         finally:
             self._signal_stream_end()
+
+
+class QuantizedStateProvider(TensorStateProvider):
+    """Compressed SP: blockwise int8 quantization of fp32 state (4×).
+
+    Built on the Pallas quantize kernels (``kernels/quantize.py``) via
+    :func:`~repro.core.codecs.encode_int8_block`: each staged chunk is cut
+    on quantization-row boundaries, quantized with per-row symmetric
+    scales, and emitted as a self-contained ``codec="int8q+zstd"``
+    log-append payload that the engine's flush lanes compress — like the
+    delta path, encoded tensors never occupy the fixed region, so bytes
+    on disk shrink to ~¼ + scales. Unlike the delta path the payloads are
+    **self-contained** (no chain base), so a quantized tensor restores
+    standalone — including through selective per-domain restore — at
+    bounded loss (one quantization step per value).
+
+    The natural routing target is optimizer moments
+    (``ProviderRule(domain="optimizer", dtype="float32",
+    provider="quantized")``) while params stay raw or delta-encoded —
+    the registry's dtype predicate keeps non-fp32 leaves (step counters,
+    int state) away from this provider; routing one here is a hard error
+    at construction, not silent corruption.
+    """
+
+    def __init__(self, name: str, *, codec: str = INT8_CODEC, **kw):
+        super().__init__(name, **kw)
+        if np.dtype(self.dtype) != np.float32:
+            raise ValueError(
+                f"QuantizedStateProvider requires float32 state; "
+                f"{name!r} is {self.dtype} — scope the registry rule "
+                f"with dtype='float32'")
+        self.enc_codec = codec
+        # chunk boundaries must land on whole quantization rows so every
+        # payload decodes independently
+        self.chunk_bytes = max(
+            INT8_ROW_BYTES,
+            self.chunk_bytes - self.chunk_bytes % INT8_ROW_BYTES)
+        # same engine wiring as DeltaStateProvider: encode work (a Pallas
+        # kernel call per chunk) is deferred behind the save's captured
+        # event so the D2H staging lane never contends with it, and fresh
+        # payload allocations are bounded by the engine's encode budget.
+        self.capture_gate: Optional[threading.Event] = None
+        self.encode_budget: Optional[EncodeBudget] = None
+
+    @property
+    def fixed_offset(self) -> bool:
+        return False
+
+    def chunks(self) -> Iterator[Chunk]:
+        if self.capture_gate is not None:
+            self.capture_gate.wait()
+        view = self._byte_view()
+        n = self.nbytes
+        pos = 0
+        while pos < n:
+            end = min(pos + self.chunk_bytes, n)
+            if self._host_array is None:
+                with self._cond:
+                    while self._staged < end:
+                        self._cond.wait()
+            raw = np.frombuffer(view[pos:end], dtype=np.uint8)
+            payload = encode_int8_block(raw)
+            budget = self.encode_budget
+            on_flushed = None
+            if budget is not None:
+                budget.acquire(len(payload))
+                on_flushed = (lambda b=budget, nb=len(payload):
+                              b.release(nb))
+            yield Chunk(name=self.name, kind="tensor", data=payload,
+                        offset=None, codec=self.enc_codec,
+                        raw_range=(pos, end), last=end >= n,
+                        on_flushed=on_flushed)
+            pos = end
 
 
 class ObjectStateProvider(StateProvider):

@@ -124,6 +124,7 @@ class _SaveJob:
             self.future._set_captured()
 
     def _merge_stats(self, fut: CheckpointFuture) -> None:
+        from repro.core.baselines import merge_domains_meta
         s, d = fut.stats, self.future.stats
         with self.lock:
             d.n_files += s.n_files
@@ -133,6 +134,16 @@ class _SaveJob:
             d.serialize_s += s.serialize_s
             d.stage_s += s.stage_s
             d.flush_s += s.flush_s
+            doms = s.extra.get("domains")
+            if doms:
+                # per-rank engines derive their domain routing summaries
+                # from their own provider instances; the aggregate future
+                # carries the union for the step-level manifest record
+                merge_domains_meta(d.extra.setdefault("domains", {}), doms)
+            fdoms = s.extra.get("file_domains")
+            if fdoms:
+                # filenames are unique per rank, so a plain update merges
+                d.extra.setdefault("file_domains", {}).update(fdoms)
 
     def rank_acked(self, rank: int, fut: CheckpointFuture) -> None:
         """Phase-1 vote cast: meet the ack collective. The save's future
@@ -312,7 +323,14 @@ class Coordinator:
         ``delta`` (a :class:`DeltaSaveSpec`) puts the save on the
         differential path: every rank streams XOR deltas against its own
         retained bases, and the step commits through the same two-phase
-        vote."""
+        vote.
+
+        Per-domain provider routing (the manager's
+        :class:`~repro.core.registry.StateProviderRegistry`) needs no
+        extra plumbing here: each record carries its resolved
+        :class:`~repro.core.registry.ProviderRoute`, so every rank lane
+        builds the same tensor/delta/quantized/custom providers for its
+        partition that a single-writer engine would."""
         by_rank = partition_records(records, self.world)
         # objects ride with the least-loaded rank (deterministic tie-break)
         loads = {r: sum(rec.nbytes for rec in recs)

@@ -49,9 +49,11 @@ def main(argv=None) -> int:
 
     manager = None
     if args.ckpt_interval:
-        manager = CheckpointManager(
-            args.ckpt_dir, mode=args.engine,
-            host_cache_bytes=args.host_cache_mb << 20)
+        from repro.core import CheckpointPolicy, EnginePolicy
+        manager = CheckpointManager.from_policy(
+            args.ckpt_dir, CheckpointPolicy(engine=EnginePolicy(
+                mode=args.engine,
+                host_cache_bytes=args.host_cache_mb << 20)))
     trainer = Trainer(cfg, batch=args.batch, seq_len=args.seq_len,
                       manager=manager)
     if args.resume and manager is not None and manager.latest_step() is not None:

@@ -45,7 +45,15 @@ def load_params_for_serving(directory: str, params_template: Any,
     Returns ``(params, stats)`` where ``stats`` is a
     :class:`~repro.core.restore.RestoreStats` (check ``bytes_read`` to see
     the sub-tree effect).
+
+    This is the manager's selective-restore path
+    (:func:`repro.core.checkpoint.restore_from_repository` with
+    ``domains=("model",)``): serving, ``Trainer.resume``, and
+    ``CheckpointManager.restore(domains=...)`` share one implementation,
+    so damaged-step fallback, delta-chain replay, and the bytes-read audit
+    behave identically everywhere.
     """
+    from repro.core.checkpoint import restore_from_repository
     from repro.core.restore import RestoreEngine
     from repro.storage.repository import CheckpointRepository
 
@@ -53,13 +61,10 @@ def load_params_for_serving(directory: str, params_template: Any,
     if repo is None:
         repo = CheckpointRepository(directory, auto_cascade=False,
                                     auto_gc=False)
-    if step is None:
-        step = repo.latest_step()
-        if step is None:
-            raise FileNotFoundError(f"no checkpoints in {directory}")
-    sdir = repo.resolve_for_restore(step)
     engine = RestoreEngine(threads=threads, throttle_mbps=throttle_mbps)
-    tree, stats = engine.restore(sdir, {"model": params_template})
+    tree, stats, _step = restore_from_repository(
+        repo, {"model": params_template}, step=step, engine=engine,
+        domains=("model",))
     return tree["model"], stats
 
 

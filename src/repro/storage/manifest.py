@@ -102,23 +102,37 @@ class FileEntry:
     (differential checkpointing): ``"raw"`` for full snapshots/keyframes,
     ``"xor+zstd"`` for delta files — chain-aware GC and ``cli verify``
     use it to tell chain roots from dependents. ``None`` for non-tensor
-    files (votes, legacy formats)."""
+    files (votes, legacy formats).
+
+    ``domains`` records which state domains the file carries and how each
+    was routed — ``{"model": {"providers": ["tensor"], "codecs":
+    ["raw"]}, "optimizer": {"providers": ["quantized"], ...}}`` — the
+    per-file ``(domain, provider, codec)`` catalog entry that selective
+    (per-domain) restore and fleet tooling read. ``None`` for files
+    written before provider routing (or non-native formats)."""
 
     name: str
     nbytes: int
     checksum: Optional[int] = None
     codec: Optional[str] = None
+    domains: Optional[Dict[str, Any]] = None
+
+
+def dsllm_file_meta(path: str) -> Optional[Dict[str, Any]]:
+    """Footer ``meta`` dict of one ``.dsllm`` file (written by the
+    engine's file plan). ``None`` when unreadable."""
+    try:
+        from repro.core.layout import FileReader
+        return FileReader(path).meta or {}
+    except Exception:
+        return None
 
 
 def dsllm_file_codec(path: str) -> Optional[str]:
-    """Tensor codec of one ``.dsllm`` file, from its footer meta (written
-    by the engine's file plan). ``None`` when unreadable / not declared."""
-    try:
-        from repro.core.layout import FileReader
-        meta = FileReader(path).meta or {}
-    except Exception:
-        return None
-    d = meta.get("delta") or {}
+    """Tensor codec of one ``.dsllm`` file, from its footer meta.
+    ``None`` when unreadable / not declared."""
+    meta = dsllm_file_meta(path)
+    d = (meta or {}).get("delta") or {}
     if not d:
         return None
     return "raw" if d.get("keyframe", True) else d.get("codec", "raw")
@@ -299,10 +313,17 @@ class StepManifest:
                     f"declared by any rank manifest — stale shards or a "
                     f"foreign writer; refusing to bless them")
         files = []
-        # Per-file codec is only meaningful for differential saves (the
-        # committer passes delta meta for those); probing every footer on
-        # every commit would tax the non-delta path for nothing.
-        probe_codec = (meta or {}).get("delta") is not None
+        # Per-file domain maps normally arrive from the engine's plan
+        # (meta["file_domains"], popped below — never stored: the per-file
+        # info lives on the FileEntry). Footer probes are the fallback
+        # only, gated on the committer's meta: per-file codec matters only
+        # for differential saves, per-file domain routing only for files
+        # the engine map misses — re-parsing every footer on every commit
+        # would tax the plain path for nothing.
+        meta = dict(meta or {})
+        file_domains: Dict[str, Any] = meta.pop("file_domains", None) or {}
+        probe_codec = meta.get("delta") is not None
+        probe_domains = meta.get("domains") is not None
         for n in names:
             path = os.path.join(sdir, n)
             fe = declared.get(n)
@@ -312,10 +333,24 @@ class StepManifest:
                 fe = FileEntry(
                     name=n, nbytes=os.path.getsize(path),
                     checksum=file_checksum(path) if checksum else None)
-            if probe_codec and n.endswith(".dsllm") and fe.codec is None:
-                codec = dsllm_file_codec(path)
-                if codec is not None:
-                    fe = dataclasses.replace(fe, codec=codec)
+            if fe.domains is None and n in file_domains:
+                fe = dataclasses.replace(fe, domains=file_domains[n])
+            if (probe_codec or (probe_domains and fe.domains is None)) \
+                    and n.endswith(".dsllm") \
+                    and (fe.codec is None or fe.domains is None):
+                fmeta = dsllm_file_meta(path)
+                repl: Dict[str, Any] = {}
+                if probe_codec and fe.codec is None:
+                    d = (fmeta or {}).get("delta") or {}
+                    if d:
+                        repl["codec"] = "raw" if d.get("keyframe", True) \
+                            else d.get("codec", "raw")
+                if probe_domains and fe.domains is None:
+                    doms = (fmeta or {}).get("domains")
+                    if doms:
+                        repl["domains"] = doms
+                if repl:
+                    fe = dataclasses.replace(fe, **repl)
             files.append(fe)
         if expect_ranks is not None:
             meta = dict(meta or {})

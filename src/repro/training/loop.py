@@ -95,7 +95,8 @@ class Trainer:
         }
 
     def resume(self, step: Optional[int] = None,
-               fallback: Optional[bool] = None) -> int:
+               fallback: Optional[bool] = None,
+               domains: Optional[Tuple[str, ...]] = None) -> int:
         """Resume from a checkpoint via the parallel restore engine.
 
         Step selection goes through the manager's checkpoint repository:
@@ -125,10 +126,16 @@ class Trainer:
         ranged reads out over a thread pool; per-phase timings land in
         ``self.last_resume_stats`` (index/read/assemble seconds plus the
         bytes actually read — the resume-cost breakdown of arXiv
-        2512.24511)."""
+        2512.24511).
+
+        ``domains`` forwards to the manager's selective restore: e.g.
+        ``resume(domains=("model",))`` reloads parameters only — the
+        optimizer/meta domains keep this trainer's current values (and
+        none of their bytes are read). Serving and full resume share
+        this one catalog-driven path."""
         assert self.manager is not None
         restored = self.manager.restore(self.state(), step=step,
-                                        fallback=fallback)
+                                        fallback=fallback, domains=domains)
         self.params = restored["model"]
         self.opt_state = restored["optimizer"]
         self.step = restored["meta"]["step"]

@@ -1,0 +1,155 @@
+"""CheckpointPolicy / from_policy API + the legacy-kwarg deprecation shim.
+
+The back-compat contract (ISSUE 5): every pre-policy constructor kwarg
+keeps working — mapped onto exactly one CheckpointPolicy field — while
+emitting a DeprecationWarning; the policy path emits nothing; mixing both
+is an error.
+"""
+
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (CheckpointManager, CheckpointPolicy, DeltaPolicy,
+                        DistPolicy, EnginePolicy, StoragePolicy)
+from repro.core.policy import LEGACY_KWARG_MAP
+from repro.storage import MemoryBackend, RetentionPolicy, Tier
+
+
+def tiny_state(v=1.0):
+    return {"model": {"w": jnp.full((64,), v, jnp.float32)},
+            "meta": {"step": 1}}
+
+
+# ----------------------------------------------------------- legacy shim
+def test_legacy_kwargs_warn_and_still_work(tmp_path):
+    state = tiny_state(3.0)
+    with pytest.warns(DeprecationWarning, match="from_policy"):
+        mgr = CheckpointManager(str(tmp_path), mode="datastates",
+                                host_cache_bytes=1 << 22,
+                                delta=DeltaPolicy(keyframe_every=2))
+    with mgr:
+        assert mgr.mode == "datastates"
+        assert mgr.delta_policy.keyframe_every == 2
+        mgr.save(1, state, blocking=True)
+        out = mgr.restore(state, step=1)
+        np.testing.assert_array_equal(np.asarray(out["model"]["w"]),
+                                      np.asarray(state["model"]["w"]))
+
+
+def test_legacy_save_of_raw_pytree_still_works(tmp_path):
+    """The pre-domain surface — an arbitrary (non-mapping-rooted) pytree
+    — still saves and restores through the default routing."""
+    state = [jnp.arange(32, dtype=jnp.float32),
+             np.arange(8, dtype=np.int16)]
+    with pytest.warns(DeprecationWarning):
+        mgr = CheckpointManager(str(tmp_path), mode="datastates")
+    with mgr:
+        mgr.save(1, state, blocking=True)
+        out = mgr.restore(state, step=1)
+        np.testing.assert_array_equal(np.asarray(out[0]),
+                                      np.asarray(state[0]))
+        np.testing.assert_array_equal(out[1], state[1])
+
+
+def test_bare_directory_constructor_does_not_warn(tmp_path):
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        with CheckpointManager(str(tmp_path)) as mgr:
+            assert mgr.policy == CheckpointPolicy()
+
+
+def test_from_policy_does_not_warn(tmp_path):
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        with CheckpointManager.from_policy(
+                str(tmp_path),
+                CheckpointPolicy(engine=EnginePolicy(mode="sync"))) as mgr:
+            assert mgr.mode == "sync"
+
+
+def test_policy_plus_legacy_kwargs_is_an_error(tmp_path):
+    with pytest.raises(ValueError, match="not both"):
+        CheckpointManager(str(tmp_path), mode="sync",
+                          policy=CheckpointPolicy())
+
+
+# ------------------------------------------------------- kwarg → field map
+def test_every_legacy_kwarg_maps_onto_one_policy_field(tmp_path):
+    tier = Tier("peer", MemoryBackend())
+    ret = RetentionPolicy(keep_last_n=2)
+    delta = DeltaPolicy(keyframe_every=3)
+    pol = CheckpointPolicy.from_legacy_kwargs(
+        mode="datastates-old", host_cache_bytes=1 << 22, flush_threads=2,
+        chunk_bytes=1 << 20, throttle_mbps=100.0, restore_threads=3,
+        tiers=[tier], retention=ret, manifest_checksums=False,
+        world=None, ack_timeout_s=5.0, delta=delta)
+    assert pol.engine == EnginePolicy(
+        mode="datastates-old", host_cache_bytes=1 << 22, flush_threads=2,
+        chunk_bytes=1 << 20, throttle_mbps=100.0, restore_threads=3)
+    assert pol.storage == StoragePolicy(tiers=(tier,), retention=ret,
+                                        manifest_checksums=False)
+    assert pol.dist == DistPolicy(world=None, ack_timeout_s=5.0)
+    assert pol.delta == delta
+    assert pol.providers is None
+
+
+def test_unknown_legacy_kwarg_raises_type_error():
+    with pytest.raises(TypeError, match="unknown"):
+        CheckpointPolicy.from_legacy_kwargs(fsync_mode="never")
+
+
+def test_legacy_map_is_total_over_the_old_signature():
+    """Guards the migration table: the shim must cover the entire
+    pre-policy constructor surface."""
+    assert set(LEGACY_KWARG_MAP) == {
+        "mode", "host_cache_bytes", "flush_threads", "chunk_bytes",
+        "throttle_mbps", "restore_threads", "tiers", "retention",
+        "manifest_checksums", "world", "coordinator", "ack_timeout_s",
+        "delta"}
+
+
+# ------------------------------------------------------------- validation
+def test_policy_validates_engine_mode(tmp_path):
+    with pytest.raises(ValueError, match="unknown engine mode"):
+        CheckpointManager.from_policy(
+            str(tmp_path), CheckpointPolicy(engine=EnginePolicy(mode="x")))
+
+
+def test_policy_delta_requires_data_movement_engine(tmp_path):
+    with pytest.raises(ValueError, match="DataMovementEngine"):
+        CheckpointManager.from_policy(
+            str(tmp_path), CheckpointPolicy(engine=EnginePolicy(mode="sync"),
+                                            delta=DeltaPolicy()))
+
+
+def test_delta_policy_validates_keyframe_every():
+    with pytest.raises(ValueError):
+        DeltaPolicy(keyframe_every=0)
+
+
+def test_dist_policy_validates_world():
+    with pytest.raises(ValueError):
+        DistPolicy(world=0)
+
+
+def test_policy_equivalent_to_legacy_kwargs(tmp_path):
+    """Same save through both constructor surfaces → identical bytes
+    visible to restore."""
+    state = tiny_state(7.0)
+    d1, d2 = str(tmp_path / "legacy"), str(tmp_path / "policy")
+    with pytest.warns(DeprecationWarning):
+        m1 = CheckpointManager(d1, mode="datastates",
+                               host_cache_bytes=1 << 22)
+    with m1:
+        m1.save(1, state, blocking=True)
+        a = m1.restore(state, step=1)
+    with CheckpointManager.from_policy(
+            d2, CheckpointPolicy(
+                engine=EnginePolicy(host_cache_bytes=1 << 22))) as m2:
+        m2.save(1, state, blocking=True)
+        b = m2.restore(state, step=1)
+    np.testing.assert_array_equal(np.asarray(a["model"]["w"]),
+                                  np.asarray(b["model"]["w"]))

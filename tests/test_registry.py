@@ -1,0 +1,273 @@
+"""StateProviderRegistry: rule precedence, routing errors, custom providers.
+
+Covers the ISSUE 5 registry edge cases: overlapping-rule precedence
+(first match wins), unmatched leaves under a strict registry (clear error
+naming the state path), and a custom provider that raises mid-``chunks()``
+(the engine must abort and unlink the partial file, never commit it).
+"""
+
+import glob
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (CheckpointError, CheckpointManager, CheckpointPolicy,
+                        EnginePolicy, ProviderRule, QuantizedStateProvider,
+                        RegistryError, StateProviderRegistry,
+                        TensorStateProvider)
+
+
+def small_state():
+    return {"model": {"w": jnp.arange(64, dtype=jnp.float32)},
+            "optimizer": {"m": jnp.ones((256, 256), jnp.float32),
+                          "count": jnp.array(3, jnp.int32)},
+            "meta": {"step": 3}}
+
+
+# ------------------------------------------------------------- precedence
+def test_first_matching_rule_wins_on_overlap():
+    reg = (StateProviderRegistry()
+           .add_rule(provider="quantized", domain="optimizer",
+                     dtype="float32")
+           .add_rule(provider="tensor", domain="optimizer")  # also matches
+           .add_rule(provider="auto"))
+    r = reg.route(domain="optimizer", path="state/optimizer/m",
+                  dtype="float32", nbytes=1 << 20, kind="tensor")
+    assert r.provider == "quantized" and r.rule_index == 0
+    # the int32 counter falls past the dtype-scoped rule to the next match
+    r2 = reg.route(domain="optimizer", path="state/optimizer/count",
+                   dtype="int32", nbytes=4, kind="tensor")
+    assert r2.provider == "tensor" and r2.rule_index == 1
+
+
+def test_size_threshold_and_path_regex_predicates():
+    reg = (StateProviderRegistry()
+           .add_rule(provider="quantized", path_regex=r"moments?/",
+                     min_nbytes=1 << 10)
+           .add_rule(provider="auto"))
+    big = reg.route(domain="opt", path="state/opt/moment/w", dtype="float32",
+                    nbytes=1 << 20, kind="tensor")
+    small = reg.route(domain="opt", path="state/opt/moment/b",
+                      dtype="float32", nbytes=16, kind="tensor")
+    other = reg.route(domain="opt", path="state/opt/scale", dtype="float32",
+                      nbytes=1 << 20, kind="tensor")
+    assert big.provider == "quantized"
+    assert small.provider == "auto"   # below min_nbytes
+    assert other.provider == "auto"   # regex miss
+
+
+def test_overlap_precedence_lands_in_the_manifest(tmp_path):
+    """End-to-end: with both rules matching the optimizer moments, the
+    earlier (quantized) one decides what hits disk."""
+    reg = (StateProviderRegistry()
+           .add_rule(provider="quantized", domain="optimizer",
+                     dtype="float32")
+           .add_rule(provider="tensor"))
+    pol = CheckpointPolicy(engine=EnginePolicy(host_cache_bytes=1 << 22),
+                           providers=reg)
+    with CheckpointManager.from_policy(str(tmp_path), pol) as mgr:
+        mgr.save(1, small_state(), blocking=True)
+        man = mgr.repository.manifest(1)
+        doms = man.meta["domains"]
+        assert doms["optimizer"]["providers"] == ["quantized", "tensor"]
+        assert "int8q+zstd" in doms["optimizer"]["codecs"]
+        assert doms["model"] == {"providers": ["tensor"],
+                                 "codecs": ["raw"]}
+        # per-file (domain, provider, codec) catalog entries
+        [fe] = [f for f in man.files if f.name.endswith(".dsllm")]
+        assert "quantized" in fe.domains["optimizer"]["providers"]
+
+
+# ------------------------------------------------------- unmatched / bad
+def test_strict_registry_names_the_unmatched_state_path(tmp_path):
+    reg = (StateProviderRegistry(strict=True)
+           .add_rule(provider="quantized", domain="optimizer",
+                     dtype="float32")
+           .add_rule(provider="object"))  # objects routed; tensors aren't
+    with pytest.raises(RegistryError, match=r"state/model/w"):
+        reg.route(domain="model", path="state/model/w", dtype="float32",
+                  nbytes=256, kind="tensor")
+    # and through the full save path: the error fires at plan time,
+    # before any I/O, and the step is never committed
+    pol = CheckpointPolicy(providers=reg)
+    with CheckpointManager.from_policy(str(tmp_path), pol) as mgr:
+        with pytest.raises(RegistryError, match=r"state/model/w"):
+            mgr.save(1, small_state(), blocking=True)
+        assert mgr.latest_step() is None
+
+
+def test_unknown_provider_name_is_an_error():
+    reg = StateProviderRegistry().add_rule(provider="zfp")
+    with pytest.raises(RegistryError, match="unknown provider 'zfp'"):
+        reg.route(domain="m", path="state/m/w", dtype="float32",
+                  nbytes=4, kind="tensor")
+
+
+def test_provider_implies_leaf_kind():
+    """A provider only matches leaves it can serve: a tensor-provider
+    catch-all skips object leaves (they fall through) and vice versa."""
+    reg = (StateProviderRegistry()
+           .add_rule(provider="quantized")    # tensor-only
+           .add_rule(provider="object"))      # object-only
+    t = reg.route(domain="m", path="state/m/w", dtype="float32",
+                  nbytes=1 << 20, kind="tensor")
+    o = reg.route(domain="meta", path="state/meta/step", kind="object")
+    assert t.provider == "quantized" and o.provider == "object"
+
+
+def test_explicit_kind_contradicting_provider_is_an_error():
+    reg = StateProviderRegistry().add_rule(provider="quantized",
+                                           kind="object")
+    with pytest.raises(RegistryError, match="tensor state only"):
+        reg.route(domain="meta", path="state/meta/step", kind="object")
+
+
+def test_cannot_override_stock_provider():
+    with pytest.raises(RegistryError, match="stock provider"):
+        StateProviderRegistry().register("tensor", lambda rec, **kw: None)
+
+
+def test_quantized_provider_rejects_non_f32(tmp_path):
+    """Routing int state to the quantized provider is a hard error (with
+    the fix named), not silent corruption."""
+    reg = (StateProviderRegistry()
+           .add_rule(provider="quantized", domain="optimizer")
+           .add_rule(provider="auto"))
+    pol = CheckpointPolicy(providers=reg)
+    with CheckpointManager.from_policy(str(tmp_path), pol) as mgr:
+        # provider construction happens in the blocking prologue, so the
+        # error surfaces synchronously and the step is never committed
+        with pytest.raises(ValueError, match="dtype='float32'"):
+            mgr.save(1, small_state(), blocking=True)
+        assert mgr.latest_step() is None
+
+
+def test_baseline_engines_reject_encoded_routes(tmp_path):
+    reg = (StateProviderRegistry()
+           .add_rule(provider="quantized", domain="optimizer",
+                     dtype="float32")
+           .add_rule(provider="auto"))
+    pol = CheckpointPolicy(engine=EnginePolicy(mode="sync"), providers=reg)
+    with CheckpointManager.from_policy(str(tmp_path), pol) as mgr:
+        with pytest.raises(ValueError, match="DataMovementEngine"):
+            mgr.save(1, small_state(), blocking=True)
+
+
+# ------------------------------------------------------ custom providers
+class _ExplodingProvider(TensorStateProvider):
+    """Streams one good chunk, then dies mid-iteration."""
+
+    def chunks(self):
+        it = super().chunks()
+        yield next(it)
+        raise RuntimeError("provider exploded mid-stream")
+
+
+def test_custom_provider_roundtrip(tmp_path):
+    """A well-behaved custom provider (here: a plain subclass) routes by
+    name and round-trips."""
+    made = []
+
+    def factory(rec, **kw):
+        made.append(rec.tensor_name)
+        return TensorStateProvider(rec.tensor_name, **kw)
+
+    reg = (StateProviderRegistry()
+           .register("mirror", factory)
+           .add_rule(provider="mirror", domain="model")
+           .add_rule(provider="auto"))
+    pol = CheckpointPolicy(providers=reg)
+    state = small_state()
+    with CheckpointManager.from_policy(str(tmp_path), pol) as mgr:
+        mgr.save(1, state, blocking=True)
+        assert any("model/w" in n for n in made)
+        out = mgr.restore(state, step=1)
+        np.testing.assert_array_equal(np.asarray(out["model"]["w"]),
+                                      np.asarray(state["model"]["w"]))
+        man = mgr.repository.manifest(1)
+        assert man.meta["domains"]["model"]["providers"] == ["mirror"]
+
+
+def test_custom_provider_raising_mid_chunks_aborts_and_unlinks(tmp_path):
+    """ISSUE 5 edge case: the engine must abort the save, unlink the
+    footer-less partial file, and never commit the step — and the next
+    save must succeed (no leaked cache reservations)."""
+    reg = (StateProviderRegistry()
+           .register("exploding",
+                     lambda rec, **kw: _ExplodingProvider(rec.tensor_name,
+                                                          **kw))
+           .add_rule(provider="exploding", path_regex=r"optimizer/m")
+           .add_rule(provider="auto"))
+    pol = CheckpointPolicy(engine=EnginePolicy(host_cache_bytes=1 << 22,
+                                               chunk_bytes=1 << 14),
+                           providers=reg)
+    state = small_state()
+    with CheckpointManager.from_policy(str(tmp_path), pol) as mgr:
+        fut = mgr.save(1, state)
+        with pytest.raises(CheckpointError):
+            fut.wait_persisted()
+        mgr.wait_for_commit(1)
+        # never committed, and the partial rank file is gone
+        assert mgr.latest_step() is None
+        assert mgr.repository.steps() == []
+        assert glob.glob(str(tmp_path / "global_step1" / "*.dsllm")) == []
+        # engine lanes healthy: a clean registry save goes through
+        clean = (StateProviderRegistry().add_rule(provider="auto"))
+        mgr.registry = clean
+        mgr.save(2, state, blocking=True)
+        assert mgr.latest_step() == 2
+        out = mgr.restore(state)
+        np.testing.assert_array_equal(np.asarray(out["optimizer"]["m"]),
+                                      np.asarray(state["optimizer"]["m"]))
+
+
+def test_custom_factory_must_return_tensor_provider(tmp_path):
+    reg = (StateProviderRegistry()
+           .register("broken", lambda rec, **kw: object())
+           .add_rule(provider="broken", kind="tensor")
+           .add_rule(provider="auto"))
+    pol = CheckpointPolicy(providers=reg)
+    with CheckpointManager.from_policy(str(tmp_path), pol) as mgr:
+        with pytest.raises(CheckpointError, match="TensorStateProvider"):
+            mgr.save(1, small_state(), blocking=True)
+
+
+def test_commit_fills_file_domains_without_footer_parse(tmp_path,
+                                                        monkeypatch):
+    """The per-file (domain, provider, codec) records come from the
+    engine's plan, threaded through the committer — commit must not
+    re-open and parse .dsllm footers for them (the probe is a fallback
+    for files the engine map misses)."""
+    import repro.storage.manifest as mf
+    calls = []
+    orig = mf.dsllm_file_meta
+    monkeypatch.setattr(mf, "dsllm_file_meta",
+                        lambda p: calls.append(p) or orig(p))
+    with CheckpointManager.from_policy(str(tmp_path)) as mgr:
+        mgr.save(1, small_state(), blocking=True)
+        man = mgr.repository.manifest(1)
+        [fe] = [f for f in man.files if f.name.endswith(".dsllm")]
+        assert fe.domains["model"]["providers"] == ["tensor"]
+        assert "file_domains" not in man.meta  # popped, never stored
+    assert calls == []
+
+
+def test_quantized_provider_direct_roundtrip_via_file(tmp_path):
+    """Unit-level: QuantizedStateProvider chunks decode back within one
+    quantization step per value."""
+    from repro.core import codecs
+    rng = np.random.default_rng(0)
+    arr = rng.standard_normal((300, 70)).astype(np.float32)
+    p = QuantizedStateProvider("t", dtype="float32", shape=arr.shape,
+                               nbytes=arr.nbytes, host_array=arr,
+                               chunk_bytes=1 << 12)
+    out = np.empty(arr.nbytes, np.uint8)
+    for ch in p.chunks():
+        lo, hi = ch.raw_range
+        out[lo:hi] = codecs.decode_chunk_payload(
+            codecs.codec_base(ch.codec), bytes(ch.data), lo, hi)
+    dec = out.view(np.float32).reshape(arr.shape)
+    step = np.abs(arr).max() / 127 + 1e-7
+    assert np.max(np.abs(dec - arr)) <= step

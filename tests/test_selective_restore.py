@@ -1,0 +1,205 @@
+"""Selective (per-domain) restore + the four stock providers end-to-end.
+
+Acceptance for ISSUE 5: ``restore(domains=("model",))`` provably reads
+only model-domain bytes (``RestoreStats.bytes_read`` audit), serving's
+``load_params_for_serving`` rides the same path (including from a remote
+tier), and tensor/object/delta/quantized all round-trip through one
+registry-driven save on both the single-writer and ``world=4``
+coordinator paths.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (CheckpointManager, CheckpointPolicy, DeltaPolicy,
+                        DistPolicy, EnginePolicy, StateProviderRegistry,
+                        StoragePolicy)
+from repro.serving.engine import load_params_for_serving
+from repro.storage import MemoryBackend, Tier
+from repro.training.loop import Trainer
+
+
+MODEL_BYTES = 64 * 32 * 4
+
+
+def big_state(i=1):
+    """Small model domain + much larger optimizer domain, so the
+    bytes-read audit has a visible gap to measure."""
+    return {
+        "model": {"w": (jnp.arange(64 * 32, dtype=jnp.float32)
+                        .reshape(64, 32) + i)},
+        "optimizer": {"m": jnp.linspace(-2.0, 2.0, 512 * 256,
+                                        dtype=jnp.float32)
+                      .reshape(512, 256) * (1 + i),
+                      "count": jnp.array(i, jnp.int32)},
+        "ema": {"e": jnp.full((128, 64), float(i), jnp.float32)},
+        "meta": {"step": i, "note": "x" * 1000},
+    }
+
+
+def four_provider_registry():
+    return (StateProviderRegistry()
+            .add_rule(provider="quantized", domain="optimizer",
+                      dtype="float32")
+            .add_rule(provider="delta", domain="ema")
+            .add_rule(provider="tensor", domain="model")
+            .add_rule(provider="auto"))
+
+
+def assert_state_matches(out, i, quant_tol=True):
+    ref = big_state(i)
+    np.testing.assert_array_equal(np.asarray(out["model"]["w"]),
+                                  np.asarray(ref["model"]["w"]))
+    np.testing.assert_array_equal(np.asarray(out["ema"]["e"]),
+                                  np.asarray(ref["ema"]["e"]))
+    m, rm = np.asarray(out["optimizer"]["m"]), np.asarray(
+        ref["optimizer"]["m"])
+    if quant_tol:  # int8 per-row bound: one quantization step per value
+        tol = np.abs(rm).max(axis=1, keepdims=True) / 127 + 1e-6
+        assert np.all(np.abs(m - rm) <= tol)
+    else:
+        np.testing.assert_array_equal(m, rm)
+    assert int(out["optimizer"]["count"]) == i
+    assert out["meta"]["step"] == i
+
+
+# ----------------------------------------------- acceptance: four providers
+def test_four_stock_providers_roundtrip_single_writer(tmp_path):
+    pol = CheckpointPolicy(engine=EnginePolicy(host_cache_bytes=1 << 24),
+                           delta=DeltaPolicy(keyframe_every=3),
+                           providers=four_provider_registry())
+    with CheckpointManager.from_policy(str(tmp_path), pol) as mgr:
+        for i in range(1, 5):
+            mgr.save(i, big_state(i), blocking=True)
+        # step 2/4 are delta steps for the ema domain; every step restores
+        for i in range(1, 5):
+            assert_state_matches(mgr.restore(big_state(0), step=i), i)
+        man = mgr.repository.manifest(4)
+        doms = man.meta["domains"]
+        assert doms["model"]["providers"] == ["tensor"]
+        assert doms["ema"]["providers"] == ["delta"]
+        # the fp32 moments quantize; the int32 counter rides "auto",
+        # which under a DeltaPolicy resolves to the delta provider
+        assert doms["optimizer"]["providers"] == ["delta", "quantized"]
+        assert doms["meta"]["providers"] == ["object"]
+
+
+def test_four_stock_providers_roundtrip_world4(tmp_path):
+    pol = CheckpointPolicy(engine=EnginePolicy(host_cache_bytes=1 << 26),
+                           dist=DistPolicy(world=4),
+                           delta=DeltaPolicy(keyframe_every=2),
+                           providers=four_provider_registry())
+    with CheckpointManager.from_policy(str(tmp_path), pol) as mgr:
+        for i in range(1, 4):
+            mgr.save(i, big_state(i), blocking=True)
+        for i in range(1, 4):
+            assert_state_matches(mgr.restore(big_state(0), step=i), i)
+        man = mgr.repository.manifest(3)
+        assert man.meta.get("world") == 4
+        assert man.meta["domains"]["optimizer"]["providers"] == [
+            "delta", "quantized"]
+
+
+# -------------------------------------------------- bytes-minimal restore
+def test_selective_restore_reads_only_model_bytes(tmp_path):
+    state = big_state(2)
+    with CheckpointManager.from_policy(
+            str(tmp_path),
+            CheckpointPolicy(engine=EnginePolicy(host_cache_bytes=1 << 24))
+    ) as mgr:
+        mgr.save(2, state, blocking=True)
+        total = mgr.repository.manifest(2).total_bytes
+        out = mgr.restore(big_state(0), step=2, domains=("model",))
+        stats = mgr.last_restore_stats
+        # the audit: exactly the model tensor's bytes, nothing else
+        assert stats.bytes_read == MODEL_BYTES
+        assert stats.bytes_read < total // 10
+        assert stats.n_leaves == 1
+        np.testing.assert_array_equal(np.asarray(out["model"]["w"]),
+                                      np.asarray(state["model"]["w"]))
+        # unrequested domains keep the template's values, untouched
+        np.testing.assert_array_equal(np.asarray(out["ema"]["e"]),
+                                      np.zeros((128, 64), np.float32))
+        assert out["meta"]["step"] == 0
+
+
+def test_selective_restore_multiple_domains_and_errors(tmp_path):
+    state = big_state(1)
+    with CheckpointManager.from_policy(str(tmp_path)) as mgr:
+        mgr.save(1, state, blocking=True)
+        out = mgr.restore(big_state(0), step=1, domains=("model", "meta"))
+        assert out["meta"]["step"] == 1
+        np.testing.assert_array_equal(np.asarray(out["model"]["w"]),
+                                      np.asarray(state["model"]["w"]))
+        with pytest.raises(KeyError, match="dataloader"):
+            mgr.restore(big_state(0), step=1, domains=("dataloader",))
+        with pytest.raises(ValueError, match="mapping"):
+            mgr.restore([jnp.zeros(4)], step=1, domains=("model",))
+
+
+def test_selective_restore_from_quantized_save_skips_optimizer_bytes(
+        tmp_path):
+    """Domain selection composes with encoded providers: the quantized
+    optimizer payloads are never even decoded for a model-only restore."""
+    pol = CheckpointPolicy(engine=EnginePolicy(host_cache_bytes=1 << 24),
+                           providers=four_provider_registry(),
+                           delta=DeltaPolicy(keyframe_every=2))
+    with CheckpointManager.from_policy(str(tmp_path), pol) as mgr:
+        mgr.save(1, big_state(1), blocking=True)
+        mgr.restore(big_state(0), step=1, domains=("model",))
+        assert mgr.last_restore_stats.bytes_read == MODEL_BYTES
+
+
+def test_serving_goes_through_selective_restore(tmp_path):
+    state = big_state(3)
+    with CheckpointManager.from_policy(str(tmp_path)) as mgr:
+        mgr.save(3, state, blocking=True)
+    params, stats = load_params_for_serving(
+        str(tmp_path), {"w": jnp.zeros((64, 32), jnp.float32)})
+    np.testing.assert_array_equal(np.asarray(params["w"]),
+                                  np.asarray(state["model"]["w"]))
+    assert stats.bytes_read == MODEL_BYTES
+
+
+def test_serving_selective_restore_from_remote_tier(tmp_path):
+    """Satellite: the bytes-minimal serving path works when the step only
+    survives on a remote tier (re-hydration + ranged reads)."""
+    remote = Tier("peer", MemoryBackend())
+    state = big_state(5)
+    pol = CheckpointPolicy(storage=StoragePolicy(tiers=(remote,)))
+    with CheckpointManager.from_policy(str(tmp_path), pol) as mgr:
+        mgr.save(5, state, blocking=True)
+        mgr.repository.wait_cascaded()
+        mgr.repository._delete_local_step(5)
+        assert mgr.repository.local_steps() == []
+        params, stats = load_params_for_serving(
+            str(tmp_path), {"w": jnp.zeros((64, 32), jnp.float32)},
+            repository=mgr.repository)
+        np.testing.assert_array_equal(np.asarray(params["w"]),
+                                      np.asarray(state["model"]["w"]))
+        assert stats.bytes_read == MODEL_BYTES
+
+
+# ------------------------------------------------------- trainer resume
+def test_trainer_partial_resume_model_domain_only(tmp_path):
+    """Trainer.resume(domains=...) rides the same selective path: the
+    model reloads from the checkpoint, optimizer/meta stay current."""
+    from repro.configs import get_config, smoke_variant
+    cfg = smoke_variant(get_config("llama3.2-1b"))
+    with CheckpointManager.from_policy(str(tmp_path)) as mgr:
+        tr = Trainer(cfg, batch=2, seq_len=16, manager=mgr)
+        tr.run(2, ckpt_interval=2)
+        mgr.wait_for_persist()
+        saved_params = tr.params
+        tr2 = Trainer(cfg, batch=2, seq_len=16, manager=mgr, seed=1)
+        step_before = tr2.step
+        tr2.resume(domains=("model",))
+        import jax
+        for a, b in zip(jax.tree_util.tree_leaves(tr2.params),
+                        jax.tree_util.tree_leaves(saved_params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert tr2.step == step_before  # meta domain untouched
+        model_bytes = sum(np.asarray(x).nbytes
+                          for x in jax.tree_util.tree_leaves(saved_params))
+        assert tr2.last_resume_stats.bytes_read == model_bytes
