@@ -1,0 +1,12 @@
+#!/usr/bin/env bash
+# ckptlint entry point: the project-native static analyzer that enforces
+# the concurrency + commit-protocol invariants (see README "Correctness
+# tooling"). Non-zero exit on any active finding — this is a merge gate.
+#
+#   scripts/lint.sh                 # lint src/ (the gate)
+#   scripts/lint.sh path [path...]  # lint specific files/dirs
+#   scripts/lint.sh --list-rules    # rule catalog
+set -euo pipefail
+cd "$(dirname "$0")/.."
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+  python -m repro.analysis "$@"

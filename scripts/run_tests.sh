@@ -16,6 +16,9 @@ args=()
 if [[ "${1:-}" == "--fast" ]]; then
   shift
   args+=(-m "not slow")
+  # The fast lane is the iteration loop: run the ckptlint gate up front
+  # so an invariant violation fails in ~a second, before any test runs.
+  scripts/lint.sh
 fi
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
   python -m pytest -x -q ${args[@]+"${args[@]}"} "$@"

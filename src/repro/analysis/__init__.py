@@ -1,0 +1,13 @@
+"""``ckptlint``: project-native static analysis + runtime lock witness.
+
+Static CLI: ``python -m repro.analysis [paths]`` (default ``src``).
+Runtime: :mod:`repro.analysis.locks` declarations +
+:mod:`repro.analysis.witness` recordings in the fault suites.
+"""
+
+from .linter import Finding, run
+from .locks import LOCK_REGISTRY, declared_hierarchy, declares_lock, \
+    named_condition, named_lock
+
+__all__ = ["Finding", "run", "LOCK_REGISTRY", "declared_hierarchy",
+           "declares_lock", "named_lock", "named_condition"]

@@ -550,7 +550,11 @@ class SyncSerializedEngine(BaseCheckpointEngine):
             stats.serialize_s += time.perf_counter() - t0
             t0 = time.perf_counter()
             path = rank_file(directory, rank, ext="pkl")
-            with open(path, "wb") as f:
+            # Baseline measured as-published (torch.save analogue): a single
+            # blocking whole-graph write with no atomic-rename protocol is
+            # the behaviour under study; commit visibility still comes from
+            # the repository's manifest-last path above this engine.
+            with open(path, "wb") as f:  # ckptlint: disable=CKPT301
                 f.write(payload)
                 f.flush()
                 maybe_fsync(f.fileno())

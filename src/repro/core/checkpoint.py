@@ -42,6 +42,7 @@ import time
 import warnings
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
+from repro.analysis.locks import declares_lock
 from repro.storage.backend import BackendError
 from repro.storage.repository import (CheckpointRepository, RetentionPolicy,
                                       Tier, committed_steps)
@@ -70,6 +71,7 @@ ENGINES = {
 _UNSET: Any = object()
 
 
+@declares_lock("manager.delta_tracker", rank=30, attrs=("_lock",))
 class _DeltaChainTracker:
     """Decides keyframe vs delta per save and tracks the chain position.
 

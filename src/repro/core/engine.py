@@ -29,6 +29,8 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.analysis.locks import declares_lock, named_lock
+
 from .host_cache import HostCache
 from .layout import FileWriter
 from .state_provider import (Chunk, CompositeStateProvider,
@@ -140,6 +142,7 @@ class _WriteOp:
         self.on_written = on_written
 
 
+@declares_lock("engine.file_state", rank=52, attrs=("lock",))
 class _FileState:
     """Per-file pending-op accounting to decide when to finalize."""
 
@@ -232,15 +235,30 @@ class DataMovementEngine:
                 f"host cache ({self.host_cache.capacity/2**20:.0f} MiB); "
                 f"raise host_cache_bytes — the cache must hold one full "
                 f"checkpoint version (paper §VI-C2)")
-        for provider, _arr in capture_items:
-            provider.bind_reservation(self.host_cache.reserve(provider.nbytes))
-        # --- launch non-blocking D2H for every device shard (lazy capture;
-        # overlaps with the next iteration's forward/backward, §V-A2).
-        for _provider, arr in capture_items:
-            try:
-                arr.copy_to_host_async()
-            except AttributeError:
-                pass  # plain numpy / non-jax arrays
+        bound: List[TensorStateProvider] = []
+        try:
+            for provider, _arr in capture_items:
+                provider.bind_reservation(
+                    self.host_cache.reserve(provider.nbytes))
+                bound.append(provider)
+            # --- launch non-blocking D2H for every device shard (lazy
+            # capture; overlaps with the next iteration's forward/backward,
+            # §V-A2).
+            for _provider, arr in capture_items:
+                try:
+                    arr.copy_to_host_async()
+                except AttributeError:
+                    pass  # plain numpy / non-jax arrays
+        except BaseException:
+            # Prologue failed mid-way: nothing was enqueued yet, so no lane
+            # will ever drain these reservations — release them here or the
+            # pinned pool leaks and the next save deadlocks in reserve().
+            for provider in bound:
+                try:
+                    provider.release()
+                except BaseException:
+                    pass
+            raise
         for plan in files:
             stats.n_files += 1
             comp = plan.composite
@@ -248,7 +266,7 @@ class DataMovementEngine:
             stats.bytes_tensors += sum(p.nbytes for p in comp.tensor_providers)
 
         pending_files = {"n": len(files)}
-        lock = threading.Lock()
+        lock = named_lock("engine.save_progress", rank=50)
 
         def file_done() -> None:
             with lock:

@@ -15,6 +15,8 @@ from typing import List, Optional, Tuple
 
 import numpy as np
 
+from repro.analysis.locks import declares_lock
+
 
 class CacheFullError(RuntimeError):
     pass
@@ -45,6 +47,9 @@ class Reservation:
             self._cache._free(self)
 
 
+# Innermost lock of the hierarchy: reserve() may block on back-pressure,
+# so nothing else may be held while other threads need the allocator.
+@declares_lock("host_cache.alloc", rank=70, attrs=("_lock", "_freed"))
 class HostCache:
     """Blocking first-fit allocator over one pre-allocated pinned buffer."""
 

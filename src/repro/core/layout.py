@@ -27,6 +27,8 @@ from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
 import msgpack
 import numpy as np
 
+from repro.analysis.locks import declares_lock
+
 MAGIC = b"DSLLMCK1"
 ALIGN = 4096
 _TRAILER = struct.Struct("<Q8s")  # footer_len, magic
@@ -104,6 +106,7 @@ class FileLayout:
         return cls(tensors=entries, tensor_region_end=align_up(cursor))
 
 
+@declares_lock("writer.append", rank=60, attrs=("_append_lock",))
 class FileWriter:
     """Positional writer for one checkpoint file.
 
@@ -211,13 +214,21 @@ class FileWriter:
         }
         payload = msgpack.packb(footer, use_bin_type=True)
         with self._append_lock:
+            fd = self._fd
+            if fd < 0:
+                # a concurrent abort() (or double finalize) already closed
+                # the file — sealing it now would publish a partial file
+                raise ValueError(
+                    f"{self.path}: finalize() on a closed/aborted writer")
+            # take sole ownership of the fd so a racing abort() cannot
+            # close it between our writes below
+            self._fd = -1
             off = self._append_cursor
             self._append_cursor += len(payload) + _TRAILER.size
-        os.pwrite(self._fd, payload, off)
-        os.pwrite(self._fd, _TRAILER.pack(len(payload), MAGIC), off + len(payload))
-        maybe_fsync(self._fd)
-        os.close(self._fd)
-        self._fd = -1
+        os.pwrite(fd, payload, off)
+        os.pwrite(fd, _TRAILER.pack(len(payload), MAGIC), off + len(payload))
+        maybe_fsync(fd)
+        os.close(fd)
 
     def abort(self) -> None:
         """Close the fd without writing a footer. Idempotent and safe to

@@ -195,7 +195,10 @@ class DifferentialCheckpointer:
             raw_total += enc.raw_nbytes
             comp_total += len(enc.payload)
         path = os.path.join(self.directory, f"diff_{step:08d}.pkl")
-        with open(path, "wb") as f:
+        # Deprecated standalone reducer (pre-repository legacy format): its
+        # flat diff_*.pkl files live outside the catalog/manifest protocol
+        # by definition; kept only for the migration window.
+        with open(path, "wb") as f:  # ckptlint: disable=CKPT301
             pickle.dump(record, f, protocol=pickle.HIGHEST_PROTOCOL)
         self._n_saves += 1
         return {"path": path, "raw_bytes": raw_total,

@@ -40,6 +40,8 @@ from typing import Any, Callable, Dict, Iterator, List, Optional, Sequence, \
 import msgpack
 import numpy as np
 
+from repro.analysis.locks import declares_lock
+
 from .codecs import (DELTA_CODEC, INT8_CODEC, INT8_ROW_BYTES,
                      encode_int8_block)
 from .host_cache import HostCache, Reservation
@@ -68,6 +70,7 @@ class Chunk:
     on_flushed: Optional[Callable[[], None]] = None
 
 
+@declares_lock("encode.budget", rank=56, attrs=("_cond",))
 class EncodeBudget:
     """Caps the bytes of freshly-allocated encoded (XOR) payloads queued
     between producer and flush lanes.
@@ -120,6 +123,7 @@ class DeltaSaveSpec:
                 "chain_depth": self.chain_depth, "codec": self.codec}
 
 
+@declares_lock("snapshot.cache", rank=54, attrs=("_lock",))
 class SnapshotCache:
     """Per-engine retained previous-snapshot copies, one per tensor name.
 
@@ -196,6 +200,7 @@ class StateProvider:
         return None
 
 
+@declares_lock("provider.stage", rank=58, attrs=("_cond",))
 class TensorStateProvider(StateProvider):
     """Zero-copy SP for a byte-addressable tensor (host or device resident).
 

@@ -21,6 +21,8 @@ from __future__ import annotations
 import threading
 from typing import Optional
 
+from repro.analysis.locks import declares_lock
+
 
 class BarrierBroken(RuntimeError):
     """The collective failed: some party poisoned the barrier."""
@@ -30,6 +32,7 @@ class BarrierBroken(RuntimeError):
         self.rank = rank
 
 
+@declares_lock("barrier.cond", rank=20, attrs=("_cond",))
 class CollectiveBarrier:
     """Reusable N-party barrier with poisoning and observer waits."""
 

@@ -46,6 +46,7 @@ import queue
 import threading
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
+from repro.analysis.locks import declares_lock
 from repro.core.baselines import (DataStatesEngine, DataStatesOldEngine,
                                   rank_file)
 from repro.core.distributed import ShardRecord
@@ -97,6 +98,9 @@ def partition_records(records: Sequence[ShardRecord], world: int
     return out
 
 
+# Outermost lock: rank callbacks fire with no repo/engine lock held, and
+# all barrier/repository work happens after this lock is dropped.
+@declares_lock("coordinator.job", rank=10, attrs=("lock",))
 class _SaveJob:
     """Shared per-save state: capture/ack aggregation onto one future."""
 

@@ -1,3 +1,4 @@
+import faulthandler
 import os
 import sys
 
@@ -9,6 +10,21 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
 import pytest
+
+
+def pytest_configure(config):
+    # Hung-test watchdog: the concurrency suites exercise real lock/barrier
+    # interleavings, so a regression can deadlock rather than fail. Dump
+    # every thread's stack if the run wedges — CI then shows the deadlock
+    # instead of a silent job kill. REPRO_TEST_DUMP_AFTER_S=0 disables.
+    timeout = float(os.environ.get("REPRO_TEST_DUMP_AFTER_S", "900"))
+    if timeout > 0:
+        faulthandler.enable()
+        faulthandler.dump_traceback_later(timeout, repeat=True, exit=False)
+
+
+def pytest_unconfigure(config):
+    faulthandler.cancel_dump_traceback_later()
 
 # ---------------------------------------------------------------------------
 # `hypothesis` is an optional dev dependency (see requirements-dev.txt).

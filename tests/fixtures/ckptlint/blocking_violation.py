@@ -1,0 +1,36 @@
+"""Golden fixture: blocking-under-lock rule family (CKPT201)."""
+
+import threading
+import time
+
+from repro.analysis.locks import declares_lock
+
+
+@declares_lock("fxb.state", rank=40, attrs=("_lock", "_cond"))
+class Flusher:
+    def __init__(self, backend):
+        self._lock = threading.Lock()
+        self._cond = threading.Condition(self._lock)
+        self.backend = backend
+
+    def bad_sleep(self):
+        with self._lock:
+            time.sleep(0.5)  # EXPECT:CKPT201
+
+    def bad_io(self, path):
+        with self._lock:
+            with open(path) as f:  # EXPECT:CKPT201
+                return f.read()
+
+    def bad_backend_call(self, key, data):
+        with self._lock:
+            self.backend.put(key, data)  # EXPECT:CKPT201
+
+    def bad_future_wait(self, fut):
+        with self._lock:
+            return fut.result()  # EXPECT:CKPT201
+
+    def ok_own_condition_wait(self):
+        # sanctioned: waiting on the condition that aliases the held lock
+        with self._cond:
+            self._cond.wait(timeout=1.0)

@@ -1,0 +1,29 @@
+"""Golden fixture: a module every rule family must pass untouched."""
+
+import threading
+import time
+
+from repro.analysis.locks import declares_lock, named_lock
+
+
+@declares_lock("fxc.outer", rank=10, attrs=("_lock",))
+class Orchestrator:
+    def __init__(self, repo):
+        self._lock = threading.Lock()
+        self.repo = repo
+        self.count = 0
+
+    def tick(self):
+        with self._lock:
+            self.count += 1
+        time.sleep(0.0)  # blocking work happens outside the lock
+
+    def nested_in_order(self):
+        inner = named_lock("fxc.inner", rank=90)
+        with self._lock:
+            with inner:  # ranks strictly increase inward: legal
+                self.count += 1
+
+    def commit(self, step, payload):
+        # repository-owned bytes go through the atomic helper
+        self.repo._local.put(f"data/{step}/shard.bin", payload)

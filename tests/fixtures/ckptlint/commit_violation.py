@@ -1,0 +1,24 @@
+"""Golden fixture: commit-protocol rule family (CKPT301/302/303/304)."""
+
+import os
+
+from repro.core.layout import FileWriter
+
+
+def bad_raw_write(repo, payload):
+    sdir = repo.step_dir(7)
+    with open(os.path.join(sdir, "shard.bin"), "wb") as f:  # EXPECT:CKPT301
+        f.write(payload)
+
+
+def bad_rename(repo):
+    sdir = repo.step_dir(7)
+    os.rename(sdir + ".tmp", sdir)  # EXPECT:CKPT302
+
+
+def bad_writer_lane(path, layout):
+    writer = FileWriter(path, layout)  # EXPECT:CKPT303
+    try:
+        writer.append_object("state", b"x")
+    except Exception:
+        writer.finalize()  # EXPECT:CKPT304

@@ -1,0 +1,11 @@
+"""Golden fixture: API-hygiene rule family (CKPT501/502/503)."""
+
+from repro.core.checkpoint import CheckpointManager
+from repro.core.reduction import DifferentialCheckpointer  # EXPECT:CKPT503
+from repro.core.state_provider import TensorStateProvider
+
+
+def bad_api(tmpdir):
+    mgr = CheckpointManager(tmpdir, mode="datastates", flush_threads=2)  # EXPECT:CKPT501
+    prov = TensorStateProvider("w0", dtype="float32", shape=(2,), nbytes=8)  # EXPECT:CKPT502
+    return mgr, prov

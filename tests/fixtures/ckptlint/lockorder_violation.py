@@ -1,0 +1,41 @@
+"""Golden fixture: lock-order rule family (CKPT101/102/103/104).
+
+Never imported — only parsed by ckptlint. `EXPECT:RULE` markers name the
+finding each line must produce (tests/test_ckptlint.py reads them).
+"""
+
+import threading
+
+from repro.analysis.locks import declares_lock, named_lock
+
+
+@declares_lock("fx.state", rank=40, attrs=("_lock",))
+class Holder:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._extra = threading.Lock()  # EXPECT:CKPT103
+
+
+def bad_nesting():
+    hi = named_lock("fx.high", rank=50)
+    lo = named_lock("fx.low", rank=10)
+    with hi:
+        with lo:  # EXPECT:CKPT101 EXPECT:CKPT102
+            pass
+
+
+def reverse_path():
+    # the rank-legal direction; combined with bad_nesting this closes a
+    # cycle in the acquisition graph
+    hi = named_lock("fx.high", rank=50)
+    lo = named_lock("fx.low", rank=10)
+    with lo:
+        with hi:
+            pass
+
+
+def bare_acquire():
+    guard = named_lock("fx.bare", rank=60)
+    guard.acquire()  # EXPECT:CKPT104
+    print("no try/finally protects the release below")
+    guard.release()

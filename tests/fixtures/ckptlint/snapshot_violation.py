@@ -1,0 +1,14 @@
+"""Golden fixture: snapshot-immutability rule family (CKPT401)."""
+
+
+def bad_direct_mutation(cache):
+    res = cache.reserve(1024)
+    res.view[0:4] = b"oops"  # EXPECT:CKPT401
+    return res
+
+
+def bad_aliased_mutation(cache):
+    res = cache.reserve(1024)
+    staged = res.view
+    staged[0:4] = b"oops"  # EXPECT:CKPT401
+    return res

@@ -1,0 +1,22 @@
+"""Golden fixture: suppression comments silence (but still count) findings."""
+
+import time
+import threading
+
+from repro.analysis.locks import declares_lock
+
+
+@declares_lock("fxs.state", rank=40, attrs=("_lock",))
+class Suppressed:
+    def __init__(self):
+        self._lock = threading.Lock()
+
+    def same_line_form(self):
+        with self._lock:
+            time.sleep(0.1)  # ckptlint: disable=CKPT201
+
+    def line_above_form(self, sdir, payload):
+        # fixture: exercising the comment-on-previous-line suppression form
+        # ckptlint: disable=CKPT301
+        with open(sdir + "/x.bin", "wb") as f:
+            f.write(payload)

@@ -1,0 +1,219 @@
+"""ckptlint analyzer tests: golden fixtures per rule family, the
+clean-tree merge gate, suppression handling, CLI exit codes, and the
+runtime lock-order witness."""
+
+import os
+import re
+import threading
+
+import pytest
+
+from repro.analysis import __main__ as cli
+from repro.analysis import linter, witness
+from repro.analysis.locks import declares_lock, named_lock
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+REPO = os.path.abspath(os.path.join(HERE, ".."))
+FIXTURES = os.path.join(HERE, "fixtures", "ckptlint")
+
+_EXPECT_RE = re.compile(r"EXPECT:(CKPT\d+)")
+
+VIOLATION_FIXTURES = [
+    "lockorder_violation.py",
+    "blocking_violation.py",
+    "commit_violation.py",
+    "snapshot_violation.py",
+    "hygiene_violation.py",
+]
+
+
+def expected_findings(path):
+    """(rule, line) pairs from the fixture's inline EXPECT markers."""
+    out = set()
+    with open(path) as f:
+        for lineno, line in enumerate(f, 1):
+            for rule in _EXPECT_RE.findall(line):
+                out.add((rule, lineno))
+    return out
+
+
+def run_fixture(name):
+    path = os.path.join(FIXTURES, name)
+    active, suppressed = linter.run([path], root=REPO)
+    rel = os.path.relpath(path, REPO).replace(os.sep, "/")
+    for f in active + suppressed:
+        assert f.path == rel
+    return active, suppressed
+
+
+# ---------------------------------------------------------------- static pass
+@pytest.mark.parametrize("name", VIOLATION_FIXTURES)
+def test_rule_family_detected_with_exact_locations(name):
+    """Each seeded violation is found at its exact file:line — and nothing
+    else in the fixture is flagged (false-positive guard)."""
+    active, suppressed = run_fixture(name)
+    assert not suppressed
+    found = {(f.rule, f.line) for f in active}
+    assert found == expected_findings(os.path.join(FIXTURES, name))
+
+
+def test_all_five_rule_families_are_covered_by_fixtures():
+    families = set()
+    for name in VIOLATION_FIXTURES:
+        for rule, _line in expected_findings(os.path.join(FIXTURES, name)):
+            families.add(rule[:5])  # CKPT + family digit
+    assert families >= {"CKPT1", "CKPT2", "CKPT3", "CKPT4", "CKPT5"}
+
+
+def test_clean_fixture_has_no_findings():
+    active, suppressed = run_fixture("clean_ok.py")
+    assert active == [] and suppressed == []
+
+
+def test_suppression_comments_silence_but_record():
+    active, suppressed = run_fixture("suppressed_ok.py")
+    assert active == []
+    assert {f.rule for f in suppressed} == {"CKPT201", "CKPT301"}
+    assert all(f.suppressed for f in suppressed)
+
+
+def test_clean_tree_merge_gate():
+    """The repo's own src/ must lint clean — new violations fail tier-1,
+    and every silenced finding is an explicit, justified suppression."""
+    active, suppressed = linter.run([os.path.join(REPO, "src")], root=REPO)
+    assert active == [], "\n".join(f.format() for f in active)
+    # the known justified suppressions; growing this list is a review event
+    assert {(f.path, f.rule) for f in suppressed} == {
+        ("src/repro/core/baselines.py", "CKPT301"),
+        ("src/repro/core/reduction.py", "CKPT301"),
+        ("src/repro/storage/repository.py", "CKPT302"),
+    }
+
+
+def test_finding_format_is_file_line_col():
+    active, _ = run_fixture("commit_violation.py")
+    line = active[0].format()
+    assert re.match(r"^tests/fixtures/ckptlint/commit_violation\.py:"
+                    r"\d+:\d+: CKPT\d+ ", line)
+
+
+def test_syntax_error_is_a_finding(tmp_path):
+    bad = tmp_path / "broken.py"
+    bad.write_text("def oops(:\n")
+    active, _ = linter.run([str(bad)], root=str(tmp_path))
+    assert len(active) == 1 and active[0].rule == "CKPT000"
+
+
+# ----------------------------------------------------------------------- CLI
+def test_cli_exit_codes(capsys):
+    assert cli.main([FIXTURES]) == 1
+    assert cli.main([os.path.join(FIXTURES, "clean_ok.py")]) == 0
+    assert cli.main(["--list-rules"]) == 0
+    out = capsys.readouterr().out
+    assert "CKPT101" in out and "CKPT501" in out
+
+
+def test_cli_select_restricts_rules(capsys):
+    rc = cli.main(["--select", "CKPT4",
+                   os.path.join(FIXTURES, "lockorder_violation.py")])
+    assert rc == 0  # no snapshot findings in the lock-order fixture
+    rc = cli.main(["--select", "CKPT1",
+                   os.path.join(FIXTURES, "lockorder_violation.py")])
+    assert rc == 1
+
+
+def test_cli_json_output(capsys):
+    import json
+    rc = cli.main(["--format", "json",
+                   os.path.join(FIXTURES, "snapshot_violation.py")])
+    assert rc == 1
+    payload = json.loads(capsys.readouterr().out)
+    assert {f["rule"] for f in payload["findings"]} == {"CKPT401"}
+
+
+# ------------------------------------------------------------ runtime witness
+def test_witness_records_out_of_order_acquisition():
+    with witness.recording() as w:
+        outer = named_lock("tw.order.outer", rank=10)
+        inner = named_lock("tw.order.inner", rank=20)
+        with inner:
+            with outer:  # rank 10 under rank 20: violation
+                pass
+    assert len(w.violations) == 1
+    v = w.violations[0]
+    assert v.name == "tw.order.outer" and v.held[-1][0] == "tw.order.inner"
+    with pytest.raises(AssertionError):
+        w.assert_clean()
+
+
+def test_witness_clean_on_correct_order():
+    with witness.recording() as w:
+        outer = named_lock("tw.clean.outer", rank=10)
+        inner = named_lock("tw.clean.inner", rank=20)
+        with outer:
+            with inner:
+                pass
+        with inner:  # non-nested reacquisition is always fine
+            pass
+    assert w.violations == []
+    assert ("tw.clean.outer", "tw.clean.inner") in w.edges
+    w.assert_clean()
+
+
+def test_witness_ignores_reentrant_alias():
+    # exercised at the witness API level: a real threading.Lock would
+    # self-deadlock on nested acquisition, which is exactly why the alias
+    # case (Condition over the same lock, RLock reentry) must not be
+    # counted as a hierarchy violation
+    w = witness.LockWitness()
+    w.note_acquire("tw.alias.cond", 30)
+    w.note_acquire("tw.alias.cond", 30)
+    assert w.violations == []
+    w.note_release("tw.alias.cond")
+    w.note_release("tw.alias.cond")
+
+
+def test_declares_lock_wraps_only_while_recording():
+    @declares_lock("tw.box", rank=5, attrs=("_lock",))
+    class Box:
+        def __init__(self):
+            self._lock = threading.Lock()
+
+        def poke(self):
+            with self._lock:
+                return 1
+
+    plain = Box()
+    assert isinstance(plain._lock, type(threading.Lock()))
+    with witness.recording() as w:
+        box = Box()
+        assert isinstance(box._lock, witness.WitnessLock)
+        assert box.poke() == 1
+    assert w.acquisitions == 1 and w.violations == []
+    # recording over: new instances get plain locks again
+    assert isinstance(Box()._lock, type(threading.Lock()))
+
+
+def test_witness_on_real_host_cache():
+    from repro.core.host_cache import HostCache
+
+    with witness.recording() as w:
+        hc = HostCache(1 << 16)
+        res = hc.reserve(1 << 10)
+        res.release()
+    assert w.acquisitions >= 2
+    w.assert_clean()
+
+
+def test_hierarchy_is_consistent_at_runtime():
+    from repro.analysis.locks import declared_hierarchy
+    # importing the runtime modules registers every declaration; ranks in
+    # the table must be conflict-free (declared_hierarchy raises otherwise)
+    import repro.core.checkpoint  # noqa: F401
+    import repro.dist.coordinator  # noqa: F401
+    ranks = declared_hierarchy()
+    for name in ("coordinator.job", "barrier.cond", "repository.state",
+                 "engine.file_state", "writer.append", "host_cache.alloc"):
+        assert name in ranks
+    assert ranks["coordinator.job"] < ranks["repository.state"] \
+        < ranks["host_cache.alloc"]

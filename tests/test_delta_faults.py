@@ -18,6 +18,7 @@ import pytest
 
 from faults import FaultInjector, InjectedFault, tamper_file
 
+from repro.analysis import witness as lock_witness
 from repro.core import (CheckpointError, CheckpointManager, DeltaPolicy,
                         RestoreError, latest_step, step_dir)
 from repro.dist import BarrierBroken, Coordinator
@@ -25,6 +26,16 @@ from repro.storage import cli as storage_cli
 
 WORLD = 2
 KEYFRAME_EVERY = 4
+
+
+@pytest.fixture(autouse=True)
+def _lock_order_witness():
+    """Delta-chain fault scenarios also validate the declared lock
+    hierarchy at runtime (zero recorded violations is an acceptance
+    criterion, same as test_fault_injection)."""
+    with lock_witness.recording() as w:
+        yield w
+    w.assert_clean()
 
 
 def tiny_state(tag: float = 0.0):

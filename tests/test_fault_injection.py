@@ -16,6 +16,7 @@ import pytest
 
 from faults import FaultInjector, InjectedFault
 
+from repro.analysis import witness as lock_witness
 from repro.core import CheckpointError, CheckpointManager, latest_step, \
     step_dir
 from repro.dist import BarrierBroken, CollectiveBarrier, Coordinator
@@ -23,6 +24,16 @@ from repro.storage import cli as storage_cli
 from repro.storage.manifest import read_rank_manifests
 
 WORLD = 3
+
+
+@pytest.fixture(autouse=True)
+def _lock_order_witness():
+    """Every fault scenario runs under the runtime lock-order witness: the
+    hierarchy declared in repro/analysis/locks.py must hold on the real
+    interleavings these tests drive, not just lexically (ckptlint)."""
+    with lock_witness.recording() as w:
+        yield w
+    w.assert_clean()
 
 
 def tiny_state(tag: float = 0.0):
