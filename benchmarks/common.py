@@ -17,6 +17,7 @@ import os as _os
 # be the binding constraint. (Production paths fsync normally.)
 _os.environ.setdefault("REPRO_NO_FSYNC", "1")
 
+import contextlib
 import dataclasses
 import json
 import os
@@ -75,6 +76,39 @@ def manager_for(mode: str, directory: str, *, cache_mb: int = 1536,
         directory, CheckpointPolicy(engine=EnginePolicy(
             mode=mode, host_cache_bytes=cache_mb << 20,
             flush_threads=flush_threads, throttle_mbps=throttle)))
+
+
+@contextlib.contextmanager
+def maybe_tracing(path: Optional[str]):
+    """``--trace out.json`` support for the benchmark harness.
+
+    ``path=None`` is a no-op (tracing stays off, so the <1%-when-disabled
+    guarantee holds for untraced runs). Otherwise the ckpttrace tracer is
+    enabled for the enclosed figure and a Perfetto-loadable Chrome trace
+    is exported to ``path`` on exit."""
+    if not path:
+        yield None
+        return
+    from repro.obs import tracing
+    with tracing(path) as t:
+        yield t
+
+
+@contextlib.contextmanager
+def active_tracer(export_path: Optional[str] = None):
+    """Yield a live tracer for figures whose *measurement* is trace spans.
+
+    When the harness already enabled tracing (``benchmarks.run --trace``)
+    that tracer is reused, so the figure's spans land in the harness
+    export; standalone runs get a local tracer for the duration, exported
+    to ``export_path`` if given."""
+    from repro.obs import trace as _trace
+    t = _trace.get_tracer()
+    if t is not None:
+        yield t
+        return
+    with _trace.tracing(export_path) as t:
+        yield t
 
 
 def save_results(name: str, rows: List[Dict[str, Any]],

@@ -1,17 +1,26 @@
 """Fig 15: per-tensor multi-tier overlap timeline (stage ∥ flush).
 
-Uses the engine's trace hooks to record (lane, tensor, t0, t1) events and
-verifies/visualizes that flushing of early tensors overlaps staging of later
-ones — the streamlined pipeline of §V-A4.
+Rebuilt on ckpttrace: the engine's D2H and flush lanes are recorded as
+real tracer spans (``d2h.stage`` / ``flush``), so the figure no longer
+needs the old hand-rolled ``engine.trace`` hook — it runs one save under
+the tracer, extracts those spans, and verifies that flushing of early
+tensors overlaps staging of later ones (the streamlined pipeline of
+§V-A4). Standalone runs also export the full Chrome trace next to the
+JSON results so the exact same save can be opened in Perfetto.
 """
 
 from __future__ import annotations
 
+import os
+import time
 from typing import List
 
 import jax.numpy as jnp
 
-from .common import TempDir, manager_for, save_results
+from .common import RESULTS_DIR, TempDir, active_tracer, manager_for, \
+    save_results
+
+LANE = {"d2h.stage": "stage", "flush": "flush"}
 
 
 def run(quick: bool = False) -> List[dict]:
@@ -21,22 +30,30 @@ def run(quick: bool = False) -> List[dict]:
                                          jnp.float32)
                        for i in range(n_tensors)},
              "meta": {"step": 0}}
-    with TempDir() as d:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    trace_path = os.path.join(RESULTS_DIR, "fig15_timeline.trace.json")
+    t_win = time.perf_counter()   # tracer may be shared: window our spans
+    with TempDir() as d, active_tracer(trace_path) as t:
         mgr = manager_for("datastates", d, cache_mb=2 * mb * n_tensors)
-        trace: list = []
-        mgr.engine._engine.trace = trace
         fut = mgr.save(0, state)
         fut.wait_persisted()
         mgr.close()
-    t_base = min(t0 for _l, _n, t0, _t1 in trace)
-    rows = [{"lane": lane, "tensor": name.split("/")[-1].split("@")[0],
-             "t0_ms": (t0 - t_base) * 1e3, "t1_ms": (t1 - t_base) * 1e3}
-            for lane, name, t0, t1 in sorted(trace, key=lambda e: e[2])]
+        spans = [e for e in t.spans()
+                 if e["name"] in LANE and e["t0"] >= t_win]
+    t_base = min(e["t0"] for e in spans)
+    rows = []
+    for e in sorted(spans, key=lambda e: e["t0"]):
+        name = e["args"].get("tensor") or e["args"].get("chunk") or "?"
+        rows.append({"lane": LANE[e["name"]],
+                     "tensor": name.split("/")[-1].split("@")[0],
+                     "t0_ms": (e["t0"] - t_base) * 1e3,
+                     "t1_ms": (e["t1"] - t_base) * 1e3})
     # overlap check: any flush starts before the last stage ends?
-    last_stage_end = max(t1 for l, _n, _t0, t1 in trace if l == "stage")
-    first_flush = min(t0 for l, _n, t0, _t1 in trace if l == "flush")
+    last_stage_end = max(e["t1"] for e in spans if e["name"] == "d2h.stage")
+    first_flush = min(e["t0"] for e in spans if e["name"] == "flush")
     overlap = first_flush < last_stage_end
-    save_results("fig15_timeline", rows, meta={"stage_flush_overlap": overlap})
+    save_results("fig15_timeline", rows, meta={"stage_flush_overlap": overlap,
+                                               "trace": trace_path})
     return [{"overlap": overlap, "events": len(rows)}]
 
 

@@ -1,0 +1,261 @@
+"""Per-stage save breakdown (capture / D2H / encode / flush / commit).
+
+A world=4 coordinated differential save sequence is recorded with
+ckpttrace; the figure reduces the span timeline to the artifact CI
+actually gates on:
+
+* per-step busy seconds for each pipeline stage — ``d2h`` (device→host
+  staging), ``encode`` (delta XOR + zstd + int8), ``flush`` (file I/O),
+  ``commit`` (catalog publish) — computed as merged-interval unions, so
+  four ranks flushing concurrently count wall seconds, not lane-seconds;
+* the *overlap fraction*: seconds the flush lanes were writing while
+  staging or encode was simultaneously running, over total flush busy
+  time. This is the paper's pipelining claim in one number — 0 means a
+  serial stage→write pipeline, anything material means the lanes overlap.
+
+Regression gating compares **shapes, not speeds**: stage shares and
+overlap fractions are stable across machines, absolute times are not.
+``--check`` re-runs the quick breakdown and exits non-zero if the
+committed bounds in ``benchmarks/baselines/fig_breakdown_baseline.json``
+are violated.
+
+    PYTHONPATH=src python -m benchmarks.run --quick --only fig_breakdown
+    PYTHONPATH=src python -m benchmarks.fig_breakdown --quick --check
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from typing import Dict, List, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (CheckpointManager, CheckpointPolicy, DeltaPolicy,
+                        DistPolicy, EnginePolicy, StoragePolicy)
+
+from .common import RESULTS_DIR, TempDir, active_tracer, save_results
+
+WORLD = 4
+LANE_MBPS = 300.0             # emulated per-writer-lane bandwidth
+KEYFRAME_EVERY = 2            # save 1 = keyframe, save 2 = delta
+N_TENSORS = 12
+SHAPE = (1024, 4096)          # 12 × 16 MiB fp32 = 192 MiB
+SHAPE_QUICK = (512, 2048)     # 12 × 4 MiB = 48 MiB
+BASELINE = os.path.join(os.path.dirname(__file__), "baselines",
+                        "fig_breakdown_baseline.json")
+
+STAGE_SPANS = {
+    "d2h": lambda n: n == "d2h.stage",
+    "encode": lambda n: n.startswith("encode."),
+    "flush": lambda n: n == "flush",
+    "commit": lambda n: n == "commit",
+}
+
+
+def _initial_state(shape) -> Dict:
+    rng = np.random.default_rng(7)
+    model = {f"w{i:02d}": jnp.asarray(
+        rng.standard_normal(shape).astype(np.float32))
+        for i in range(N_TENSORS)}
+    return {"model": model, "meta": {"step": 0, "note": "fig_breakdown"}}
+
+
+def _mutate(state, step: int) -> Dict:
+    model = {k: v.at[::97].add(np.float32(1e-3))
+             for k, v in state["model"].items()}
+    return {"model": model, "meta": {"step": step, "note": "fig_breakdown"}}
+
+
+def _merge(ivals: List[Tuple[float, float]]) -> List[Tuple[float, float]]:
+    out: List[Tuple[float, float]] = []
+    for a, b in sorted(ivals):
+        if out and a <= out[-1][1]:
+            out[-1] = (out[-1][0], max(out[-1][1], b))
+        else:
+            out.append((a, b))
+    return out
+
+
+def _busy(ivals) -> float:
+    return sum(b - a for a, b in _merge(ivals))
+
+
+def _intersect_s(xs, ys) -> float:
+    """Total seconds the merged unions of two interval sets coincide."""
+    xs, ys = _merge(xs), _merge(ys)
+    i = j = 0
+    total = 0.0
+    while i < len(xs) and j < len(ys):
+        a = max(xs[i][0], ys[j][0])
+        b = min(xs[i][1], ys[j][1])
+        if b > a:
+            total += b - a
+        if xs[i][1] < ys[j][1]:
+            i += 1
+        else:
+            j += 1
+    return total
+
+
+def _breakdown(spans: List[dict], window: Tuple[float, float]) -> dict:
+    """Reduce the spans inside one save's [request, committed] window to
+    per-stage busy seconds plus the overlap fraction."""
+    a, b = window
+    ivals: Dict[str, List[Tuple[float, float]]] = \
+        {k: [] for k in STAGE_SPANS}
+    for e in spans:
+        if e["t0"] < a or e["t0"] > b:
+            continue
+        for stage, match in STAGE_SPANS.items():
+            if match(e["name"]):
+                ivals[stage].append((e["t0"], e["t1"]))
+    busy = {k: _busy(v) for k, v in ivals.items()}
+    produce = ivals["d2h"] + ivals["encode"]
+    overlap_s = _intersect_s(produce, ivals["flush"])
+    return {
+        **{f"{k}_s": v for k, v in busy.items()},
+        "overlap_s": overlap_s,
+        "overlap_fraction": overlap_s / busy["flush"]
+        if busy["flush"] > 0 else 0.0,
+    }
+
+
+def run(quick: bool = False) -> List[dict]:
+    shape = SHAPE_QUICK if quick else SHAPE
+    state = _initial_state(shape)
+    payload = sum(v.nbytes for v in state["model"].values())
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    trace_path = os.path.join(RESULTS_DIR, "fig_breakdown.trace.json")
+    rows: List[dict] = []
+    with TempDir() as d, active_tracer(trace_path) as t:
+        mgr = CheckpointManager.from_policy(
+            d, CheckpointPolicy(
+                engine=EnginePolicy(
+                    host_cache_bytes=int(payload * 2.5) + (64 << 20),
+                    flush_threads=1, throttle_mbps=LANE_MBPS),
+                storage=StoragePolicy(manifest_checksums=False),
+                dist=DistPolicy(world=WORLD),
+                delta=DeltaPolicy(keyframe_every=KEYFRAME_EVERY)))
+        windows: List[Tuple[int, float, float]] = []
+        for s in (1, 2):
+            state = _mutate(state, s)
+            t0 = time.perf_counter()
+            fut = mgr.save(s, state)
+            fut.wait_persisted()
+            mgr.wait_for_commit(s)
+            windows.append((s, t0, time.perf_counter()))
+            kind = (mgr.repository.manifest(s).meta.get("delta")
+                    or {})
+            rows.append({
+                "step": s,
+                "kind": "keyframe" if kind.get("keyframe", True)
+                else "delta",
+                "payload_bytes": payload,
+                "manifest_bytes":
+                    mgr.repository.manifest(s).total_bytes,
+                "capture_s": fut.stats.capture_latency_s,
+                "persist_s": fut.stats.persist_latency_s,
+            })
+        mgr.close()
+        spans = t.spans()
+        lanes = {e["lane"] for e in spans}
+    rank_lanes = sorted({ln.split("-")[0] for ln in lanes
+                         if ln.startswith("rank")})
+    for row, (s, a, b) in zip(rows, windows):
+        row.update(_breakdown(spans, (a, b)))
+    # the pipelining claim across the whole sequence (keyframe overlaps
+    # d2h∥flush, delta overlaps encode∥flush)
+    all_ivals = [(w[1], w[2]) for w in windows]
+    overall = _breakdown(spans, (min(a for a, _ in all_ivals),
+                                 max(b for _, b in all_ivals)))
+    meta = {
+        "world": WORLD, "lane_mbps": LANE_MBPS,
+        "keyframe_every": KEYFRAME_EVERY,
+        "rank_lanes": rank_lanes,
+        "overall_overlap_fraction": overall["overlap_fraction"],
+        "trace": trace_path,
+    }
+    save_results("fig_breakdown", rows, meta=meta)
+    return rows
+
+
+def check(quick: bool = True) -> int:
+    """Re-run the quick breakdown and gate it against the committed
+    baseline bounds. Returns a process exit status (0 = pass)."""
+    with open(BASELINE) as f:
+        bounds = json.load(f)
+    rows = run(quick=quick)
+    with open(os.path.join(RESULTS_DIR, "fig_breakdown.json")) as f:
+        meta = json.load(f)["meta"]
+    problems: List[str] = []
+    kinds = [r["kind"] for r in rows]
+    if kinds != ["keyframe", "delta"]:
+        problems.append(f"expected keyframe+delta sequence, got {kinds}")
+    if len(meta["rank_lanes"]) < bounds["min_rank_lanes"]:
+        problems.append(
+            f"only {len(meta['rank_lanes'])} rank lanes in trace "
+            f"(need >= {bounds['min_rank_lanes']}): {meta['rank_lanes']}")
+    if meta["overall_overlap_fraction"] < bounds["min_overlap_fraction"]:
+        problems.append(
+            f"overlap fraction {meta['overall_overlap_fraction']:.3f} "
+            f"< baseline floor {bounds['min_overlap_fraction']} — the "
+            f"stage/encode∥flush pipeline has collapsed to serial")
+    for r in rows:
+        rb = bounds["per_kind"][r["kind"]]
+        for stage, (lo, hi) in rb.get("stage_share_of_persist",
+                                      {}).items():
+            share = r[f"{stage}_s"] / max(r["persist_s"], 1e-9)
+            if not lo <= share <= hi:
+                problems.append(
+                    f"{r['kind']}: {stage} share {share:.3f} outside "
+                    f"baseline [{lo}, {hi}]")
+        for stage in rb.get("required_stages", []):
+            if r[f"{stage}_s"] <= 0:
+                problems.append(
+                    f"{r['kind']}: required stage {stage!r} recorded "
+                    f"no busy time — instrumentation regressed")
+    if problems:
+        print("fig_breakdown REGRESSION:", file=sys.stderr)
+        for p in problems:
+            print(f"  - {p}", file=sys.stderr)
+        return 1
+    print(f"fig_breakdown check OK: overlap="
+          f"{meta['overall_overlap_fraction']:.3f} "
+          f"lanes={meta['rank_lanes']}")
+    return 0
+
+
+def summarize(rows) -> List[str]:
+    lines = []
+    for r in rows:
+        lines.append(
+            f"fig_breakdown/{r['kind']},{r['persist_s'] * 1e6:.0f},"
+            f"d2h={r['d2h_s'] * 1e3:.0f}ms "
+            f"encode={r['encode_s'] * 1e3:.0f}ms "
+            f"flush={r['flush_s'] * 1e3:.0f}ms "
+            f"commit={r['commit_s'] * 1e3:.1f}ms "
+            f"overlap={r['overlap_fraction']:.2f}")
+    return lines
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--check", action="store_true",
+                    help="gate against the committed baseline bounds "
+                         "(exit 1 on regression)")
+    args = ap.parse_args(argv)
+    if args.check:
+        return check(quick=True)
+    for line in summarize(run(quick=args.quick)):
+        print(line)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,22 +1,27 @@
 """Benchmark harness — one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig07,...]
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig07,...] \\
+        [--trace out.json]
 
 Prints ``name,us_per_call,derived`` CSV per benchmark row and writes full
-JSON records to experiments/bench/.
+JSON records to experiments/bench/. ``--trace`` records every figure under
+the ckpttrace tracer and exports one Perfetto-loadable Chrome trace per
+figure (``out.fig07.json`` etc.; the bare path when one figure runs).
 """
 
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import time
 
 from . import (fig04_serialization, fig07_throughput, fig08_iteration,
                fig09_end_to_end, fig12_dp_scaling, fig13_frequency,
-               fig14_flush, fig15_timeline, fig_differential, fig_multirank,
-               fig_quantized, fig_restore, fig_tiered, table1_heterogeneity,
-               table3_breakdown)
+               fig14_flush, fig15_timeline, fig_breakdown, fig_differential,
+               fig_multirank, fig_quantized, fig_restore, fig_tiered,
+               table1_heterogeneity, table3_breakdown)
+from .common import maybe_tracing
 
 MODULES = {
     "fig04": fig04_serialization,
@@ -27,6 +32,7 @@ MODULES = {
     "fig13": fig13_frequency,
     "fig14": fig14_flush,
     "fig15": fig15_timeline,
+    "fig_breakdown": fig_breakdown,
     "fig_differential": fig_differential,
     "fig_multirank": fig_multirank,
     "fig_quantized": fig_quantized,
@@ -37,19 +43,31 @@ MODULES = {
 }
 
 
+def _trace_path(template: str, name: str, multi: bool) -> str:
+    if not multi:
+        return template
+    base, ext = os.path.splitext(template)
+    return f"{base}.{name}{ext or '.json'}"
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset, e.g. fig07,table3")
+    ap.add_argument("--trace", default=None, metavar="OUT_JSON",
+                    help="export a Chrome/Perfetto trace per figure")
     args = ap.parse_args(argv)
     names = (args.only.split(",") if args.only else list(MODULES))
     print("name,us_per_call,derived")
     for name in names:
         mod = MODULES[name]
+        trace_path = _trace_path(args.trace, name, len(names) > 1) \
+            if args.trace else None
         t0 = time.perf_counter()
         try:
-            rows = mod.run(quick=args.quick)
+            with maybe_tracing(trace_path):
+                rows = mod.run(quick=args.quick)
             for line in mod.summarize(rows):
                 print(line)
         except Exception as e:  # noqa: BLE001
@@ -57,6 +75,8 @@ def main(argv=None) -> None:
             raise
         finally:
             sys.stderr.write(f"[{name}: {time.perf_counter()-t0:.1f}s]\n")
+            if trace_path and os.path.exists(trace_path):
+                sys.stderr.write(f"[{name}: trace -> {trace_path}]\n")
 
 
 if __name__ == "__main__":

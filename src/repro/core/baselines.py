@@ -105,11 +105,14 @@ class BaseCheckpointEngine:
 
     def __init__(self, host_cache_bytes: int = 1 << 30,
                  flush_threads: int = 4, chunk_bytes: int = 4 << 20,
-                 throttle_mbps: Optional[float] = None):
+                 throttle_mbps: Optional[float] = None,
+                 label: str = "dsllm"):
         self.host_cache_bytes = host_cache_bytes
         self.flush_threads = flush_threads
         self.chunk_bytes = chunk_bytes
         self.throttle_mbps = throttle_mbps
+        # lane-name prefix for this engine's worker threads (trace tracks)
+        self.label = label
 
     def save(self, directory: str,
              by_rank: Dict[int, List[ShardRecord]],
@@ -147,7 +150,8 @@ class DataStatesEngine(BaseCheckpointEngine):
             host_cache_bytes=self.host_cache_bytes,
             flush_threads=self.flush_threads,
             chunk_bytes=self.chunk_bytes,
-            throttle_mbps=self.throttle_mbps)
+            throttle_mbps=self.throttle_mbps,
+            label=self.label)
         # Differential checkpointing: retained previous-snapshot copies,
         # held inside the same pinned host-cache budget as staging.
         self.snapshot_cache = SnapshotCache(self._engine.host_cache)

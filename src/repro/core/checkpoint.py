@@ -43,6 +43,8 @@ import warnings
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from repro.analysis.locks import declares_lock
+from repro.obs import trace as obs
+from repro.obs.metrics import metrics as obs_metrics
 from repro.storage.backend import BackendError
 from repro.storage.repository import (CheckpointRepository, RetentionPolicy,
                                       Tier, committed_steps)
@@ -405,6 +407,8 @@ class CheckpointManager:
         future = CheckpointFuture(step, step_dir(self.directory, step))
         t0 = time.perf_counter()
         future.stats.t_request = t0
+        obs.instant("save.request", step=step,
+                    flow=obs.flow_id("save", step), flow_phase="start")
         # A previous save of this very step still in flight would have its
         # directory rmtree'd under its flush threads by begin_step, and
         # its committer could then manifest our half-written files. Settle
@@ -445,6 +449,8 @@ class CheckpointManager:
                 self._delta_tracker.invalidate()
             raise
         future.stats.blocking_s = time.perf_counter() - t0
+        obs.add_span("save.prologue", t0, time.perf_counter(), step=step,
+                     flow=obs.flow_id("save", step))
         self._inflight.append(future)
         self._inflight = [f for f in self._inflight if not f.persisted] \
             + [f for f in self._inflight if f.persisted][-1:]
@@ -503,10 +509,23 @@ class CheckpointManager:
                     if self._delta_tracker is not None:
                         self._delta_tracker.invalidate()
                 else:
+                    tc0 = time.perf_counter()
                     meta = {"n_files": future.stats.n_files,
                             "n_tensors": future.stats.n_tensors,
                             "bytes_tensors": future.stats.bytes_tensors,
-                            "bytes_objects": future.stats.bytes_objects}
+                            "bytes_objects": future.stats.bytes_objects,
+                            # save-phase timings ride the manifest so
+                            # `storage.cli stats` works on any repository,
+                            # long after the in-process stats are gone
+                            "save": {
+                                "blocking_s": future.stats.blocking_s,
+                                "capture_s":
+                                    future.stats.capture_latency_s,
+                                "persist_s":
+                                    future.stats.persist_latency_s,
+                                "persist_to_commit_s":
+                                    tc0 - future.stats.t_persisted,
+                            }}
                     dmeta = future.stats.extra.get("delta")
                     if dmeta is not None:
                         # chain gate: a delta may only commit onto a
@@ -540,6 +559,13 @@ class CheckpointManager:
                         future.step, engine_mode=self.mode,
                         expect_ranks=future.stats.extra.get("world"),
                         meta=meta)
+                    tc1 = time.perf_counter()
+                    future.stats.commit_s = tc1 - tc0
+                    future.stats.t_committed = tc1
+                    obs_metrics.observe("commit.latency_s", tc1 - tc0)
+                    obs.add_span("commit", tc0, tc1, step=future.step,
+                                 flow=obs.flow_id("save", future.step),
+                                 flow_phase="end")
             except BaseException as exc:  # noqa: BLE001
                 self.commit_errors.append((future.step, repr(exc)))
                 # a failed commit leaves the step an orphan (marker still

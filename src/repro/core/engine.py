@@ -30,6 +30,8 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.analysis.locks import declares_lock, named_lock
+from repro.obs import trace as obs
+from repro.obs.metrics import metrics as obs_metrics
 
 from .host_cache import HostCache
 from .layout import FileWriter
@@ -56,6 +58,8 @@ class CheckpointStats:
         self.serialize_s: float = 0.0       # object serialization time
         self.stage_s: float = 0.0           # device->host staging time
         self.flush_s: float = 0.0           # cumulative pwrite time
+        self.t_committed: float = 0.0       # catalog manifest durable
+        self.commit_s: float = 0.0          # manifest build+write duration
         self.extra: Dict[str, Any] = {}
 
     @property
@@ -65,6 +69,10 @@ class CheckpointStats:
     @property
     def persist_latency_s(self) -> float:
         return self.t_persisted - self.t_request
+
+    @property
+    def commit_latency_s(self) -> float:
+        return self.t_committed - self.t_request
 
     @property
     def total_bytes(self) -> int:
@@ -188,24 +196,27 @@ class DataMovementEngine:
                  flush_threads: int = 4,
                  producer_threads: int = 2,
                  chunk_bytes: int = DEFAULT_CHUNK_BYTES,
-                 throttle_mbps: Optional[float] = None):
+                 throttle_mbps: Optional[float] = None,
+                 label: str = "dsllm"):
         self.host_cache = HostCache(host_cache_bytes)
         self.chunk_bytes = chunk_bytes
         self.throttle_mbps = throttle_mbps
-        self.trace: Optional[list] = None  # [(lane, name, t0, t1), ...]
+        # ``label`` prefixes the lane (thread) names — the coordinator gives
+        # each rank's engine a distinct prefix so traces get per-rank lanes.
+        self.label = label
         self._flush_q: "queue.Queue[Optional[_WriteOp]]" = queue.Queue()
         self._stage_q: "queue.Queue[Optional[Tuple]]" = queue.Queue()
         self._producer_q: "queue.Queue[Optional[Tuple]]" = queue.Queue()
         self._shutdown = False
         self._flush_threads = [
             threading.Thread(target=self._flush_worker, daemon=True,
-                             name=f"dsllm-flush-{i}")
+                             name=f"{label}-flush-{i}")
             for i in range(flush_threads)]
         self._stage_thread = threading.Thread(
-            target=self._stage_worker, daemon=True, name="dsllm-stage")
+            target=self._stage_worker, daemon=True, name=f"{label}-stage")
         self._producer_threads = [
             threading.Thread(target=self._producer_worker, daemon=True,
-                             name=f"dsllm-producer-{i}")
+                             name=f"{label}-producer-{i}")
             for i in range(producer_threads)]
         for t in (*self._flush_threads, self._stage_thread,
                   *self._producer_threads):
@@ -318,7 +329,6 @@ class DataMovementEngine:
             provider, arr, one_staged, future = item
             try:
                 t0 = time.perf_counter()
-                trace = self.trace
                 # np.asarray blocks until the async device->host copy of this
                 # shard has completed, then views/copies the host buffer.
                 src = np.asarray(arr).reshape(-1).view(np.uint8)
@@ -333,8 +343,10 @@ class DataMovementEngine:
                 provider.notify_staged(n)
                 t1 = time.perf_counter()
                 future.stats.stage_s += t1 - t0
-                if trace is not None:
-                    trace.append(("stage", provider.name, t0, t1))
+                obs_metrics.inc("engine.bytes_staged", n)
+                obs.add_span("d2h.stage", t0, t1, tensor=provider.name,
+                             bytes=n, step=future.step,
+                             flow=obs.flow_id("save", future.step))
                 one_staged()
             except BaseException as exc:  # noqa: BLE001
                 future._set_error(exc)
@@ -350,7 +362,10 @@ class DataMovementEngine:
                 return
             plan, file_done, future = item
             try:
-                self._produce_file(plan, file_done, future)
+                with obs.span("produce.file", step=future.step,
+                              file=os.path.basename(plan.path),
+                              flow=obs.flow_id("save", future.step)):
+                    self._produce_file(plan, file_done, future)
             except BaseException as exc:  # noqa: BLE001
                 future._set_error(exc)
             finally:
@@ -473,26 +488,35 @@ class DataMovementEngine:
                     # and producer paths — and log-append it.
                     from .reduction import _compress
                     payload = _compress(bytes(chunk.data))
+                    t_enc = time.perf_counter()
+                    obs.add_span("encode.compress", t0, t_enc,
+                                 tensor=chunk.name, codec=chunk.codec,
+                                 bytes_in=len(chunk.data),
+                                 bytes_out=len(payload))
                     op.writer.append_encoded_chunk(chunk.name, payload,
                                                    *chunk.raw_range)
                     nb_written = len(payload)
                 else:
                     op.writer.write_at(chunk.offset, chunk.data)
+                if nb_written is not None:
+                    nb = nb_written
+                elif isinstance(chunk.data, bytes):
+                    nb = len(chunk.data)
+                else:
+                    nb = chunk.data.nbytes
                 if op.throttle:
-                    if nb_written is not None:
-                        nb = nb_written
-                    elif isinstance(chunk.data, bytes):
-                        nb = len(chunk.data)
-                    else:
-                        nb = chunk.data.nbytes
                     target = nb / (op.throttle * 1e6)
                     elapsed = time.perf_counter() - t0
                     if target > elapsed:
                         time.sleep(target - elapsed)
                 t1 = time.perf_counter()
-                op.file_state.future.stats.flush_s += t1 - t0
-                if self.trace is not None:
-                    self.trace.append(("flush", op.chunk.name, t0, t1))
+                fut = op.file_state.future
+                fut.stats.flush_s += t1 - t0
+                obs_metrics.inc(
+                    "engine.bytes_written." + (chunk.codec or "raw"), nb)
+                obs.add_span("flush", t0, t1, chunk=chunk.name, bytes=nb,
+                             step=fut.step,
+                             flow=obs.flow_id("save", fut.step))
                 if op.on_written is not None:
                     op.on_written()
                 op.file_state.op_finished()

@@ -11,11 +11,14 @@ request waits for previous tensors to get evicted after they are flushed".
 from __future__ import annotations
 
 import threading
+import time
 from typing import List, Optional, Tuple
 
 import numpy as np
 
 from repro.analysis.locks import declares_lock
+from repro.obs import trace as obs
+from repro.obs.metrics import metrics as obs_metrics
 
 
 class CacheFullError(RuntimeError):
@@ -80,6 +83,10 @@ class HostCache:
         with self._lock:
             self._allocated.remove((res.start, res.start + res.nbytes))
             self._freed.notify_all()
+            used = sum(e - s for s, e in self._allocated)
+        obs_metrics.set_gauge("host_cache.used_bytes", used)
+        if obs.enabled():
+            obs.counter("host_cache.used_bytes", used)
 
     # -- public --------------------------------------------------------------
     def used_bytes(self) -> int:
@@ -93,6 +100,7 @@ class HostCache:
         if nbytes > self.capacity:
             raise CacheFullError(
                 f"request of {nbytes} B exceeds cache capacity {self.capacity} B")
+        t0 = time.perf_counter()
         with self._lock:
             while True:
                 start = self._find_gap(nbytes)
@@ -104,6 +112,15 @@ class HostCache:
             self._allocated.append((start, start + nbytes))
             self._allocated.sort()
             self.total_reserved += nbytes
-            self.peak_usage = max(self.peak_usage,
-                                  sum(e - s for s, e in self._allocated))
+            used = sum(e - s for s, e in self._allocated)
+            self.peak_usage = max(self.peak_usage, used)
+        # Observability happens after the allocator lock is released (the
+        # obs locks rank above host_cache.alloc, but no reason to hold it).
+        waited = time.perf_counter() - t0
+        obs_metrics.observe("host_cache.reserve_wait_s", waited)
+        obs_metrics.set_gauge("host_cache.used_bytes", used)
+        if obs.enabled():
+            obs.add_span("host_cache.reserve", t0, t0 + waited,
+                         bytes=nbytes)
+            obs.counter("host_cache.used_bytes", used)
         return Reservation(start, nbytes, self)

@@ -28,6 +28,8 @@ import msgpack
 import numpy as np
 
 from repro.analysis.locks import declares_lock
+from repro.obs import trace as obs
+from repro.obs.metrics import metrics as obs_metrics
 
 MAGIC = b"DSLLMCK1"
 ALIGN = 4096
@@ -144,6 +146,7 @@ class FileWriter:
             off = self._append_cursor
             self._append_cursor += len(payload)
         os.pwrite(self._fd, payload, off)
+        obs_metrics.inc("writer.append_bytes", len(payload))
         entry = ObjectEntry(name=name, offset=off, nbytes=len(payload),
                             codec=codec)
         with self._append_lock:
@@ -173,6 +176,7 @@ class FileWriter:
             off = self._append_cursor
             self._append_cursor += len(payload)
         os.pwrite(self._fd, payload, off)
+        obs_metrics.inc("writer.append_bytes", len(payload))
         with self._append_lock:
             self._enc_chunks.setdefault(name, []).append(
                 (off, len(payload), int(raw_lo), int(raw_hi)))
@@ -225,10 +229,13 @@ class FileWriter:
             self._fd = -1
             off = self._append_cursor
             self._append_cursor += len(payload) + _TRAILER.size
-        os.pwrite(fd, payload, off)
-        os.pwrite(fd, _TRAILER.pack(len(payload), MAGIC), off + len(payload))
-        maybe_fsync(fd)
-        os.close(fd)
+        with obs.span("file.finalize", file=os.path.basename(self.path),
+                      footer_bytes=len(payload)):
+            os.pwrite(fd, payload, off)
+            os.pwrite(fd, _TRAILER.pack(len(payload), MAGIC),
+                      off + len(payload))
+            maybe_fsync(fd)
+            os.close(fd)
 
     def abort(self) -> None:
         """Close the fd without writing a footer. Idempotent and safe to

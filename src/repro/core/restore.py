@@ -49,6 +49,8 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 import jax
 import numpy as np
 
+from repro.obs import trace as obs
+
 from .codecs import is_chained_codec
 from .distributed import normalize_index, _path_str
 from .layout import FileReader
@@ -309,12 +311,14 @@ class _Run:
     """Per-restore mutable state, so one engine instance (e.g. the manager's
     default) can serve concurrent restores without sharing fd caches."""
 
-    __slots__ = ("stats", "lock", "fds")
+    __slots__ = ("stats", "lock", "fds", "flow")
 
     def __init__(self, stats: RestoreStats):
         self.stats = stats
         self.lock = threading.Lock()
         self.fds = _FDCache()
+        # flow-link id tying this restore's index→plan→read→assemble spans
+        self.flow = obs.flow_id("restore", id(self) & 0xFFFFFF)
 
 
 class RestoreEngine:
@@ -606,7 +610,11 @@ class RestoreEngine:
                     for nb, nr in pool.map(lambda t: t(), tasks):
                         stats.bytes_read += nb
                         stats.n_ranges += nr
-        stats.read_s += time.perf_counter() - t0
+        t1 = time.perf_counter()
+        stats.read_s += t1 - t0
+        if tasks:
+            obs.add_span("restore.read", t0, t1, tasks=len(tasks),
+                         flow=run.flow)
 
     def _read_step(self, run: _Run, sdir: str, template: Any):
         """Index ``sdir``, plan per-leaf regions/buffers, execute the
@@ -615,7 +623,10 @@ class RestoreEngine:
         stats = run.stats
         t0 = time.perf_counter()
         idx = self.index(sdir, stats, run.lock)
-        stats.index_s += time.perf_counter() - t0
+        t1 = time.perf_counter()
+        stats.index_s += t1 - t0
+        obs.add_span("restore.index", t0, t1, dir=os.path.basename(sdir),
+                     flow=run.flow, flow_phase="start")
         stats.n_files += idx.n_files
 
         # ---- plan: regions, buffers, and the full read-task list
@@ -651,7 +662,10 @@ class RestoreEngine:
                 assembled.append((kind, leaf, buffers, pstr))
             else:
                 assembled.append(("object", leaf, None, pstr))
-        stats.plan_s += time.perf_counter() - t0
+        t1 = time.perf_counter()
+        stats.plan_s += t1 - t0
+        obs.add_span("restore.plan", t0, t1, leaves=len(assembled),
+                     tasks=len(tasks), flow=run.flow)
 
         self._run_tasks(run, tasks)
         return treedef, assembled, idx
@@ -680,7 +694,10 @@ class RestoreEngine:
                 out.append(jax.make_array_from_callback(
                     shape, leaf.sharding, cb))
         tree = jax.tree_util.tree_unflatten(treedef, out)
-        stats.assemble_s += time.perf_counter() - t0
+        t1 = time.perf_counter()
+        stats.assemble_s += t1 - t0
+        obs.add_span("restore.assemble", t0, t1, flow=run.flow,
+                     flow_phase="end")
         return tree
 
     def restore(self, sdir: str, template: Any
@@ -736,7 +753,10 @@ class RestoreEngine:
         stats = run.stats
         t0 = time.perf_counter()
         idx = self.index(sdir, stats, run.lock)
-        stats.index_s += time.perf_counter() - t0
+        t1 = time.perf_counter()
+        stats.index_s += t1 - t0
+        obs.add_span("restore.index", t0, t1, dir=os.path.basename(sdir),
+                     delta=True, flow=run.flow)
         stats.n_files += idx.n_files
         xor_tasks: List[Callable[[], Tuple[int, int]]] = []
         raw_tasks: List[Callable[[], Tuple[int, int]]] = []
@@ -764,7 +784,9 @@ class RestoreEngine:
                 for region, buf in aux.items():
                     self._plan_region(run, list(raw), region, buf,
                                       raw_tasks, pstr)
-        stats.plan_s += time.perf_counter() - t0
+        t1 = time.perf_counter()
+        stats.plan_s += t1 - t0
+        obs.add_span("restore.plan", t0, t1, delta=True, flow=run.flow)
         self._run_tasks(run, raw_tasks)
         self._run_tasks(run, xor_tasks)
         return idx

@@ -41,6 +41,7 @@ import msgpack
 import numpy as np
 
 from repro.analysis.locks import declares_lock
+from repro.obs import trace as obs
 
 from .codecs import (DELTA_CODEC, INT8_CODEC, INT8_ROW_BYTES,
                      encode_int8_block)
@@ -393,8 +394,10 @@ class DeltaStateProvider(TensorStateProvider):
                     if budget is not None:
                         budget.acquire(nb)
                         on_flushed = (lambda b=budget, nb=nb: b.release(nb))
-                    delta = xor_bytes(cur, prev[pos:end])
-                    prev[pos:end] = cur  # advance the chain base
+                    with obs.span("encode.delta", tensor=self.name,
+                                  bytes=nb):
+                        delta = xor_bytes(cur, prev[pos:end])
+                        prev[pos:end] = cur  # advance the chain base
                     yield Chunk(name=self.name, kind="tensor", data=delta,
                                 offset=None, codec=self.delta_codec,
                                 raw_range=(pos, end), last=end >= n,
@@ -463,7 +466,8 @@ class QuantizedStateProvider(TensorStateProvider):
                     while self._staged < end:
                         self._cond.wait()
             raw = np.frombuffer(view[pos:end], dtype=np.uint8)
-            payload = encode_int8_block(raw)
+            with obs.span("encode.int8", tensor=self.name, bytes=end - pos):
+                payload = encode_int8_block(raw)
             budget = self.encode_budget
             on_flushed = None
             if budget is not None:

@@ -44,9 +44,12 @@ from __future__ import annotations
 import os
 import queue
 import threading
+import time
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
 from repro.analysis.locks import declares_lock
+from repro.obs import trace as obs
+from repro.obs.metrics import metrics as obs_metrics
 from repro.core.baselines import (DataStatesEngine, DataStatesOldEngine,
                                   rank_file)
 from repro.core.distributed import ShardRecord
@@ -219,9 +222,13 @@ class RankRuntime:
         self.world = world
         self.checksum_files = checksum_files
         self.fault_hook = fault_hook
+        # distinct lane-name prefix per rank: traces get one set of engine
+        # tracks (stage/producer/flush) per rank lane
+        self.lane = f"rank{rank:05d}"
         self.engine = RANK_ENGINES[mode](
             host_cache_bytes=host_cache_bytes, flush_threads=flush_threads,
-            chunk_bytes=chunk_bytes, throttle_mbps=throttle_mbps)
+            chunk_bytes=chunk_bytes, throttle_mbps=throttle_mbps,
+            label=self.lane)
         self._q: "queue.Queue[Optional[tuple]]" = queue.Queue()
         self._thread = threading.Thread(
             target=self._worker, daemon=True, name=f"dsllm-rank-{rank}")
@@ -262,6 +269,7 @@ class RankRuntime:
                   delta: Optional[DeltaSaveSpec] = None) -> None:
         job.start_watchdog()  # first rank to dequeue arms the ack timeout
         fut = CheckpointFuture(job.step, job.directory)
+        flow = obs.flow_id("save", job.step, rank=self.rank)
         # phase 1a: drain this rank's shards through this rank's lane.
         # Differential saves keep *per-rank* delta bases: each rank's
         # engine retains the previous snapshot of exactly the shards it
@@ -269,19 +277,32 @@ class RankRuntime:
         # set, and any reshard forces a keyframe upstream).
         self.engine.save(job.directory, {self.rank: records}, objects, fut,
                         delta=delta)
-        fut.wait_captured()
+        with obs.span("rank.capture_wait", lane=self.lane, step=job.step,
+                      rank=self.rank, flow=flow, flow_phase="start"):
+            fut.wait_captured()
         job.rank_captured(self.rank, fut)
-        fut.wait_persisted()
+        with obs.span("rank.persist_wait", lane=self.lane, step=job.step,
+                      rank=self.rank, flow=flow):
+            fut.wait_persisted()
         files = [os.path.basename(rank_file(job.directory, self.rank))]
         self._fault("mid_file", job, files)
         self._fault("after_upload", job, files)
         # phase 1b: the vote — sizes + checksums hashed on this lane
-        vote = RankManifest.build(
-            job.directory, rank=self.rank, world=job.world, step=job.step,
-            filenames=files, checksum=self.checksum_files)
-        vote.write(job.directory)
+        with obs.span("vote", lane=self.lane, step=job.step,
+                      rank=self.rank, flow=flow):
+            vote = RankManifest.build(
+                job.directory, rank=self.rank, world=job.world,
+                step=job.step, filenames=files,
+                checksum=self.checksum_files)
+            vote.write(job.directory)
         self._fault("before_ack", job, files)
+        t_ack = time.perf_counter()
         job.rank_acked(self.rank, fut)
+        t_done = time.perf_counter()
+        obs_metrics.observe("barrier.wait_s", t_done - t_ack)
+        obs.add_span("ack.barrier", t_ack, t_done, lane=self.lane,
+                     step=job.step, rank=self.rank, flow=flow,
+                     flow_phase="end")
 
     def drain(self) -> None:
         self._q.join()

@@ -1,0 +1,27 @@
+"""ckpttrace: zero-dependency tracing + metrics for the checkpoint lifecycle.
+
+Two halves, both stdlib-only:
+
+* :mod:`repro.obs.trace` — thread-aware spans recorded into per-thread ring
+  buffers, exportable as Chrome trace-event JSON (loadable in Perfetto /
+  ``chrome://tracing``). Off by default; ``span(...)`` is a near-free no-op
+  when disabled.
+* :mod:`repro.obs.metrics` — a process-wide registry of counters / gauges /
+  histograms plus :class:`~repro.obs.metrics.SaveReport` /
+  :class:`~repro.obs.metrics.RestoreReport`, the unified per-operation
+  report schema over the engine's divergent stats objects.
+
+Both modules pass the full ckptlint rule set (their internal locks are
+declared at ranks 80/82 — *above* every runtime lock, so recording from any
+instrumented seam is rank-legal — and no I/O happens under them).
+"""
+
+from .trace import (Tracer, add_span, counter, disable, enable, enabled,
+                    flow_id, get_tracer, instant, span, tracing)
+from .metrics import (MetricsRegistry, RestoreReport, SaveReport, metrics)
+
+__all__ = [
+    "Tracer", "add_span", "counter", "disable", "enable", "enabled",
+    "flow_id", "get_tracer", "instant", "span", "tracing",
+    "MetricsRegistry", "RestoreReport", "SaveReport", "metrics",
+]

@@ -2,6 +2,7 @@
 
     python -m repro.storage.cli --root CKPT_DIR ls
     python -m repro.storage.cli --root CKPT_DIR verify [--step N] [--fast]
+    python -m repro.storage.cli --root CKPT_DIR stats [--step N]
     python -m repro.storage.cli --root CKPT_DIR pin 1200
     python -m repro.storage.cli --root CKPT_DIR unpin 1200
     python -m repro.storage.cli --root CKPT_DIR gc --keep-last 3 \\
@@ -132,6 +133,60 @@ def cmd_verify(args) -> int:
     return 1 if bad or orphans else 0
 
 
+def cmd_stats(args) -> int:
+    """Per-step save/commit timings, bytes by codec and domain, and delta
+    chain depth — read back from ``StepManifest`` metadata only, so it
+    works on any existing repository with no training process around."""
+    repo = _repo(args)
+    steps = repo.steps()
+    if args.step is not None:
+        if args.step not in steps:
+            print(f"step {args.step}: NOT FOUND — no such committed step")
+            return 1
+        steps = [args.step]
+    if not steps:
+        print(f"(no committed steps in {args.root})")
+        return 0
+    for step in steps:
+        if not repo.has_manifest(step):
+            print(f"step {step:>10}  legacy directory (no manifest — "
+                  f"no recorded stats)")
+            continue
+        m = repo.manifest(step)
+        meta = m.meta or {}
+        save = meta.get("save") or {}
+        commit = meta.get("commit") or {}
+        delta = meta.get("delta") or {}
+
+        def _ms(key, src):
+            v = src.get(key)
+            return f"{v * 1e3:.1f}ms" if v is not None else "-"
+
+        by_codec: dict = {}
+        by_domain: dict = {}
+        for fe in m.files:
+            codec = fe.codec or "raw"
+            by_codec[codec] = by_codec.get(codec, 0) + fe.nbytes
+            doms = sorted(fe.domains) if fe.domains else []
+            dkey = "+".join(doms) if doms else "-"
+            by_domain[dkey] = by_domain.get(dkey, 0) + fe.nbytes
+        chain = delta.get("chain_depth", 0) if delta else 0
+        kind = "keyframe" if delta.get("keyframe", True) else \
+            f"delta(base={delta.get('base_step')})"
+        print(f"step {step:>10}  "
+              f"persist={_ms('persist_s', save)}  "
+              f"commit={_ms('persist_to_commit_s', save)}"
+              f"+{_ms('build_s', commit)}  "
+              f"blocking={_ms('blocking_s', save)}  "
+              f"chain_depth={chain}"
+              f"{'' if not delta else '  [' + kind + ']'}")
+        for codec in sorted(by_codec):
+            print(f"    codec  {codec:<12} {_fmt_bytes(by_codec[codec]):>10}")
+        for dkey in sorted(by_domain):
+            print(f"    domain {dkey:<12} {_fmt_bytes(by_domain[dkey]):>10}")
+    return 0
+
+
 def cmd_pin(args) -> int:
     _repo(args).pin(args.step)
     print(f"pinned step {args.step}")
@@ -179,6 +234,10 @@ def main(argv: Optional[List[str]] = None) -> int:
                         "than this (monitoring a live job: its in-flight "
                         "save looks like an orphan from outside; "
                         "default: 0 = strict, for post-crash audits)")
+    p = sub.add_parser("stats",
+                       help="per-step commit latency, bytes by codec/"
+                            "domain, chain depth (from manifest metadata)")
+    p.add_argument("--step", type=int, default=None)
     p = sub.add_parser("pin", help="protect a step from GC")
     p.add_argument("step", type=int)
     p = sub.add_parser("unpin", help="remove a GC pin")
@@ -196,8 +255,8 @@ def main(argv: Optional[List[str]] = None) -> int:
                         "(default: 900)")
     p.add_argument("--dry-run", action="store_true")
     args = ap.parse_args(argv)
-    return {"ls": cmd_ls, "verify": cmd_verify, "pin": cmd_pin,
-            "unpin": cmd_unpin, "gc": cmd_gc}[args.cmd](args)
+    return {"ls": cmd_ls, "verify": cmd_verify, "stats": cmd_stats,
+            "pin": cmd_pin, "unpin": cmd_unpin, "gc": cmd_gc}[args.cmd](args)
 
 
 if __name__ == "__main__":

@@ -35,6 +35,9 @@ import re
 import shutil
 import threading
 import time
+
+from repro.obs import trace as obs
+from repro.obs.metrics import metrics as obs_metrics
 import uuid
 from typing import Any, Dict, Iterable, List, Optional, Sequence, Set, Tuple
 
@@ -372,13 +375,19 @@ class CheckpointRepository:
         :meth:`StepManifest.build`) and raises instead of committing a
         partially-written step."""
         sdir = self.step_dir(step)
+        tb0 = time.perf_counter()
         manifest = StepManifest.build(sdir, step, engine_mode=engine_mode,
                                       checksum=self.checksum, meta=meta,
                                       expect_ranks=expect_ranks)
         if not manifest.files:
             raise BackendError(
                 f"refusing to commit empty step directory {sdir!r}")
-        self._local.put(catalog_key(step), manifest.to_json_bytes())
+        # record the manifest build (vote validation + checksum hashing)
+        # duration in the manifest itself: `storage.cli stats` reads it
+        # back from any repository, no in-process stats needed
+        manifest.meta["commit"] = {"build_s": time.perf_counter() - tb0}
+        with obs.span("manifest.write", step=step):
+            self._local.put(catalog_key(step), manifest.to_json_bytes())
         try:
             os.unlink(self._marker_path(step))
         except FileNotFoundError:
@@ -642,10 +651,14 @@ class CheckpointRepository:
                 except BaseException:  # noqa: BLE001
                     pass
             raise
+        t1 = time.perf_counter()
         with self._lock:
             self.cascade_log.append(CascadeEvent(
                 step=step, tier=tier.name, nbytes=nbytes,
-                t_start=t0, t_end=time.perf_counter()))
+                t_start=t0, t_end=t1))
+        obs_metrics.inc("repo.cascade_bytes", nbytes)
+        obs.add_span("cascade.upload", t0, t1, step=step, tier=tier.name,
+                     bytes=nbytes, flow=obs.flow_id("save", step))
 
     def _cascade_worker(self) -> None:
         q = self._cascade_q
@@ -835,10 +848,14 @@ class CheckpointRepository:
             if not dry_run:
                 for s in doomed:
                     self._delete_tier_step(tier, s)
-        report.seconds = time.perf_counter() - t0
+        t1 = time.perf_counter()
+        report.seconds = t1 - t0
         if not dry_run:
             with self._lock:
                 self.gc_log.append(report)
+            obs_metrics.inc("repo.gc_bytes_freed", report.bytes_freed)
+            obs.add_span("gc", t0, t1, bytes_freed=report.bytes_freed,
+                         steps=len(report.deleted_steps))
         return report
 
     def _delete_local_step(self, step: int) -> None:

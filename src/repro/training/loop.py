@@ -21,6 +21,7 @@ import numpy as np
 
 from repro.core import CheckpointManager
 from repro.data.pipeline import SyntheticTokenPipeline
+from repro.obs import trace as obs
 from repro.models import model as M
 from repro.optim.adamw import AdamWConfig, apply_updates, init_opt_state
 
@@ -79,6 +80,7 @@ class Trainer:
         self.step = 0
         self.records: List[IterationRecord] = []
         self.last_resume_stats = None  # RestoreStats from the last resume()
+        self.exit_drain_s = 0.0        # end-of-run persist/commit wait
 
     # -- checkpoint state composition (the paper's heterogeneous pytree) ----
     def state(self) -> Dict[str, Any]:
@@ -154,7 +156,10 @@ class Trainer:
             # --- capture barrier before the donating update ---------------
             stall = 0.0
             if ckpt_pending:
+                t_b = time.perf_counter()
                 stall = self.manager.wait_for_capture()
+                obs.add_span("ckpt.capture_barrier", t_b, t_b + stall,
+                             step=self.step)
                 ckpt_pending = False
             self.params, self.opt_state = self.update_step(
                 self.params, self.opt_state, grads)
@@ -169,10 +174,26 @@ class Trainer:
                 ckpt_pending = True
                 requested = True
             loss_val = float(loss)
+            t1 = time.perf_counter()
             self.records.append(IterationRecord(
-                step=self.step, loss=loss_val,
-                iter_s=time.perf_counter() - t0,
+                step=self.step, loss=loss_val, iter_s=t1 - t0,
                 ckpt_stall_s=stall, ckpt_requested=requested))
+            obs.add_span("train.iteration", t0, t1, step=self.step,
+                         stall_s=stall)
+        self.exit_drain_s = 0.0
         if self.manager is not None:
+            # End-of-run drain is blocking time too: without folding it
+            # into the stall metric, a save requested on the last
+            # iterations looks free (the old accounting stopped at the
+            # save prologue, hiding the persist+commit wait here).
+            t_d = time.perf_counter()
             self.manager.wait_for_persist()
+            self.manager.wait_for_commit()
+            self.exit_drain_s = time.perf_counter() - t_d
+            obs.add_span("ckpt.exit_drain", t_d, t_d + self.exit_drain_s)
+            if self.records and self.exit_drain_s > 0:
+                last = self.records[-1]
+                self.records[-1] = dataclasses.replace(
+                    last, ckpt_stall_s=last.ckpt_stall_s
+                    + self.exit_drain_s)
         return self.records

@@ -8,6 +8,7 @@ naming the state path), and a custom provider that raises mid-``chunks()``
 
 import glob
 import os
+import time
 
 import jax.numpy as jnp
 import numpy as np
@@ -212,7 +213,14 @@ def test_custom_provider_raising_mid_chunks_aborts_and_unlinks(tmp_path):
         # never committed, and the partial rank file is gone
         assert mgr.latest_step() is None
         assert mgr.repository.steps() == []
-        assert glob.glob(str(tmp_path / "global_step1" / "*.dsllm")) == []
+        # the abort's unlink runs on the flush lanes — wait_persisted
+        # raises as soon as the save *fails*, which can be a beat before
+        # the lane finishes cleaning up its partial file
+        pattern = str(tmp_path / "global_step1" / "*.dsllm")
+        deadline = time.monotonic() + 5.0
+        while glob.glob(pattern) and time.monotonic() < deadline:
+            time.sleep(0.01)
+        assert glob.glob(pattern) == []
         # engine lanes healthy: a clean registry save goes through
         clean = (StateProviderRegistry().add_rule(provider="auto"))
         mgr.registry = clean
