@@ -14,6 +14,9 @@ The declared hierarchy, outermost (lowest rank) to innermost:
 rank    lock                   owner
 ======  =====================  ==========================================
 10      coordinator.job        ``dist.coordinator._SaveJob.lock``
+12      coordinator.dead       ``dist.coordinator.Coordinator._dead_lock``
+15      coordinator.node       ``dist.coordinator._NodeCommit.lock``
+16      ipc.proc               ``dist.process_runtime.ProcessRankRuntime._lock``
 20      barrier.cond           ``dist.barrier.CollectiveBarrier._cond``
 30      manager.delta_tracker  ``core.checkpoint._DeltaChainTracker._lock``
 40      repository.state       ``storage.repository.CheckpointRepository._lock``

@@ -337,6 +337,10 @@ class CheckpointManager:
         self.delta_policy = delta
         self._delta_tracker = _DeltaChainTracker(delta) \
             if delta is not None else None
+        # last save's surviving writer set (multi-rank): a change means
+        # shard slices moved between rank engines, so every per-rank
+        # delta base is stale and the next save must keyframe
+        self._last_writers: Optional[tuple] = None
         self.directory = directory
         self.mode = ep.mode
         os.makedirs(directory, exist_ok=True)
@@ -361,6 +365,7 @@ class CheckpointManager:
             # N-rank save restores onto any mesh/world.
             coordinator = Coordinator(
                 dp.world, mode=ep.mode,
+                runtime=dp.runtime, node_size=dp.node_size,
                 host_cache_bytes=max(1, ep.host_cache_bytes // dp.world),
                 flush_threads=max(1, ep.flush_threads // dp.world),
                 chunk_bytes=ep.chunk_bytes,
@@ -422,6 +427,15 @@ class CheckpointManager:
                                           "world": world}
         delta_spec = None
         if self._delta_tracker is not None:
+            if self.coordinator is not None:
+                # a rank death reassigns its shard slice to survivors
+                # whose engines hold no snapshot of it: force a keyframe
+                # whenever the writer set changed since the last save
+                writers_now = self.coordinator.active_writers()
+                if self._last_writers is not None \
+                        and writers_now != self._last_writers:
+                    self._delta_tracker.invalidate()
+                self._last_writers = writers_now
             delta_spec = self._delta_tracker.plan(step, records)
             future.stats.extra["delta"] = delta_spec.manifest_meta()
         # (the engines fill stats.extra["domains"] — the step-level
@@ -434,8 +448,14 @@ class CheckpointManager:
         try:
             if self.coordinator is not None:
                 future.stats.extra["world"] = world
-                self.coordinator.submit(step, future.directory, records,
-                                        objects, future, delta=delta_spec)
+                # the commit topology of *this* save (surviving writers +
+                # node membership) rides the future so phase 2 validates
+                # exactly the votes the save was built to cast
+                info = self.coordinator.submit(step, future.directory,
+                                               records, objects, future,
+                                               delta=delta_spec)
+                future.stats.extra["writers"] = info["writers"]
+                future.stats.extra["nodes"] = info["nodes"]
             else:
                 by_rank = group_by_rank(records)
                 self.engine.save(future.directory, by_rank, objects, future,
@@ -552,12 +572,15 @@ class CheckpointManager:
                         fdoms = future.stats.extra.get("file_domains")
                         if fdoms:
                             meta["file_domains"] = fdoms
-                    # Multi-rank saves commit with expect_ranks: the
-                    # phase-2 gate re-validates every rank's vote before
-                    # the step becomes visible.
+                    # Multi-rank saves commit with their full topology:
+                    # the phase-2 gate re-validates every surviving
+                    # rank's vote and every node manifest before the
+                    # step becomes visible.
                     self.repository.commit_step(
                         future.step, engine_mode=self.mode,
                         expect_ranks=future.stats.extra.get("world"),
+                        writers=future.stats.extra.get("writers"),
+                        nodes=future.stats.extra.get("nodes"),
                         meta=meta)
                     tc1 = time.perf_counter()
                     future.stats.commit_s = tc1 - tc0

@@ -79,7 +79,8 @@ class ShardRecord:
 
 
 def assign_replica_writers(
-        shards: Sequence[Tuple[Any, int, Dict[int, Any]]]
+        shards: Sequence[Tuple[Any, int, Dict[int, Any]]],
+        initial_load: Optional[Dict[int, int]] = None,
 ) -> Dict[Any, int]:
     """Pick one writer per replicated shard, balanced within replica groups.
 
@@ -90,13 +91,19 @@ def assign_replica_writers(
     least-loaded member (ties to the lowest device id) — so within every
     group no device carries more than ⌈group bytes / group size⌉ plus one
     shard of the group's bytes, and each shard gets exactly one writer.
+
+    ``initial_load`` seeds the per-device byte counters (default 0): the
+    coordinator's dead-rank reassignment reuses this balance to spread an
+    evicted writer's shard slice over *already-loaded* survivors, so the
+    extra bytes land on the least-loaded lanes instead of stacking onto
+    one.
     """
     by_group: Dict[Tuple[int, ...], List[Tuple[int, Any]]] = {}
     for key, nbytes, replicas in shards:
         by_group.setdefault(tuple(sorted(replicas)), []).append((nbytes, key))
     owners: Dict[Any, int] = {}
     for devices, members in by_group.items():
-        load = {d: 0 for d in devices}
+        load = {d: int((initial_load or {}).get(d, 0)) for d in devices}
         # sort by descending size, then key, for a deterministic plan
         for nbytes, key in sorted(members, key=lambda m: (-m[0], str(m[1]))):
             dev = min(devices, key=lambda d: (load[d], d))

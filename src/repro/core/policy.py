@@ -64,15 +64,32 @@ class StoragePolicy:
 
 @dataclasses.dataclass(frozen=True)
 class DistPolicy:
-    """Multi-rank writer world (two-phase commit coordinator)."""
+    """Multi-rank writer world (hierarchical two-phase commit).
+
+    ``runtime`` picks the execution domain behind each writer rank:
+    ``"thread"`` (default — deterministic in-process lanes, the test
+    double) or ``"process"`` (one spawned OS process per rank — real
+    isolation, real SIGKILL blast radius). ``node_size`` sets the commit
+    tree's fan-in (ranks per node-local aggregator; default groups of 8,
+    so small worlds behave single-node).
+    """
 
     world: Optional[int] = None
     coordinator: Optional[Any] = None
     ack_timeout_s: Optional[float] = None
+    runtime: str = "thread"
+    node_size: Optional[int] = None
 
     def __post_init__(self):
         if self.world is not None and self.world < 1:
             raise ValueError(f"world must be >= 1, got {self.world}")
+        if self.runtime not in ("thread", "process"):
+            raise ValueError(
+                f"runtime must be 'thread' or 'process', "
+                f"got {self.runtime!r}")
+        if self.node_size is not None and self.node_size < 1:
+            raise ValueError(
+                f"node_size must be >= 1, got {self.node_size}")
 
 
 @dataclasses.dataclass(frozen=True)

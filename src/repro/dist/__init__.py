@@ -1,17 +1,27 @@
-"""Multi-rank checkpoint coordination (simulated N-writer world).
+"""Multi-rank checkpoint coordination (N-writer world).
 
 See :mod:`repro.dist.coordinator` for the save protocol (balanced writer
-partition → per-rank engine lanes → phase-1 rank-manifest votes → ack
-collective → phase-2 global commit) and :mod:`repro.dist.barrier` for the
-failure-aware collective primitive underneath it.
+partition → per-rank engine lanes → phase-1 rank-manifest votes →
+hierarchical node→global ack collective → phase-2 global commit),
+:mod:`repro.dist.barrier` for the failure-aware collective primitive
+underneath it, and :mod:`repro.dist.process_runtime` for the
+process-per-rank backend (``runtime="process"``) where a dead rank is a
+dead OS process, SIGKILL and all.
 """
 
 from .barrier import BarrierBroken, CollectiveBarrier
-from .coordinator import (Coordinator, FAULT_POINTS, RANK_ENGINES,
-                          RankRuntime, partition_records)
+from .coordinator import (Coordinator, DEFAULT_NODE_SIZE, FAULT_POINTS,
+                          RANK_ENGINES, RUNTIME_KINDS, RankRuntime,
+                          ThreadRankRuntime, node_topology,
+                          partition_records)
+from .ipc import (PROCESS_FAULT_POINTS, ProcessDied, ProcessFaultSpec,
+                  RemoteRankError)
+from .runtime import BaseRankRuntime
 
 __all__ = [
-    "BarrierBroken", "CollectiveBarrier",
-    "Coordinator", "FAULT_POINTS", "RANK_ENGINES", "RankRuntime",
-    "partition_records",
+    "BarrierBroken", "BaseRankRuntime", "CollectiveBarrier",
+    "Coordinator", "DEFAULT_NODE_SIZE", "FAULT_POINTS",
+    "PROCESS_FAULT_POINTS", "ProcessDied", "ProcessFaultSpec",
+    "RANK_ENGINES", "RUNTIME_KINDS", "RankRuntime", "RemoteRankError",
+    "ThreadRankRuntime", "node_topology", "partition_records",
 ]

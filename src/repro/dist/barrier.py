@@ -19,6 +19,7 @@ membership already failed cannot silently heal.
 from __future__ import annotations
 
 import threading
+import time
 from typing import Optional
 
 from repro.analysis.locks import declares_lock
@@ -52,6 +53,11 @@ class CollectiveBarrier:
         while waiting) and ``TimeoutError`` on timeout — a timeout also
         poisons the barrier, since the collective can no longer complete
         with one party gone."""
+        # Single monotonic deadline for the whole wait: Condition.wait()
+        # restarts its clock on every wakeup, and wakeups that change
+        # nothing (poison→reset cycles, adjacent generations completing)
+        # would otherwise extend the total wait without bound.
+        deadline = None if timeout is None else time.monotonic() + timeout
         with self._cond:
             if self._broken is not None:
                 raise self._broken
@@ -63,7 +69,10 @@ class CollectiveBarrier:
                 self._cond.notify_all()
                 return gen
             while self._generation == gen and self._broken is None:
-                if not self._cond.wait(timeout):
+                remaining = None if deadline is None \
+                    else deadline - time.monotonic()
+                if remaining is not None and remaining <= 0 \
+                        or not self._cond.wait(remaining):
                     self._broken = BarrierBroken(
                         f"barrier timed out in generation {gen} "
                         f"({self._arrived}/{self.parties} arrived)")
@@ -88,11 +97,15 @@ class CollectiveBarrier:
         completed. Raises :class:`BarrierBroken` if poisoned, or
         ``TimeoutError`` (without poisoning — the observer is not a party;
         the caller decides whether a late collective is fatal)."""
+        deadline = None if timeout is None else time.monotonic() + timeout
         with self._cond:
             while self._generation <= generation:
                 if self._broken is not None:
                     raise self._broken
-                if not self._cond.wait(timeout):
+                remaining = None if deadline is None \
+                    else deadline - time.monotonic()
+                if remaining is not None and remaining <= 0 \
+                        or not self._cond.wait(remaining):
                     raise TimeoutError(
                         f"generation {generation} did not complete "
                         f"({self._arrived}/{self.parties} arrived)")

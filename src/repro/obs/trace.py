@@ -138,6 +138,33 @@ class Tracer:
         buf.add(("C", name, time.perf_counter(), 0.0, lane or buf.lane,
                  buf.tid, {"value": value}, None, "step"))
 
+    def ingest(self, events: List[Dict[str, Any]], *,
+               clock_offset: float = 0.0,
+               default_lane: Optional[str] = None) -> None:
+        """Merge foreign events (another process's ``Tracer.events()``)
+        into this tracer's timeline.
+
+        The process-per-rank runtime ships each child's spans back over
+        the pipe; ``clock_offset`` (parent ``perf_counter`` minus the
+        child's, measured at the ready handshake) maps their timestamps
+        onto this process's clock so one export shows every rank.
+        Lanes the child didn't name explicitly (its ``MainThread``)
+        are relabeled to ``default_lane`` — the rank's lane — so child
+        tracks sort with the rank's engine lanes in Perfetto.
+        """
+        for ev in events:
+            if ev.get("ph") != "X":
+                continue
+            lane = ev.get("lane")
+            if default_lane is not None and \
+                    (not lane or lane == "MainThread"):
+                lane = default_lane
+            self.add_complete(
+                ev["name"], ev["t0"] + clock_offset,
+                ev["t1"] + clock_offset, lane=lane,
+                args=ev.get("args") or None, flow=ev.get("flow"),
+                flow_phase=ev.get("flow_phase") or "step")
+
     # --------------------------------------------------------------- reading
     def events(self) -> List[Dict[str, Any]]:
         """All recorded events as dicts (tests / breakdown analysis)."""

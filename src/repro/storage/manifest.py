@@ -52,10 +52,12 @@ import numpy as np
 
 MANIFEST_VERSION = 1
 RANK_MANIFEST_VERSION = 1
+NODE_MANIFEST_VERSION = 1
 CHECKSUM_CHUNK_BYTES = 4 << 20
 CHECKSUM_ALGO = "pallas-weighted-u32-chunk4m-v1"
 
 _RANK_MANIFEST_RE = re.compile(r"^rank(\d+)\.manifest\.json$")
+_NODE_MANIFEST_RE = re.compile(r"^node(\d+)\.manifest\.json$")
 
 # Filenames that belong to the repository, not the checkpoint payload.
 _CONTROL_SUFFIXES = (".tmp",)
@@ -216,6 +218,140 @@ def read_rank_manifests(sdir: str) -> Dict[int, RankManifest]:
     return out
 
 
+def node_manifest_name(node: int) -> str:
+    return f"node{node:05d}.manifest.json"
+
+
+@dataclasses.dataclass
+class NodeManifest:
+    """One node-local aggregator's vote in the hierarchical commit tree.
+
+    Written atomically by the node's aggregator (its lowest writer rank)
+    only after *every* member rank of the node has cast its own phase-1
+    :class:`RankManifest` vote — the node barrier completed. ``votes``
+    lists the member rank-manifest files themselves (sizes + checksums),
+    so the global committer can audit "this whole subtree prepared"
+    against n_nodes small files instead of re-reading every rank's vote
+    state: barrier fan-in and commit validation both scale O(nodes), not
+    O(ranks). A node with a dead or stalled member never writes its
+    manifest — the missing ``nodeNNNNN.manifest.json`` names the failed
+    subtree.
+    """
+
+    node: int
+    step: int
+    world: int
+    ranks: List[int]
+    votes: List[FileEntry]
+    checksum_algo: Optional[str] = None
+    created_unix: float = 0.0
+    version: int = NODE_MANIFEST_VERSION
+
+    def to_json_bytes(self) -> bytes:
+        d = dataclasses.asdict(self)
+        d["votes"] = [dataclasses.asdict(v) for v in self.votes]
+        return json.dumps(d, indent=1, sort_keys=True).encode()
+
+    @classmethod
+    def from_json_bytes(cls, data: bytes) -> "NodeManifest":
+        d = json.loads(data.decode())
+        votes = [FileEntry(**v) for v in d.pop("votes", [])]
+        known = {f.name for f in dataclasses.fields(cls)}
+        return cls(votes=votes, **{k: v for k, v in d.items() if k in known})
+
+    @classmethod
+    def build(cls, sdir: str, *, node: int, ranks: List[int], step: int,
+              world: int, checksum: bool = True) -> "NodeManifest":
+        votes = []
+        for r in sorted(ranks):
+            path = os.path.join(sdir, rank_manifest_name(r))
+            if not os.path.isfile(path):
+                raise ManifestError(
+                    f"step {step}: node {node} aggregating before rank "
+                    f"{r} voted — {rank_manifest_name(r)!r} missing")
+            votes.append(FileEntry(
+                name=rank_manifest_name(r), nbytes=os.path.getsize(path),
+                checksum=file_checksum(path) if checksum else None))
+        return cls(node=node, step=step, world=world,
+                   ranks=sorted(ranks), votes=votes,
+                   checksum_algo=CHECKSUM_ALGO if checksum else None,
+                   created_unix=time.time())
+
+    def write(self, sdir: str) -> str:
+        """Atomic write (tmp + rename), same discipline as the rank vote."""
+        from repro.core.layout import maybe_fsync
+        path = os.path.join(sdir, node_manifest_name(self.node))
+        tmp = f"{path}.tmp"
+        with open(tmp, "wb") as f:
+            f.write(self.to_json_bytes())
+            f.flush()
+            maybe_fsync(f.fileno())
+        os.replace(tmp, path)
+        return path
+
+
+def read_node_manifests(sdir: str) -> Dict[int, NodeManifest]:
+    """All parseable node-aggregator votes in a step dir, keyed by node."""
+    out: Dict[int, NodeManifest] = {}
+    for n in sorted(os.listdir(sdir)):
+        if not _NODE_MANIFEST_RE.match(n):
+            continue
+        try:
+            with open(os.path.join(sdir, n), "rb") as f:
+                nm = NodeManifest.from_json_bytes(f.read())
+        except (OSError, ValueError) as exc:
+            raise ManifestError(f"unreadable node manifest {n!r}: {exc}") \
+                from exc
+        out[nm.node] = nm
+    return out
+
+
+def _validate_node_votes(sdir: str, step: int, world: int,
+                         nodes: Dict[int, Any], *,
+                         checksum: bool = True) -> None:
+    """Audit the hierarchical commit tree's node-aggregator layer: every
+    node with writers wrote its manifest, covering exactly its member
+    ranks' votes at the recorded sizes (and checksums when enabled). A
+    failed subtree never writes its node manifest, so the missing/extra
+    set names exactly which aggregator's collective broke."""
+    expect = {int(nid): sorted(int(r) for r in ranks)
+              for nid, ranks in nodes.items() if ranks}
+    nms = read_node_manifests(sdir)
+    missing = sorted(set(expect) - set(nms))
+    if missing:
+        raise ManifestError(
+            f"step {step}: node manifests missing for nodes {missing} — "
+            f"those aggregator subtrees never completed; refusing to "
+            f"commit")
+    extra = sorted(set(nms) - set(expect))
+    if extra:
+        raise ManifestError(
+            f"step {step}: unexpected node manifests {extra} (expected "
+            f"nodes {sorted(expect)}) — a foreign aggregator voted")
+    for nid, nranks in expect.items():
+        nm = nms[nid]
+        if sorted(nm.ranks) != nranks or nm.world != world \
+                or nm.step != step:
+            raise ManifestError(
+                f"step {step}: node manifest {nid} covers ranks "
+                f"{sorted(nm.ranks)} (world {nm.world}, step {nm.step}); "
+                f"coordinator expects ranks {nranks} of world {world}")
+        for ve in nm.votes:
+            path = os.path.join(sdir, ve.name)
+            if not os.path.isfile(path) \
+                    or os.path.getsize(path) != ve.nbytes:
+                raise ManifestError(
+                    f"step {step}: node {nid} recorded vote {ve.name!r} "
+                    f"at {ve.nbytes} B but the file is missing or "
+                    f"resized — a vote changed after aggregation")
+            if checksum and ve.checksum is not None \
+                    and file_checksum(path) != ve.checksum:
+                raise ManifestError(
+                    f"step {step}: vote {ve.name!r} checksum mismatch "
+                    f"vs node {nid}'s aggregation — a vote was "
+                    f"rewritten after the node collective")
+
+
 @dataclasses.dataclass
 class StepManifest:
     """Everything the catalog knows about one committed step."""
@@ -257,16 +393,25 @@ class StepManifest:
     def build(cls, sdir: str, step: int, *, engine_mode: Optional[str] = None,
               checksum: bool = True,
               meta: Optional[Dict[str, Any]] = None,
-              expect_ranks: Optional[int] = None) -> "StepManifest":
+              expect_ranks: Optional[int] = None,
+              writers: Optional[Any] = None,
+              nodes: Optional[Dict[int, Any]] = None) -> "StepManifest":
         """Scan a fully-persisted step directory into a manifest.
 
         With ``expect_ranks=N`` (a multi-rank save), the phase-1 votes are
-        validated first: all N rank manifests must be present and claim
-        ``world == N``, every file a vote declares must be on disk at the
-        declared size, and no undeclared shard file may exist. Any
-        violation raises :class:`ManifestError` — the commit fails and the
-        step stays an invisible orphan. Checksums declared by the votes
-        are reused, so the global commit never re-hashes payload bytes the
+        validated first: a rank manifest must be present for exactly the
+        expected writer set (``writers`` — defaults to all N ranks; a
+        coordinator that reassigned a dead rank's shard slice passes the
+        surviving subset) and claim ``world == N``, every file a vote
+        declares must be on disk at the declared size, and no undeclared
+        shard file may exist. With ``nodes`` (``{node_id: [writer
+        ranks]}``, the hierarchical commit tree), the node-aggregator
+        votes are audited too: every node with writers must have written
+        its ``nodeNNNNN.manifest.json`` covering exactly its member
+        ranks' votes at the recorded sizes/checksums. Any violation
+        raises :class:`ManifestError` — the commit fails and the step
+        stays an invisible orphan. Checksums declared by the votes are
+        reused, so the global commit never re-hashes payload bytes the
         rank lanes already hashed in parallel.
         """
         names = sorted(
@@ -275,15 +420,24 @@ class StepManifest:
             and not any(s in n for s in _CONTROL_SUFFIXES))
         declared: Dict[str, FileEntry] = {}
         if expect_ranks is not None:
+            writer_set = set(range(expect_ranks)) if writers is None \
+                else {int(w) for w in writers}
             votes = read_rank_manifests(sdir)
-            missing = sorted(set(range(expect_ranks)) - set(votes))
+            missing = sorted(writer_set - set(votes))
             if missing:
                 raise ManifestError(
                     f"step {step}: rank manifests missing for ranks "
-                    f"{missing} of {expect_ranks} — not every writer "
-                    f"prepared; refusing to commit")
+                    f"{missing} of writers {sorted(writer_set)} — not "
+                    f"every writer prepared; refusing to commit")
+            foreign = sorted(set(votes) - writer_set)
+            if foreign:
+                raise ManifestError(
+                    f"step {step}: rank manifests from unexpected ranks "
+                    f"{foreign} (writers: {sorted(writer_set)}) — a "
+                    f"foreign or supposedly-dead writer voted; refusing "
+                    f"to commit")
             for rank, rm in votes.items():
-                if rank >= expect_ranks or rm.world != expect_ranks:
+                if rm.world != expect_ranks:
                     raise ManifestError(
                         f"step {step}: rank manifest {rank} claims world "
                         f"{rm.world}, coordinator expects {expect_ranks}")
@@ -306,12 +460,16 @@ class StepManifest:
                     declared[fe.name] = fe
             undeclared = [n for n in names
                           if n not in declared
-                          and not _RANK_MANIFEST_RE.match(n)]
+                          and not _RANK_MANIFEST_RE.match(n)
+                          and not _NODE_MANIFEST_RE.match(n)]
             if undeclared:
                 raise ManifestError(
                     f"step {step}: files {undeclared} present but not "
                     f"declared by any rank manifest — stale shards or a "
                     f"foreign writer; refusing to bless them")
+            if nodes is not None:
+                _validate_node_votes(sdir, step, expect_ranks, nodes,
+                                     checksum=checksum)
         files = []
         # Per-file domain maps normally arrive from the engine's plan
         # (meta["file_domains"], popped below — never stored: the per-file
@@ -355,6 +513,16 @@ class StepManifest:
         if expect_ranks is not None:
             meta = dict(meta or {})
             meta.setdefault("world", expect_ranks)
+            if writers is not None and \
+                    sorted(int(w) for w in writers) != \
+                    list(range(expect_ranks)):
+                # a partial writer set (dead ranks reassigned) is worth
+                # recording: fleet tooling can see which saves ran degraded
+                meta.setdefault("writers", sorted(int(w) for w in writers))
+            if nodes is not None:
+                meta.setdefault("nodes", {
+                    str(nid): sorted(int(r) for r in ranks)
+                    for nid, ranks in nodes.items()})
         return cls(step=step, files=files, format=detect_format(names),
                    engine_mode=engine_mode,
                    checksum_algo=CHECKSUM_ALGO if checksum else None,

@@ -29,6 +29,7 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import glob
+import logging
 import os
 import queue
 import re
@@ -50,6 +51,8 @@ from .manifest import (FileEntry, StepManifest, file_checksum,
 CATALOG_DIR = ".catalog"
 _STEP_RE = re.compile(r"step-(\d+)\.json$")
 _MARKER_RE = re.compile(r"inflight-(\d+)$")
+
+logger = logging.getLogger(__name__)
 
 
 def step_dirname(step: int) -> str:
@@ -366,19 +369,25 @@ class CheckpointRepository:
 
     def commit_step(self, step: int, *, engine_mode: Optional[str] = None,
                     meta: Optional[Dict[str, Any]] = None,
-                    expect_ranks: Optional[int] = None) -> StepManifest:
+                    expect_ranks: Optional[int] = None,
+                    writers: Optional[Sequence[int]] = None,
+                    nodes: Optional[Dict[int, Any]] = None) -> StepManifest:
         """Make a fully-persisted step visible: build its manifest (sizes +
         kernel checksums) and write it atomically *last*.
 
         ``expect_ranks`` enables the multi-rank phase-2 gate: the manifest
         build validates every rank's phase-1 vote (see
         :meth:`StepManifest.build`) and raises instead of committing a
-        partially-written step."""
+        partially-written step. ``writers`` narrows the expected voter
+        set (a coordinator that reassigned a dead rank's shards passes
+        the survivors); ``nodes`` additionally audits the hierarchical
+        commit tree's node-aggregator votes."""
         sdir = self.step_dir(step)
         tb0 = time.perf_counter()
         manifest = StepManifest.build(sdir, step, engine_mode=engine_mode,
                                       checksum=self.checksum, meta=meta,
-                                      expect_ranks=expect_ranks)
+                                      expect_ranks=expect_ranks,
+                                      writers=writers, nodes=nodes)
         if not manifest.files:
             raise BackendError(
                 f"refusing to commit empty step directory {sdir!r}")
@@ -785,16 +794,32 @@ class CheckpointRepository:
 
     def _orphan_age_s(self, step: int) -> float:
         """Seconds since the orphan's save started (marker timestamp, or
-        the directory mtime for marker-less probe failures)."""
+        the directory mtime for marker-less probe failures).
+
+        Ages are clamped to >= 0: both sources are wall-clock, so a clock
+        step backwards between the save and the GC sweep yields a negative
+        difference — uncamped, that makes the orphan look *eternally
+        fresh* relative to any grace window arithmetic built on top, or
+        (worse, for large jumps) lets a live in-flight save age past the
+        grace instantly when the clock steps forward again. A negative age
+        means "the marker is from the future": the only safe reading is
+        "this save just started" (age 0 → inside any grace window)."""
+        age = None
         try:
             with open(self._marker_path(step)) as f:
-                return time.time() - float(f.read().strip())
+                age = time.time() - float(f.read().strip())
         except (OSError, ValueError):
-            pass
-        try:
-            return time.time() - os.path.getmtime(self.step_dir(step))
-        except OSError:
-            return float("inf")
+            try:
+                age = time.time() - os.path.getmtime(self.step_dir(step))
+            except OSError:
+                return float("inf")
+        if age < 0:
+            logger.warning(
+                "orphan step %d has a future-dated marker/mtime (%.3fs "
+                "ahead): wall clock stepped backwards; treating the "
+                "orphan as fresh (age 0)", step, -age)
+            return 0.0
+        return age
 
     def gc(self, *, include_orphans: bool = False, dry_run: bool = False,
            retention: Optional[RetentionPolicy] = None,

@@ -23,6 +23,12 @@ saves (a rank killed mid-delta-save must leave the *chain* restorable at
 the previous committed step), and :func:`tamper_file` models post-commit
 bitrot — flip payload bytes of a committed keyframe/delta in place, so
 chain-aware ``storage.cli verify`` must fail every dependent step.
+
+Process-runtime faults: ``FaultInjector`` is a closure and cannot cross
+a process boundary; the process-per-rank runtime takes a *picklable*
+:class:`~repro.dist.ipc.ProcessFaultSpec` (re-exported here) instead and
+fires it child-side with a real ``SIGKILL`` — same protocol windows,
+plus ``"after_vote"``, with an actual corpse instead of an exception.
 """
 
 from __future__ import annotations
@@ -30,6 +36,12 @@ from __future__ import annotations
 import os
 import threading
 from typing import Any, Dict, Optional
+
+from repro.dist.ipc import (PROCESS_FAULT_POINTS, ProcessDied,
+                            ProcessFaultSpec)
+
+__all__ = ["FaultInjector", "InjectedFault", "PROCESS_FAULT_POINTS",
+           "ProcessDied", "ProcessFaultSpec", "tamper_file"]
 
 
 class InjectedFault(RuntimeError):

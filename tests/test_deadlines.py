@@ -1,0 +1,194 @@
+"""Deadline/clock correctness: the timing bugs the thread runtime masked.
+
+Three latent bugs surfaced while building the process-per-rank runtime
+(ISSUE 8), each with a regression test here:
+
+* ``CollectiveBarrier.wait()`` / ``wait_generation()`` passed ``timeout``
+  to every ``Condition.wait()`` inside the loop, so each wakeup that
+  changed nothing (a ``poison→reset`` cycle, an adjacent generation
+  completing) restarted the clock — under a wakeup storm the total wait
+  was unbounded. Both now run against one ``time.monotonic()`` deadline.
+* ``_cancel_watchdog`` vs ``_on_timeout``: a ``threading.Timer`` whose
+  callback has already been scheduled survives ``.cancel()``, so a save
+  completing right at the deadline could still be retro-failed by the
+  late timer. ``_on_timeout`` now re-checks a done-flag set under the
+  job lock *before* cancel.
+* Orphan-grace ages compared wall-clock ``time.time()`` against marker
+  contents — a clock stepping backwards made a crash orphan look
+  eternally fresh (negative age). Negative ages now clamp to 0 with a
+  warning.
+"""
+
+from __future__ import annotations
+
+import logging
+import os
+import threading
+import time
+
+import pytest
+
+from repro.core.engine import CheckpointFuture
+from repro.dist.barrier import BarrierBroken, CollectiveBarrier
+from repro.dist.coordinator import _SaveJob
+from repro.storage.manifest import RankManifest
+from repro.storage.repository import CheckpointRepository
+
+# A storm waker that keeps notifying the barrier's condvar without ever
+# completing the waiter's generation. ``reset()`` is the natural storm
+# source: it notify_alls with generation/broken unchanged.
+def _storm(barrier: CollectiveBarrier, duration_s: float,
+           period_s: float = 0.02) -> None:
+    end = time.monotonic() + duration_s
+    while time.monotonic() < end:
+        barrier.reset()
+        time.sleep(period_s)
+
+
+class TestBarrierDeadline:
+    def test_wait_times_out_under_wakeup_storm(self):
+        """A party's timeout must be one deadline, not per-wakeup: with
+        a notify storm every 20ms, the old per-wakeup clock never
+        elapsed (the storm runs 2s; the old code would ride it to ~2s+,
+        failing the upper bound here)."""
+        b = CollectiveBarrier(2)
+        th = threading.Thread(target=_storm, args=(b, 2.0), daemon=True)
+        t0 = time.monotonic()
+        th.start()
+        with pytest.raises(TimeoutError):
+            b.wait(timeout=0.4)
+        elapsed = time.monotonic() - t0
+        th.join()
+        assert 0.3 <= elapsed <= 1.0, \
+            f"timeout fired after {elapsed:.3f}s for a 0.4s deadline"
+
+    def test_wait_generation_times_out_under_wakeup_storm(self):
+        """Observer waits had the same per-wakeup clock."""
+        b = CollectiveBarrier(2)
+        th = threading.Thread(target=_storm, args=(b, 2.0), daemon=True)
+        t0 = time.monotonic()
+        th.start()
+        with pytest.raises(TimeoutError):
+            b.wait_generation(0, timeout=0.4)
+        elapsed = time.monotonic() - t0
+        th.join()
+        assert 0.3 <= elapsed <= 1.0, \
+            f"timeout fired after {elapsed:.3f}s for a 0.4s deadline"
+
+    def test_wait_without_timeout_still_blocks_and_completes(self):
+        """The deadline refactor must not break the no-timeout path."""
+        b = CollectiveBarrier(2)
+        done = []
+        th = threading.Thread(target=lambda: done.append(b.wait()),
+                              daemon=True)
+        th.start()
+        time.sleep(0.05)
+        assert b.wait() == 0
+        th.join(timeout=5)
+        assert done == [0]
+
+    def test_poison_still_wakes_waiter_with_cause(self):
+        b = CollectiveBarrier(2)
+        errs = []
+
+        def waiter():
+            try:
+                b.wait(timeout=30)
+            except BarrierBroken as exc:
+                errs.append(exc)
+
+        th = threading.Thread(target=waiter, daemon=True)
+        th.start()
+        time.sleep(0.05)
+        b.poison("rank 1 died", rank=1)
+        th.join(timeout=5)
+        assert len(errs) == 1 and errs[0].rank == 1
+
+
+class TestWatchdogCancelRace:
+    def test_late_timer_callback_cannot_retrofail_a_settled_save(
+            self, tmp_path):
+        """``Timer.cancel()`` cannot stop a callback that already began
+        firing; the done-flag (set under the job lock before cancel) is
+        what actually closes the window. Simulate the worst
+        interleaving — the timeout callback running *inside* the cancel
+        window of a fully-acked save — and require the save to stay
+        successful."""
+        sdir = str(tmp_path)
+        fut = CheckpointFuture(5, sdir)
+        job = _SaveJob(5, sdir, 1, writers=[0], nodes={0: [0]},
+                       future=fut, ack_timeout_s=60.0,
+                       checksum_votes=False)
+        job.start_watchdog()
+        RankManifest.build(sdir, rank=0, world=1, step=5, filenames=[],
+                           checksum=False).write(sdir)
+        orig_cancel = job._cancel_watchdog
+
+        def cancel_with_late_callback():
+            # the timer fires exactly in the cancel window
+            job._on_timeout()
+            orig_cancel()
+
+        job._cancel_watchdog = cancel_with_late_callback
+        job.rank_acked(0, None)
+        # the save fully acked: the late callback must be a no-op
+        fut.wait_persisted(timeout=5)
+        assert fut.persisted and job.settled and not job.failed
+
+    def test_timeout_still_fires_for_a_genuinely_stalled_save(
+            self, tmp_path):
+        fut = CheckpointFuture(6, str(tmp_path))
+        job = _SaveJob(6, str(tmp_path), 2, writers=[0, 1],
+                       nodes={0: [0, 1]}, future=fut, ack_timeout_s=0.2,
+                       checksum_votes=False)
+        job.start_watchdog()  # nobody ever acks
+        with pytest.raises(Exception) as ei:
+            fut.wait_persisted(timeout=5)
+        assert "not all ranks acked" in str(ei.value.__cause__ or ei.value)
+
+
+class TestOrphanGraceClockJump:
+    def _future_dated_orphan(self, root: str, step: int) -> None:
+        repo = CheckpointRepository(root, auto_cascade=False)
+        sdir = repo.begin_step(step)
+        with open(os.path.join(sdir, "rank00000.dsllm"), "wb") as f:
+            f.write(os.urandom(64))
+        # wall clock stepped backwards after the save began: the marker
+        # timestamp is now in the future
+        with open(repo._marker_path(step), "w") as f:
+            f.write(str(time.time() + 3600.0))
+        repo.close()
+
+    def test_negative_age_clamps_to_fresh_and_warns(self, tmp_path,
+                                                    caplog):
+        self._future_dated_orphan(str(tmp_path), 7)
+        repo = CheckpointRepository(str(tmp_path), auto_cascade=False)
+        with caplog.at_level(logging.WARNING,
+                             logger="repro.storage.repository"):
+            age = repo._orphan_age_s(7)
+        repo.close()
+        assert age == 0.0
+        assert any("future-dated" in r.getMessage()
+                   for r in caplog.records)
+
+    def test_gc_grace_spares_future_dated_orphan(self, tmp_path):
+        """Age 0 must read as 'just started': inside any grace window.
+        (Uncamped, -3600s < grace is *also* true — the dangerous case is
+        the symmetric forward jump aging a live save out of its grace;
+        clamping keeps the arithmetic on one side of zero.)"""
+        self._future_dated_orphan(str(tmp_path), 8)
+        repo = CheckpointRepository(str(tmp_path), auto_cascade=False)
+        spared = repo.gc(include_orphans=True, orphan_grace_s=3600.0)
+        assert spared.deleted_orphans == []
+        reclaimed = repo.gc(include_orphans=True)
+        assert reclaimed.deleted_orphans == [8]
+        repo.close()
+
+    def test_marker_less_orphan_future_mtime_also_clamps(self, tmp_path):
+        repo = CheckpointRepository(str(tmp_path), auto_cascade=False)
+        sdir = repo.begin_step(9)
+        os.unlink(repo._marker_path(9))  # probe-failure orphan
+        future_t = time.time() + 3600.0
+        os.utime(sdir, (future_t, future_t))
+        assert repo._orphan_age_s(9) == 0.0
+        repo.close()
