@@ -1,0 +1,306 @@
+"""Encode-lane breakdown for the one-pass fused pipeline.
+
+A world=4 save sequence over a mixed registry — delta-encoded model
+domain, int8-quantized optimizer domain — is recorded with ckpttrace,
+and the figure reduces it to the two artifacts CI gates on:
+
+* the **single-read ratio**: ``engine.bytes_encode_read`` (incremented
+  by the fused encoders once per chunk, for exactly the bytes the pass
+  consumed) over the bytes the schedule says must be encoded — delta
+  domains on delta steps, quantized domains on every step. The fused
+  delta→quantize→checksum pass reads each staged byte exactly once, so
+  the ratio is 1.0 by construction; a second pass over staged bytes
+  (say, a separate checksum sweep creeping back in) doubles it.
+* the encode-lane shape: per-save busy seconds split by fused pass
+  (``encode.delta`` / ``encode.int8``) vs the flush lanes' downstream
+  ``encode.compress``, plus the (d2h ∪ encode) ∥ flush overlap fraction
+  — the pipelining floor that keeps the encode lane off the critical
+  path.
+
+Gating compares shapes and exact byte accounting, never speeds.
+``--check`` re-runs the quick figure against
+``benchmarks/baselines/fig_encode_baseline.json``.
+
+    PYTHONPATH=src python -m benchmarks.run --quick --only fig_encode
+    PYTHONPATH=src python -m benchmarks.fig_encode --quick --check
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from typing import Dict, List, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (CheckpointManager, CheckpointPolicy, DeltaPolicy,
+                        DistPolicy, EnginePolicy, StateProviderRegistry,
+                        StoragePolicy)
+from repro.obs.metrics import metrics as obs_metrics
+
+from .common import RESULTS_DIR, TempDir, active_tracer, save_results
+
+WORLD = 4
+LANE_MBPS = 300.0             # emulated per-writer-lane bandwidth
+KEYFRAME_EVERY = 2            # saves 1,2,3 = keyframe, delta, keyframe
+N_TENSORS = 8
+SHAPE = (1024, 4096)          # 8 × 16 MiB fp32 model = 128 MiB
+SHAPE_QUICK = (512, 2048)     # 8 × 4 MiB = 32 MiB
+OPT_SHAPE = (2048, 4096)      # 32 MiB fp32 optimizer moments
+OPT_SHAPE_QUICK = (1024, 2048)
+BASELINE = os.path.join(os.path.dirname(__file__), "baselines",
+                        "fig_encode_baseline.json")
+
+ENCODE_LANES = ("encode.delta", "encode.int8", "encode.compress")
+
+
+def _registry() -> StateProviderRegistry:
+    return (StateProviderRegistry()
+            .add_rule(provider="delta", domain="model")
+            .add_rule(provider="quantized", domain="optimizer",
+                      dtype="float32")
+            .add_rule(provider="auto"))
+
+
+def _initial_state(shape, opt_shape) -> Dict:
+    rng = np.random.default_rng(11)
+    model = {f"w{i:02d}": jnp.asarray(
+        rng.standard_normal(shape).astype(np.float32))
+        for i in range(N_TENSORS)}
+    opt = {"m": jnp.asarray(rng.standard_normal(opt_shape)
+                            .astype(np.float32))}
+    return {"model": model, "optimizer": opt,
+            "meta": {"step": 0, "note": "fig_encode"}}
+
+
+def _mutate(state, step: int) -> Dict:
+    model = {k: v.at[::89].add(np.float32(1e-3))
+             for k, v in state["model"].items()}
+    opt = {"m": state["optimizer"]["m"] * np.float32(1.0 + 1e-4)}
+    return {"model": model, "optimizer": opt,
+            "meta": {"step": step, "note": "fig_encode"}}
+
+
+def _merge(ivals: List[Tuple[float, float]]) -> List[Tuple[float, float]]:
+    out: List[Tuple[float, float]] = []
+    for a, b in sorted(ivals):
+        if out and a <= out[-1][1]:
+            out[-1] = (out[-1][0], max(out[-1][1], b))
+        else:
+            out.append((a, b))
+    return out
+
+
+def _busy(ivals) -> float:
+    return sum(b - a for a, b in _merge(ivals))
+
+
+def _intersect_s(xs, ys) -> float:
+    xs, ys = _merge(xs), _merge(ys)
+    i = j = 0
+    total = 0.0
+    while i < len(xs) and j < len(ys):
+        a = max(xs[i][0], ys[j][0])
+        b = min(xs[i][1], ys[j][1])
+        if b > a:
+            total += b - a
+        if xs[i][1] < ys[j][1]:
+            i += 1
+        else:
+            j += 1
+    return total
+
+
+def _window_rows(spans: List[dict], window: Tuple[float, float]) -> dict:
+    """Reduce one save's [request, committed] window to encode-lane busy
+    seconds per span name, fused byte/span counts, and the overlap
+    fraction of production (d2h + encode) against the flush lanes."""
+    a, b = window
+    enc: Dict[str, List[Tuple[float, float]]] = \
+        {k: [] for k in ENCODE_LANES}
+    d2h: List[Tuple[float, float]] = []
+    flush: List[Tuple[float, float]] = []
+    fused_bytes = 0
+    fused_spans = 0
+    for e in spans:
+        if e["t0"] < a or e["t0"] > b:
+            continue
+        if e["name"] in enc:
+            enc[e["name"]].append((e["t0"], e["t1"]))
+            if e.get("args", {}).get("fused"):
+                fused_bytes += int(e["args"].get("bytes", 0))
+                fused_spans += 1
+        elif e["name"] == "d2h.stage":
+            d2h.append((e["t0"], e["t1"]))
+        elif e["name"] == "flush":
+            flush.append((e["t0"], e["t1"]))
+    produce = d2h + [iv for v in enc.values() for iv in v]
+    flush_s = _busy(flush)
+    overlap_s = _intersect_s(produce, flush)
+    return {
+        **{f"{k.split('.')[1]}_s": _busy(v) for k, v in enc.items()},
+        "d2h_s": _busy(d2h),
+        "flush_s": flush_s,
+        "fused_bytes": fused_bytes,
+        "fused_spans": fused_spans,
+        "overlap_fraction": overlap_s / flush_s if flush_s > 0 else 0.0,
+    }
+
+
+def run(quick: bool = False) -> List[dict]:
+    shape = SHAPE_QUICK if quick else SHAPE
+    opt_shape = OPT_SHAPE_QUICK if quick else OPT_SHAPE
+    state = _initial_state(shape, opt_shape)
+    model_bytes = sum(v.nbytes for v in state["model"].values())
+    opt_bytes = state["optimizer"]["m"].nbytes
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    trace_path = os.path.join(RESULTS_DIR, "fig_encode.trace.json")
+    rows: List[dict] = []
+    read0 = obs_metrics.get_counter("engine.bytes_encode_read")
+    expected_read = 0
+    with TempDir() as d, active_tracer(trace_path) as t:
+        mgr = CheckpointManager.from_policy(
+            d, CheckpointPolicy(
+                engine=EnginePolicy(
+                    host_cache_bytes=int((model_bytes + opt_bytes) * 2.5)
+                    + (64 << 20),
+                    flush_threads=1, throttle_mbps=LANE_MBPS),
+                storage=StoragePolicy(manifest_checksums=False),
+                dist=DistPolicy(world=WORLD),
+                delta=DeltaPolicy(keyframe_every=KEYFRAME_EVERY),
+                providers=_registry()))
+        windows: List[Tuple[int, float, float]] = []
+        for s in (1, 2, 3):
+            state = _mutate(state, s)
+            t0 = time.perf_counter()
+            fut = mgr.save(s, state)
+            fut.wait_persisted()
+            mgr.wait_for_commit(s)
+            windows.append((s, t0, time.perf_counter()))
+            keyframe = (s - 1) % KEYFRAME_EVERY == 0
+            # the schedule's contract: quantized domains encode every
+            # save, delta domains only on delta steps
+            expected_read += opt_bytes + (0 if keyframe else model_bytes)
+            rows.append({
+                "step": s,
+                "kind": "keyframe" if keyframe else "delta",
+                "payload_bytes": model_bytes + opt_bytes,
+                "manifest_bytes":
+                    mgr.repository.manifest(s).total_bytes,
+                "capture_s": fut.stats.capture_latency_s,
+                "persist_s": fut.stats.persist_latency_s,
+            })
+        mgr.close()
+        spans = t.spans()
+    read_bytes = obs_metrics.get_counter("engine.bytes_encode_read") - read0
+    for row, (s, a, b) in zip(rows, windows):
+        row.update(_window_rows(spans, (a, b)))
+    meta = {
+        "world": WORLD, "lane_mbps": LANE_MBPS,
+        "keyframe_every": KEYFRAME_EVERY,
+        "model_bytes": model_bytes, "opt_bytes": opt_bytes,
+        "encode_read_bytes": read_bytes,
+        "expected_encode_bytes": expected_read,
+        "single_read_ratio": read_bytes / expected_read
+        if expected_read else 0.0,
+        "fused_span_bytes": sum(r["fused_bytes"] for r in rows),
+        "trace": trace_path,
+    }
+    save_results("fig_encode", rows, meta=meta)
+    return rows
+
+
+def check(quick: bool = True) -> int:
+    """Re-run the quick figure and gate the encode-lane invariants
+    against the committed baseline. Returns a process exit status."""
+    with open(BASELINE) as f:
+        bounds = json.load(f)
+    rows = run(quick=quick)
+    with open(os.path.join(RESULTS_DIR, "fig_encode.json")) as f:
+        meta = json.load(f)["meta"]
+    problems: List[str] = []
+    kinds = [r["kind"] for r in rows]
+    if kinds != ["keyframe", "delta", "keyframe"]:
+        problems.append(
+            f"expected keyframe,delta,keyframe sequence, got {kinds}")
+    lo, hi = bounds["single_read_ratio"]
+    if not lo <= meta["single_read_ratio"] <= hi:
+        problems.append(
+            f"single-read ratio {meta['single_read_ratio']:.4f} outside "
+            f"[{lo}, {hi}] — staged bytes are no longer read exactly "
+            f"once per fused encode "
+            f"(read {meta['encode_read_bytes']:.0f} B, schedule expects "
+            f"{meta['expected_encode_bytes']} B)")
+    if meta["fused_span_bytes"] != meta["encode_read_bytes"]:
+        problems.append(
+            f"fused span byte attrs ({meta['fused_span_bytes']:.0f} B) "
+            f"disagree with engine.bytes_encode_read "
+            f"({meta['encode_read_bytes']:.0f} B) — encode "
+            f"instrumentation regressed")
+    for r in rows:
+        rb = bounds["per_kind"][r["kind"]]
+        for lane in rb.get("required_lanes", []):
+            if r[f"{lane}_s"] <= 0:
+                problems.append(
+                    f"step {r['step']} ({r['kind']}): required encode "
+                    f"lane {lane!r} recorded no busy time")
+        for lane in rb.get("forbidden_lanes", []):
+            if r[f"{lane}_s"] > 0:
+                problems.append(
+                    f"step {r['step']} ({r['kind']}): lane {lane!r} ran "
+                    f"({r[f'{lane}_s']:.4f}s busy) — keyframes must not "
+                    f"pay a delta encode")
+        if r["overlap_fraction"] < bounds["min_overlap_fraction"]:
+            problems.append(
+                f"step {r['step']} ({r['kind']}): overlap fraction "
+                f"{r['overlap_fraction']:.3f} < floor "
+                f"{bounds['min_overlap_fraction']} — the encode∥flush "
+                f"pipeline has collapsed to serial")
+    if problems:
+        print("fig_encode REGRESSION:", file=sys.stderr)
+        for p in problems:
+            print(f"  - {p}", file=sys.stderr)
+        return 1
+    print(f"fig_encode check OK: single_read_ratio="
+          f"{meta['single_read_ratio']:.4f} "
+          f"({meta['encode_read_bytes']:.0f} B read / "
+          f"{meta['expected_encode_bytes']} B scheduled)")
+    return 0
+
+
+def summarize(rows) -> List[str]:
+    lines = []
+    for r in rows:
+        lines.append(
+            f"fig_encode/{r['kind']}{r['step']},"
+            f"{r['persist_s'] * 1e6:.0f},"
+            f"delta={r['delta_s'] * 1e3:.0f}ms "
+            f"int8={r['int8_s'] * 1e3:.0f}ms "
+            f"compress={r['compress_s'] * 1e3:.0f}ms "
+            f"fused={r['fused_bytes'] >> 20}MiB/"
+            f"{r['fused_spans']}spans "
+            f"overlap={r['overlap_fraction']:.2f}")
+    return lines
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--check", action="store_true",
+                    help="gate the single-read ratio + encode-lane shape "
+                         "against the committed baseline (exit 1 on "
+                         "regression)")
+    args = ap.parse_args(argv)
+    if args.check:
+        return check(quick=True)
+    for line in summarize(run(quick=args.quick)):
+        print(line)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -106,11 +106,17 @@ class BaseCheckpointEngine:
     def __init__(self, host_cache_bytes: int = 1 << 30,
                  flush_threads: int = 4, chunk_bytes: int = 4 << 20,
                  throttle_mbps: Optional[float] = None,
+                 checksum_files: bool = False,
                  label: str = "dsllm"):
         self.host_cache_bytes = host_cache_bytes
         self.flush_threads = flush_threads
         self.chunk_bytes = chunk_bytes
         self.throttle_mbps = throttle_mbps
+        # manifest checksums are on for this repository: engines that can
+        # should produce integrity metadata in-pass (streaming file
+        # checksums, fused per-chunk payload digests) so the vote/commit
+        # lanes never re-read persisted bytes
+        self.checksum_files = checksum_files
         # lane-name prefix for this engine's worker threads (trace tracks)
         self.label = label
 
@@ -151,6 +157,7 @@ class DataStatesEngine(BaseCheckpointEngine):
             flush_threads=self.flush_threads,
             chunk_bytes=self.chunk_bytes,
             throttle_mbps=self.throttle_mbps,
+            track_file_checksums=self.checksum_files,
             label=self.label)
         # Differential checkpointing: retained previous-snapshot copies,
         # held inside the same pinned host-cache budget as staging.
@@ -320,6 +327,10 @@ class DataStatesEngine(BaseCheckpointEngine):
                     tp.capture_gate = future._captured
                 if getattr(tp, "encode_budget", False) is None:
                     tp.encode_budget = encode_budget
+                if self.checksum_files and hasattr(tp, "checksum_chunks"):
+                    # fused encode emits per-chunk payload digests in the
+                    # same pass; the footer stores them for verified decode
+                    tp.checksum_chunks = True
                 note_domain(rec.domain, kind,
                             "raw" if getattr(tp, "fixed_offset", True)
                             else getattr(tp, "enc_codec", "raw"))

@@ -388,7 +388,8 @@ class CheckpointManager:
                 host_cache_bytes=ep.host_cache_bytes,
                 flush_threads=ep.flush_threads,
                 chunk_bytes=ep.chunk_bytes,
-                throttle_mbps=ep.throttle_mbps)
+                throttle_mbps=ep.throttle_mbps,
+                checksum_files=sp.manifest_checksums)
         self.restore_engine = RestoreEngine(threads=ep.restore_threads)
         self.last_restore_stats: Optional[RestoreStats] = None
         self.last_restored_step: Optional[int] = None
@@ -572,6 +573,13 @@ class CheckpointManager:
                         fdoms = future.stats.extra.get("file_domains")
                         if fdoms:
                             meta["file_domains"] = fdoms
+                    # per-file checksums accumulated by the writers while
+                    # persisting — StepManifest.build pops this and reuses
+                    # them instead of re-reading every byte on the commit
+                    # lane (never stored in the manifest meta itself)
+                    fsums = future.stats.extra.get("file_checksums")
+                    if fsums:
+                        meta["file_checksums"] = fsums
                     # Multi-rank saves commit with their full topology:
                     # the phase-2 gate re-validates every surviving
                     # rank's vote and every node manifest before the

@@ -197,10 +197,15 @@ class DataMovementEngine:
                  producer_threads: int = 2,
                  chunk_bytes: int = DEFAULT_CHUNK_BYTES,
                  throttle_mbps: Optional[float] = None,
+                 track_file_checksums: bool = False,
                  label: str = "dsllm"):
         self.host_cache = HostCache(host_cache_bytes)
         self.chunk_bytes = chunk_bytes
         self.throttle_mbps = throttle_mbps
+        # accumulate manifest-compatible per-file checksums while writing
+        # (one pass): the commit lane reuses them instead of re-reading
+        # every persisted byte
+        self.track_file_checksums = track_file_checksums
         # ``label`` prefixes the lane (thread) names — the coordinator gives
         # each rank's engine a distinct prefix so traces get per-rank lanes.
         self.label = label
@@ -373,7 +378,8 @@ class DataMovementEngine:
 
     def _produce_file(self, plan: FilePlan, file_done, future) -> None:
         layout = plan.composite.plan_layout()
-        writer = FileWriter(plan.path, layout)
+        writer = FileWriter(plan.path, layout,
+                            track_checksum=self.track_file_checksums)
         state = _FileState(plan, writer,
                            on_done=lambda: self._finalize_file(
                                state, file_done, future), future=future)
@@ -466,6 +472,11 @@ class DataMovementEngine:
             self._release_providers(state)
             future._set_error(exc)
             return
+        if writer.file_checksum is not None:
+            # one finalize per file; dict.setdefault/__setitem__ are atomic
+            # under the GIL, and each file writes a distinct key
+            future.stats.extra.setdefault("file_checksums", {})[
+                os.path.basename(writer.path)] = writer.file_checksum
         file_done()
 
     def _flush_worker(self) -> None:
@@ -494,7 +505,8 @@ class DataMovementEngine:
                                  bytes_in=len(chunk.data),
                                  bytes_out=len(payload))
                     op.writer.append_encoded_chunk(chunk.name, payload,
-                                                   *chunk.raw_range)
+                                                   *chunk.raw_range,
+                                                   digest=chunk.digest)
                     nb_written = len(payload)
                 else:
                     op.writer.write_at(chunk.offset, chunk.data)

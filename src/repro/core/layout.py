@@ -65,10 +65,14 @@ class TensorEntry:
     index: Optional[Tuple[Tuple[int, int], ...]] = None  # (start, stop) per dim
     checksum: Optional[int] = None
     codec: str = "raw"
-    # Encoded tensors: (file_offset, comp_nbytes, raw_lo, raw_hi) per
-    # compressed chunk — raw addressing is explicit, so flush-lane append
-    # order never matters for reconstruction.
-    enc_chunks: Optional[List[Tuple[int, int, int, int]]] = None
+    # Encoded tensors: (file_offset, comp_nbytes, raw_lo, raw_hi, digest)
+    # per compressed chunk — raw addressing is explicit, so flush-lane
+    # append order never matters for reconstruction. ``digest`` is the
+    # position-weighted u32 checksum of the *uncompressed* payload (the
+    # fused encoder emits it in the same pass that produced the payload);
+    # ``None`` when the save ran without manifest checksums, or in footers
+    # written before digests existed (legacy 4-tuples).
+    enc_chunks: Optional[List[Tuple[int, int, int, int, Optional[int]]]] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -115,9 +119,18 @@ class FileWriter:
     Thread-safe: tensor chunks go to fixed offsets with ``os.pwrite`` (no
     shared cursor), object chunks reserve space on an atomic append cursor in
     the log region. The footer is written by :meth:`finalize`.
+
+    With ``track_checksum=True`` the writer accumulates the manifest-
+    compatible file checksum *while writing* (every byte lands exactly once
+    at a fixed or append-reserved offset, so the streaming accumulator in
+    :mod:`repro.storage.file_format` is exact): each pwrite's contribution
+    is computed outside any lock and folded under the existing append lock,
+    and :attr:`file_checksum` is valid after :meth:`finalize` — the commit
+    lane can reuse it instead of re-reading the file.
     """
 
-    def __init__(self, path: str, layout: FileLayout):
+    def __init__(self, path: str, layout: FileLayout,
+                 track_checksum: bool = False):
         import threading
 
         self.path = path
@@ -132,12 +145,31 @@ class FileWriter:
         # meta declared by the producer, per-chunk records appended by the
         # flush lanes as compressed payloads land in the log region.
         self._enc_meta: Dict[str, Dict[str, Any]] = {}
-        self._enc_chunks: Dict[str, List[Tuple[int, int, int, int]]] = {}
+        self._enc_chunks: Dict[str, List[Tuple[int, int, int, int,
+                                               Optional[int]]]] = {}
+        self._csum = None
+        if track_checksum:
+            from repro.storage.file_format import StreamingFileChecksum
+            self._csum = StreamingFileChecksum()
+        self._file_checksum: Optional[int] = None
+
+    @property
+    def file_checksum(self) -> Optional[int]:
+        """Manifest-compatible checksum of the finished file — ``None``
+        unless tracking was on and :meth:`finalize` completed."""
+        return self._file_checksum
+
+    def _pwrite(self, fd: int, data, offset: int) -> None:
+        os.pwrite(fd, data, offset)
+        if self._csum is not None:
+            contrib = self._csum.contribution(offset, data)
+            with self._append_lock:
+                self._csum.fold(contrib)
 
     # -- tensor region ------------------------------------------------------
     def write_at(self, offset: int, data) -> None:
         """Write a (chunk of a) tensor at its fixed offset. GIL-released."""
-        os.pwrite(self._fd, data, offset)
+        self._pwrite(self._fd, data, offset)
 
     # -- object log region ---------------------------------------------------
     def append_object(self, name: str, payload: bytes, codec: str = "pickle"
@@ -145,7 +177,7 @@ class FileWriter:
         with self._append_lock:
             off = self._append_cursor
             self._append_cursor += len(payload)
-        os.pwrite(self._fd, payload, off)
+        self._pwrite(self._fd, payload, off)
         obs_metrics.inc("writer.append_bytes", len(payload))
         entry = ObjectEntry(name=name, offset=off, nbytes=len(payload),
                             codec=codec)
@@ -169,17 +201,21 @@ class FileWriter:
                 "codec": codec, "global_shape": global_shape, "index": index}
 
     def append_encoded_chunk(self, name: str, payload: bytes,
-                             raw_lo: int, raw_hi: int) -> None:
+                             raw_lo: int, raw_hi: int,
+                             digest: Optional[int] = None) -> None:
         """Append one compressed chunk of an encoded tensor; thread-safe
-        (called from concurrent flush lanes)."""
+        (called from concurrent flush lanes). ``digest`` is the fused
+        encoder's checksum of the *uncompressed* payload, recorded in the
+        footer so decode can verify the chunk without a second pass."""
         with self._append_lock:
             off = self._append_cursor
             self._append_cursor += len(payload)
-        os.pwrite(self._fd, payload, off)
+        self._pwrite(self._fd, payload, off)
         obs_metrics.inc("writer.append_bytes", len(payload))
         with self._append_lock:
             self._enc_chunks.setdefault(name, []).append(
-                (off, len(payload), int(raw_lo), int(raw_hi)))
+                (off, len(payload), int(raw_lo), int(raw_hi),
+                 int(digest) if digest is not None else None))
 
     def set_meta(self, key: str, value: Any) -> None:
         self._extra_meta[key] = value
@@ -191,7 +227,7 @@ class FileWriter:
             chunks = sorted(self._enc_chunks.get(name, ()),
                             key=lambda c: c[2])
             covered = 0
-            for _off, _nb, lo, hi in chunks:
+            for _off, _nb, lo, hi, _dig in chunks:
                 if lo != covered:
                     break
                 covered = hi
@@ -199,16 +235,26 @@ class FileWriter:
                 raise ValueError(
                     f"encoded tensor {name!r}: chunks cover {covered} of "
                     f"{m['nbytes']} raw bytes — a flush lane lost a chunk")
+            # Tensor-level checksum for free: fold the fused per-chunk
+            # digests in raw order (same (i+1)-weighted fold the manifest
+            # uses for file chunks) — no extra read of the payload.
+            csum = None
+            if chunks and all(c[4] is not None for c in chunks):
+                csum = 0
+                for i, c in enumerate(chunks):
+                    csum = (csum + (i + 1) * c[4]) % (1 << 32)
             entries.append(TensorEntry(
                 name=name, offset=-1, nbytes=m["nbytes"], dtype=m["dtype"],
                 shape=m["shape"], global_shape=m["global_shape"],
-                index=m["index"], codec=m["codec"], enc_chunks=chunks))
+                index=m["index"], codec=m["codec"], checksum=csum,
+                enc_chunks=chunks))
         return entries
 
     def finalize(self, tensor_checksums: Optional[Dict[str, int]] = None) -> None:
         tensors = self.layout.tensors + self._encoded_entries()
         if tensor_checksums:
-            tensors = [dataclasses.replace(t, checksum=tensor_checksums.get(t.name))
+            tensors = [dataclasses.replace(t, checksum=tensor_checksums[t.name])
+                       if t.name in tensor_checksums else t
                        for t in tensors]
         footer = {
             "version": 1,
@@ -231,9 +277,16 @@ class FileWriter:
             self._append_cursor += len(payload) + _TRAILER.size
         with obs.span("file.finalize", file=os.path.basename(self.path),
                       footer_bytes=len(payload)):
+            trailer = _TRAILER.pack(len(payload), MAGIC)
             os.pwrite(fd, payload, off)
-            os.pwrite(fd, _TRAILER.pack(len(payload), MAGIC),
-                      off + len(payload))
+            os.pwrite(fd, trailer, off + len(payload))
+            if self._csum is not None:
+                # single-threaded here (fd ownership was just taken), so
+                # fold directly; after this the accumulator covers every
+                # byte of the finished file
+                self._csum.update(off, payload)
+                self._csum.update(off + len(payload), trailer)
+                self._file_checksum = self._csum.value
             maybe_fsync(fd)
             os.close(fd)
 
@@ -270,7 +323,11 @@ class FileReader:
                                  if t["global_shape"] is not None else None),
                 "index": (tuple(map(tuple, t["index"]))
                           if t["index"] is not None else None),
-                "enc_chunks": (list(map(tuple, t["enc_chunks"]))
+                # legacy footers carry 4-tuples (no per-chunk digest);
+                # normalize to 5-tuples with digest=None so every consumer
+                # sees one shape
+                "enc_chunks": ([tuple(c) + (None,) * (5 - len(c))
+                                for c in t["enc_chunks"]]
                                if t.get("enc_chunks") is not None else None)})
             for t in footer["tensors"]
         }
@@ -301,21 +358,29 @@ class FileReader:
 
     def read_encoded_delta(self, name: str) -> np.ndarray:
         """Decompressed (but still XOR-domain) bytes of an encoded tensor,
-        assembled in raw order. Used by chain replay."""
+        assembled in raw order. Used by chain replay. Chunks that carry a
+        fused-encode digest are integrity-verified as they are read."""
+        from repro.core.codecs import payload_digest
         from repro.core.reduction import _decompress
         e = self.tensors[name]
         if e.codec == "raw":
             raise ValueError(f"{name!r} is raw, not encoded")
         out = np.empty(e.nbytes, dtype=np.uint8)
         with open(self.path, "rb") as f:
-            for off, comp_nb, lo, hi in sorted(e.enc_chunks or (),
-                                               key=lambda c: c[2]):
+            for off, comp_nb, lo, hi, dig in sorted(e.enc_chunks or (),
+                                                    key=lambda c: c[2]):
                 f.seek(off)
                 raw = _decompress(f.read(comp_nb))
                 if len(raw) != hi - lo:
                     raise ValueError(
                         f"{name!r} chunk [{lo}:{hi}) decompressed to "
                         f"{len(raw)} B — corrupt delta payload")
+                if dig is not None and payload_digest(raw) != dig:
+                    raise ValueError(
+                        f"{name!r} chunk [{lo}:{hi}) digest mismatch: "
+                        f"stored {dig:#010x}, read "
+                        f"{payload_digest(raw):#010x} — corrupt delta "
+                        f"payload")
                 out[lo:hi] = np.frombuffer(raw, dtype=np.uint8)
         return out
 
@@ -336,13 +401,15 @@ class FileReader:
         out = np.empty(e.nbytes, dtype=np.uint8)
         covered = 0
         with open(self.path, "rb") as f:
-            for off, comp_nb, lo, hi in sorted(e.enc_chunks or (),
-                                               key=lambda c: c[2]):
+            for off, comp_nb, lo, hi, dig in sorted(e.enc_chunks or (),
+                                                    key=lambda c: c[2]):
                 if lo != covered:
                     break
                 f.seek(off)
                 payload = _decompress(f.read(comp_nb))
-                out[lo:hi] = decode_chunk_payload(e.codec, payload, lo, hi)
+                # decode verifies the fused digest while dequantizing
+                out[lo:hi] = decode_chunk_payload(e.codec, payload, lo, hi,
+                                                 expect_digest=dig)
                 covered = hi
         if covered != e.nbytes:
             # without this, a gap in the chunk list would silently hand

@@ -42,9 +42,11 @@ import numpy as np
 
 from repro.analysis.locks import declares_lock
 from repro.obs import trace as obs
+from repro.obs.metrics import metrics as obs_metrics
 
 from .codecs import (DELTA_CODEC, INT8_CODEC, INT8_ROW_BYTES,
-                     encode_int8_block)
+                     encode_delta_chunk, encode_int8_block,
+                     int8_encoded_nbytes)
 from .host_cache import HostCache, Reservation
 from .layout import FileLayout, align_up
 
@@ -65,6 +67,10 @@ class Chunk:
     # the *raw* tensor this chunk encodes — the flush lane compresses the
     # payload, so raw addressing must travel with the chunk.
     raw_range: Optional[Tuple[int, int]] = None
+    # Integrity digest of the (uncompressed) encoded payload, emitted by
+    # the fused encoder in the same pass that produced ``data``; recorded
+    # per chunk in the file footer. None when checksums are off.
+    digest: Optional[int] = None
     # Invoked by the flush lane once this chunk's payload is written (or
     # its write failed) — encoded chunks use it to credit the producer's
     # in-flight byte budget.
@@ -294,9 +300,14 @@ class TensorStateProvider(StateProvider):
 
 
 def xor_bytes(cur: np.ndarray, prev: np.ndarray) -> np.ndarray:
-    """Bit-exact XOR of two equal-length byte arrays via the Pallas delta
-    kernel (``kernels/delta.py``); returns a fresh uint8 array."""
+    """Bit-exact XOR of two equal-length byte arrays; returns a fresh
+    uint8 array. Pallas delta kernel (``kernels/delta.py``) on TPU, NumPy
+    on host — XOR has one right answer, so the paths are trivially
+    bit-identical (and the differential suite checks anyway)."""
     from repro.kernels import ops as kops  # deferred: jax import is heavy
+    if kops.host_fastpath():
+        return np.bitwise_xor(np.asarray(cur).view(np.uint8),
+                              np.asarray(prev).view(np.uint8))
     out = np.asarray(kops.delta_xor(cur, prev)).view(np.uint8)
     return out[:cur.nbytes]
 
@@ -349,6 +360,10 @@ class DeltaStateProvider(TensorStateProvider):
         # Set by the engine: bounds in-flight freshly-allocated XOR
         # payload bytes between producer and flush lanes.
         self.encode_budget: Optional[EncodeBudget] = None
+        # Set by the engine when the save runs with manifest checksums:
+        # the fused encoder then emits a per-chunk payload digest in the
+        # same pass that produced the delta.
+        self.checksum_chunks: bool = False
         assert len(prev) == self.nbytes, (
             f"snapshot cache entry for {name} is {len(prev)} B, "
             f"tensor is {self.nbytes} B")
@@ -394,14 +409,30 @@ class DeltaStateProvider(TensorStateProvider):
                     if budget is not None:
                         budget.acquire(nb)
                         on_flushed = (lambda b=budget, nb=nb: b.release(nb))
-                    with obs.span("encode.delta", tensor=self.name,
-                                  bytes=nb):
-                        delta = xor_bytes(cur, prev[pos:end])
-                        prev[pos:end] = cur  # advance the chain base
+                    try:
+                        with obs.span("encode.delta", tensor=self.name,
+                                      bytes=nb, fused=True):
+                            base = prev[pos:end]
+                            delta, digest = encode_delta_chunk(
+                                cur, base, with_digest=self.checksum_chunks)
+                            # advance the chain base without touching the
+                            # staged bytes again: base ^ delta == cur bit-
+                            # exactly, and delta is already in cache — the
+                            # fused pass above is the chunk's only read of
+                            # cur
+                            np.bitwise_xor(base, delta, out=base)
+                            obs_metrics.inc("engine.bytes_encode_read", nb)
+                    except BaseException:
+                        # the chunk will never reach a flush lane, so
+                        # nobody else can credit the budget back — a leak
+                        # here would shrink every later save's headroom
+                        if budget is not None:
+                            budget.release(nb)
+                        raise
                     yield Chunk(name=self.name, kind="tensor", data=delta,
                                 offset=None, codec=self.delta_codec,
                                 raw_range=(pos, end), last=end >= n,
-                                on_flushed=on_flushed)
+                                digest=digest, on_flushed=on_flushed)
                 pos = end
         finally:
             self._signal_stream_end()
@@ -448,6 +479,9 @@ class QuantizedStateProvider(TensorStateProvider):
         # payload allocations are bounded by the engine's encode budget.
         self.capture_gate: Optional[threading.Event] = None
         self.encode_budget: Optional[EncodeBudget] = None
+        # see DeltaStateProvider: fused per-chunk payload digests, enabled
+        # by the engine when the save runs with manifest checksums
+        self.checksum_chunks: bool = False
 
     @property
     def fixed_offset(self) -> bool:
@@ -466,18 +500,32 @@ class QuantizedStateProvider(TensorStateProvider):
                     while self._staged < end:
                         self._cond.wait()
             raw = np.frombuffer(view[pos:end], dtype=np.uint8)
-            with obs.span("encode.int8", tensor=self.name, bytes=end - pos):
-                payload = encode_int8_block(raw)
+            # the int8q payload size is known a priori, so the encoded
+            # footprint is reserved *before* the encode allocates it —
+            # exactly once per chunk, not once per pass
+            enc_nb = int8_encoded_nbytes(end - pos)
             budget = self.encode_budget
             on_flushed = None
             if budget is not None:
-                budget.acquire(len(payload))
-                on_flushed = (lambda b=budget, nb=len(payload):
-                              b.release(nb))
+                budget.acquire(enc_nb)
+                on_flushed = (lambda b=budget, nb=enc_nb: b.release(nb))
+            try:
+                with obs.span("encode.int8", tensor=self.name,
+                              bytes=end - pos, fused=True):
+                    payload, digest = encode_int8_block(
+                        raw, with_digest=self.checksum_chunks)
+                    obs_metrics.inc("engine.bytes_encode_read", end - pos)
+            except BaseException:
+                # see DeltaStateProvider: un-yielded chunks must credit
+                # their own reservation back on the way out
+                if budget is not None:
+                    budget.release(enc_nb)
+                raise
+            assert len(payload) == enc_nb
             yield Chunk(name=self.name, kind="tensor", data=payload,
                         offset=None, codec=self.enc_codec,
                         raw_range=(pos, end), last=end >= n,
-                        on_flushed=on_flushed)
+                        digest=digest, on_flushed=on_flushed)
             pos = end
 
 

@@ -391,7 +391,7 @@ class ThreadRankRuntime(BaseRankRuntime):
         self.engine = RANK_ENGINES[mode](
             host_cache_bytes=host_cache_bytes, flush_threads=flush_threads,
             chunk_bytes=chunk_bytes, throttle_mbps=throttle_mbps,
-            label=self.lane)
+            label=self.lane, checksum_files=checksum_files)
         self._q: "queue.Queue[Optional[tuple]]" = queue.Queue()
         self._thread = threading.Thread(
             target=self._worker, daemon=True, name=f"dsllm-rank-{rank}")
@@ -456,7 +456,8 @@ class ThreadRankRuntime(BaseRankRuntime):
             vote = RankManifest.build(
                 job.directory, rank=self.rank, world=job.world,
                 step=job.step, filenames=files,
-                checksum=self.checksum_files)
+                checksum=self.checksum_files,
+                precomputed=fut.stats.extra.get("file_checksums"))
             vote.write(job.directory)
         self._fault("before_ack", job, files)
         t_ack = time.perf_counter()

@@ -84,7 +84,8 @@ class ProcessRankRuntime(BaseRankRuntime):
         engine_kw = dict(host_cache_bytes=host_cache_bytes,
                          flush_threads=flush_threads,
                          chunk_bytes=chunk_bytes,
-                         throttle_mbps=throttle_mbps)
+                         throttle_mbps=throttle_mbps,
+                         checksum_files=checksum_files)
         ctx = multiprocessing.get_context(start_method)
         self._conn, child_conn = ctx.Pipe(duplex=True)
         self._proc = ctx.Process(

@@ -102,7 +102,8 @@ def worker_main(conn: Any, rank: int, world: int, mode: str,
                 with obs.span("vote", lane=lane, step=step, rank=rank):
                     vote = RankManifest.build(
                         directory, rank=rank, world=world, step=step,
-                        filenames=files, checksum=checksum_files)
+                        filenames=files, checksum=checksum_files,
+                        precomputed=fut.stats.extra.get("file_checksums"))
                     vote.write(directory)
                 _fire_fault(fault, "after_vote", rank, step, directory,
                             files)

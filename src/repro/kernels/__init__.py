@@ -11,12 +11,17 @@ checkpoints) plus the attention hot-spot of the model zoo:
   device before staging so corrupted transfers are detectable.
 * ``quantize`` — fp32→bf16/int8 quantize-pack for compressed checkpoints.
 * ``delta`` — differential checkpointing: subtract/XOR vs previous snapshot.
+* ``fused`` — the one-pass encode/decode pipeline: each encoded route
+  (XOR delta, int8 quantize) emits its payload *and* integrity digest in a
+  single kernel invocation per chunk, reading the staged bytes exactly once.
 
 Each has a jit'd wrapper in :mod:`repro.kernels.ops` (with
-``interpret=True`` fallback on CPU) and a pure-jnp oracle in
-:mod:`repro.kernels.ref`; tests sweep shapes/dtypes against the oracle.
+``interpret=True`` fallback on CPU) and a pure-NumPy/jnp oracle in
+:mod:`repro.kernels.ref`; tests sweep shapes/dtypes against the oracle, and
+``tests/test_fused_kernels.py`` proves the fused kernels bit-identical to
+the legacy multi-pass composition before the engine trusts either.
 """
 
-from . import ops, ref
+from . import fused, ops, ref
 
-__all__ = ["ops", "ref"]
+__all__ = ["fused", "ops", "ref"]

@@ -17,11 +17,31 @@ import numpy as np
 from . import checksum as _checksum
 from . import delta as _delta
 from . import flash_attention as _fa
+from . import fused as _fused
 from . import quantize as _quant
+from . import ref as _ref
 
 
 def _default_interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def host_fastpath() -> bool:
+    """True when there is no real TPU backend.
+
+    Interpret-mode Pallas is a correctness harness, not a data path (it
+    moves tens of MB/s); without a TPU the encode/verify hot paths dispatch
+    to the pure-NumPy oracles in ``ref.py``, which the differential suite
+    (``tests/test_fused_kernels.py``) proves bit-identical to the kernels.
+    """
+    return _default_interpret()
+
+
+def tensor_checksum_fast(x) -> int:
+    """``tensor_checksum`` as a Python int, via the fastest bit-exact path."""
+    if host_fastpath():
+        return _ref.checksum_np_bytes(np.asarray(x))
+    return int(tensor_checksum(x))
 
 
 def _pad_to(x: jax.Array, multiple: int) -> jax.Array:
@@ -82,6 +102,48 @@ def delta_f32(cur, prev, block: int = _delta.BLOCK,
     c = _pad_to(jnp.asarray(cur, jnp.float32).reshape(-1), block)
     p = _pad_to(jnp.asarray(prev, jnp.float32).reshape(-1), block)
     return _delta.delta_f32(c, p, block=block, interpret=interp)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def fused_xor_checksum(cur, prev, block: int = _delta.BLOCK,
+                       interpret: bool | None = None):
+    """One-pass (delta, digest-of-delta) over any two same-size arrays."""
+    interp = _default_interpret() if interpret is None else interpret
+    c = _pad_to(as_u32(cur), block)
+    p = _pad_to(as_u32(prev), block)
+    delta, dig = _fused.xor_checksum_u32(c, p, block=block, interpret=interp)
+    return delta, dig[0, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def fused_xor_fold(base, delta, block: int = _delta.BLOCK,
+                   interpret: bool | None = None):
+    """One-pass (base ^ delta, digest-of-delta): fused chain-replay decode."""
+    interp = _default_interpret() if interpret is None else interpret
+    b = _pad_to(as_u32(base), block)
+    d = _pad_to(as_u32(delta), block)
+    folded, dig = _fused.xor_fold_checksum_u32(b, d, block=block,
+                                               interpret=interp)
+    return folded, dig[0, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("n_rows", "interpret"))
+def fused_quantize_int8(x, n_rows: int, interpret: bool | None = None):
+    """One-pass (q, scales, int8q payload digest); x: (R, 256) fp32."""
+    interp = _default_interpret() if interpret is None else interpret
+    q, scales, dig = _fused.quantize_checksum_int8(x, n_rows,
+                                                   interpret=interp)
+    return q, scales, dig[0, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("n_rows", "interpret"))
+def fused_dequantize_int8(q, scales, n_rows: int,
+                          interpret: bool | None = None):
+    """One-pass (fp32, int8q payload digest): fused int8 decode + verify."""
+    interp = _default_interpret() if interpret is None else interpret
+    out, dig = _fused.dequantize_checksum_int8(q, scales, n_rows,
+                                               interpret=interp)
+    return out, dig[0, 0]
 
 
 @functools.partial(jax.jit, static_argnames=(

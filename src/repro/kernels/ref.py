@@ -1,12 +1,67 @@
-"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+"""Pure-NumPy / pure-jnp oracles for every Pallas kernel.
+
+Two roles: the allclose/bit-exact targets of the differential kernel suite,
+and the host fallback the fused encode path dispatches to when there is no
+real TPU (interpret-mode Pallas is a correctness harness, not a data path —
+it moves tens of MB/s; the NumPy oracles move GB/s and are proven
+bit-identical by ``tests/test_fused_kernels.py``).
+"""
 
 from __future__ import annotations
+
+import threading
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from .checksum import WEIGHT_BASE, WEIGHT_MOD
+
+_W_LOCK = threading.Lock()
+_W_CACHE: dict = {}
+
+
+def _weights_at(word_offset: int, n: int) -> np.ndarray:
+    """uint64 weight vector for payload words [offset, offset + n)."""
+    key = (word_offset % WEIGHT_MOD, n)
+    with _W_LOCK:
+        w = _W_CACHE.get(key)
+    if w is None:
+        idx = np.arange(word_offset, word_offset + n, dtype=np.uint64)
+        w = np.uint64(WEIGHT_BASE) + (idx % np.uint64(WEIGHT_MOD))
+        with _W_LOCK:
+            if len(_W_CACHE) > 16:
+                _W_CACHE.clear()
+            _W_CACHE[key] = w
+    return w
+
+
+def checksum_np(x_flat_u32, word_offset: int = 0) -> int:
+    """Position-weighted u32 digest, vectorized NumPy (weights cached).
+
+    ``word_offset`` shifts the position weights, giving the digest
+    contribution of a word run starting mid-payload — the additive building
+    block for streaming whole-file checksums. Products stay < 2^49, and the
+    uint64 accumulator wraps mod 2^64, which is exact mod 2^32.
+    """
+    x = np.asarray(x_flat_u32)
+    assert x.dtype == np.uint32
+    if x.size == 0:
+        return 0
+    w = _weights_at(word_offset, x.size)
+    return int((x.astype(np.uint64) * w).sum() & np.uint64(0xFFFFFFFF))
+
+
+def checksum_np_bytes(data, word_offset: int = 0) -> int:
+    """``checksum_np`` over a byte buffer (zero-padding the u32 tail)."""
+    b = np.frombuffer(data, np.uint8) if not isinstance(data, np.ndarray) \
+        else data.reshape(-1).view(np.uint8)
+    pad = (-b.size) % 4
+    if pad:
+        b = np.concatenate([b, np.zeros(pad, np.uint8)])
+    if not b.flags["C_CONTIGUOUS"] or b.ctypes.data % 4:
+        b = b.copy()
+    return checksum_np(b.view(np.uint32), word_offset)
 
 
 def checksum_ref(x_flat_u32) -> np.uint32:
@@ -34,6 +89,51 @@ def dequantize_int8_ref(q, scale):
 
 def delta_xor_ref(cur_u32, prev_u32):
     return jnp.bitwise_xor(jnp.asarray(cur_u32), jnp.asarray(prev_u32))
+
+
+# ------------------------------------------------- fused-kernel oracles
+# Payload word layout of the int8q codec (core/codecs.py): 2 header words,
+# n_rows scale words, then n_rows * 64 little-endian-packed q words. The
+# fused kernels digest the scale + q areas; the header is host-side.
+_PAYLOAD_HEADER_WORDS = 2
+
+
+def fused_xor_checksum_ref(cur_u32, prev_u32):
+    """(delta, digest-of-delta) — oracle for ``fused.xor_checksum_u32``."""
+    delta = np.bitwise_xor(np.asarray(cur_u32), np.asarray(prev_u32))
+    return delta, checksum_np(delta)
+
+
+def fused_xor_fold_checksum_ref(base_u32, delta_u32):
+    """(base ^ delta, digest-of-delta) — oracle for the fused decode."""
+    delta = np.asarray(delta_u32)
+    return np.bitwise_xor(np.asarray(base_u32), delta), checksum_np(delta)
+
+
+def int8_payload_digest_ref(q, scales, n_rows: int) -> int:
+    """Digest of the scale + q payload areas (header words excluded)."""
+    q = np.asarray(q, np.int8)[:n_rows]
+    sbits = np.asarray(scales, np.float32)[:n_rows].reshape(-1) \
+        .view(np.uint32)
+    dig = checksum_np(sbits, word_offset=_PAYLOAD_HEADER_WORDS)
+    qwords = q.reshape(-1).view(np.uint8).copy().view(np.uint32)
+    dig += checksum_np(qwords,
+                       word_offset=_PAYLOAD_HEADER_WORDS + n_rows)
+    return dig & 0xFFFFFFFF
+
+
+def fused_quantize_checksum_ref(x, n_rows: int):
+    """(q, scales, payload digest) — oracle for the fused int8 encode."""
+    q, scales = quantize_int8_ref(x)
+    return q, scales, int8_payload_digest_ref(np.asarray(q),
+                                              np.asarray(scales), n_rows)
+
+
+def fused_dequantize_checksum_ref(q, scales, n_rows: int):
+    """(fp32, payload digest) — oracle for the fused int8 decode."""
+    out = np.asarray(q, np.int8).astype(np.float32) \
+        * np.asarray(scales, np.float32)
+    return out, int8_payload_digest_ref(q, scales, n_rows)
 
 
 def delta_f32_ref(cur, prev):

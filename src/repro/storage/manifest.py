@@ -76,6 +76,13 @@ def file_checksum(path: str,
     digests are combined as ``sum((i+1) * digest_i) mod 2^32`` so chunk
     reordering changes the result. The file length is recorded separately
     in the manifest, so zero-padding of the tail chunk is not a blind spot.
+
+    Per-chunk digests dispatch through ``tensor_checksum_fast``: the Pallas
+    kernel on a real TPU, its bit-identical NumPy oracle on host (interpret
+    mode is a correctness harness, not a data path). Save lanes avoid this
+    re-read entirely when the writer streamed the checksum
+    (:mod:`repro.storage.file_format`); verify/audit paths call it on
+    purpose — re-reading the bytes on disk is the point.
     """
     from repro.kernels import ops as kops  # deferred: jax import is heavy
 
@@ -90,7 +97,7 @@ def file_checksum(path: str,
             if len(arr) < chunk_bytes:
                 arr = np.concatenate(
                     [arr, np.zeros(chunk_bytes - len(arr), np.uint8)])
-            digest = int(kops.tensor_checksum(arr))
+            digest = kops.tensor_checksum_fast(arr)
             total = (total + (i + 1) * digest) % (1 << 32)
             i += 1
     return total
@@ -177,13 +184,25 @@ class RankManifest:
 
     @classmethod
     def build(cls, sdir: str, *, rank: int, world: int, step: int,
-              filenames: List[str], checksum: bool = True) -> "RankManifest":
+              filenames: List[str], checksum: bool = True,
+              precomputed: Optional[Dict[str, int]] = None
+              ) -> "RankManifest":
+        """``precomputed`` maps basenames to checksums the rank's writers
+        streamed while persisting (``FileWriter(track_checksum=True)``) —
+        bit-identical to ``file_checksum`` by construction, so the vote
+        reuses them instead of re-reading its own shard files."""
         files = []
+        pre = precomputed or {}
         for n in sorted(filenames):
             path = os.path.join(sdir, n)
+            if not checksum:
+                csum = None
+            elif n in pre:
+                csum = int(pre[n])
+            else:
+                csum = file_checksum(path)
             files.append(FileEntry(
-                name=n, nbytes=os.path.getsize(path),
-                checksum=file_checksum(path) if checksum else None))
+                name=n, nbytes=os.path.getsize(path), checksum=csum))
         return cls(rank=rank, world=world, step=step, files=files,
                    checksum_algo=CHECKSUM_ALGO if checksum else None,
                    created_unix=time.time())
@@ -480,6 +499,12 @@ class StepManifest:
         # would tax the plain path for nothing.
         meta = dict(meta or {})
         file_domains: Dict[str, Any] = meta.pop("file_domains", None) or {}
+        # writer-streamed per-file checksums (single-writer saves hand them
+        # straight to the committer; multi-rank saves route them through
+        # the rank votes instead) — popped, never stored: the per-file
+        # value lives on the FileEntry
+        file_checksums: Dict[str, int] = \
+            meta.pop("file_checksums", None) or {}
         probe_codec = meta.get("delta") is not None
         probe_domains = meta.get("domains") is not None
         for n in names:
@@ -487,6 +512,9 @@ class StepManifest:
             fe = declared.get(n)
             if fe is not None and (fe.checksum is not None or not checksum):
                 pass  # reuse the rank lane's hash
+            elif checksum and n in file_checksums:
+                fe = FileEntry(name=n, nbytes=os.path.getsize(path),
+                               checksum=int(file_checksums[n]))
             else:
                 fe = FileEntry(
                     name=n, nbytes=os.path.getsize(path),

@@ -11,6 +11,7 @@ trajectory bit-identically.
 
 import glob
 import os
+import time
 
 import jax.numpy as jnp
 import numpy as np
@@ -178,6 +179,112 @@ def test_rewind_resave_retracts_delta_dependents(tmp_path, same_process):
     # the retracted dependent is an orphan: flagged, then reclaimable
     root = str(tmp_path)
     assert storage_cli.main(["--root", root, "verify"]) == 1
+    assert storage_cli.main(["--root", root, "gc", "--orphans",
+                             "--orphan-grace", "0"]) == 0
+    assert storage_cli.main(["--root", root, "verify"]) == 0
+
+
+# ----------------------------------------------- mid-fused-encode faults
+class _EncodeBomb:
+    """Wrap a fused codec encoder; raise on the N-th call once armed."""
+
+    def __init__(self, real, explode_on=2):
+        self.real = real
+        self.explode_on = explode_on
+        self.calls = 0
+        self.armed = False
+
+    def __call__(self, *args, **kw):
+        if self.armed:
+            self.calls += 1
+            if self.calls >= self.explode_on:
+                raise InjectedFault("fused encode exploded mid-chunk")
+        return self.real(*args, **kw)
+
+
+def _mixed_policy(world: int):
+    """Delta-routed model domain + quantized fp32 optimizer domain, small
+    chunks so every tensor crosses several fused-encode calls."""
+    from repro.core import (CheckpointPolicy, DistPolicy, EnginePolicy,
+                            StateProviderRegistry)
+    return CheckpointPolicy(
+        engine=EnginePolicy(host_cache_bytes=1 << 26, chunk_bytes=1 << 16),
+        dist=DistPolicy(world=world) if world > 1 else DistPolicy(),
+        delta=DeltaPolicy(keyframe_every=4),
+        providers=(StateProviderRegistry()
+                   .add_rule(provider="quantized", domain="optimizer",
+                             dtype="float32")
+                   .add_rule(provider="auto")))
+
+
+def _mixed_state(tag: float):
+    rng = np.random.default_rng(int(tag))
+    return {"model": {f"w{i}": jnp.asarray(
+                rng.standard_normal(65_536).astype(np.float32)) + tag
+                for i in range(4)},
+            "optimizer": {"m": jnp.asarray(
+                rng.standard_normal(131_072).astype(np.float32))},
+            "meta": {"step": int(tag)}}
+
+
+@pytest.mark.parametrize("world", [1, 4])
+@pytest.mark.parametrize("route", ["delta", "quantized"])
+def test_provider_raising_mid_fused_encode(tmp_path, world, route,
+                                           monkeypatch):
+    """A fused encoder blowing up mid-chunk (kernel error, corrupt staged
+    view) must behave like any producer death: the partial file is
+    aborted and unlinked, nothing commits, the encode budget drains, and
+    the *same* engine saves the next step cleanly — at world=1 and on the
+    world=4 thread runtime."""
+    import repro.core.state_provider as sp_mod
+    from repro.core import CheckpointManager as CM
+
+    target = ("encode_delta_chunk" if route == "delta"
+              else "encode_int8_block")
+    bomb = _EncodeBomb(getattr(sp_mod, target), explode_on=2)
+    monkeypatch.setattr(sp_mod, target, bomb)
+
+    with CM.from_policy(str(tmp_path), _mixed_policy(world)) as mgr:
+        mgr.save(1, _mixed_state(1.0), blocking=True)   # keyframe
+        bomb.armed = True
+        with pytest.raises(CheckpointError):
+            mgr.save(2, _mixed_state(2.0), blocking=True)
+        assert bomb.calls >= bomb.explode_on   # it really fired mid-save
+        bomb.armed = False
+        mgr.wait_for_commit()
+        assert not mgr.repository.has_manifest(2)
+        assert mgr.latest_step() == 1
+        # the aborted writers unlink their footer-less partials once the
+        # in-flight ops drain (async w.r.t. the failed save by design —
+        # closing the fd inline would race queued pwrites). Ranks whose
+        # save completed before a peer failed may leave *complete*
+        # (footer-carrying) shards behind — those are orphans for GC, not
+        # partials; what must never survive is a footer-less file.
+        from repro.core.layout import FileReader
+        sdir = step_dir(str(tmp_path), 2)
+        deadline = time.monotonic() + 10.0
+        partials = []
+        while time.monotonic() < deadline:
+            partials = []
+            for f in glob.glob(os.path.join(sdir, "*.dsllm")):
+                try:
+                    FileReader(f)
+                except (ValueError, OSError):
+                    partials.append(f)
+            if not partials:
+                break
+            time.sleep(0.05)
+        assert not partials, f"footer-less partial(s) survived: {partials}"
+        # same engine, next save: healthy (budget credited back on the
+        # error path), chain re-armed with a keyframe
+        mgr.save(3, _mixed_state(3.0), blocking=True)
+        assert mgr.repository.manifest(3).meta["delta"]["keyframe"] is True
+        out = mgr.restore(_mixed_state(0.0))
+        assert mgr.last_restored_step == 3
+        np.testing.assert_array_equal(
+            np.asarray(out["model"]["w0"]),
+            np.asarray(_mixed_state(3.0)["model"]["w0"]))
+    root = str(tmp_path)
     assert storage_cli.main(["--root", root, "gc", "--orphans",
                              "--orphan-grace", "0"]) == 0
     assert storage_cli.main(["--root", root, "verify"]) == 0

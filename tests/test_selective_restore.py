@@ -151,6 +151,45 @@ def test_selective_restore_from_quantized_save_skips_optimizer_bytes(
         assert mgr.last_restore_stats.bytes_read == MODEL_BYTES
 
 
+def test_tampered_quantized_shard_fails_restore_but_not_clean_domains(
+        tmp_path):
+    """Per-chunk fused digests localize corruption: flipping a byte inside
+    a quantized optimizer payload fails `storage.cli verify` and any
+    restore that decodes those bytes — while a model-only selective
+    restore of the *same shard* still succeeds, because domain selection
+    never reads the damaged chunk."""
+    import glob
+    import os
+
+    from faults import tamper_file
+    from repro.core import step_dir
+    from repro.core.layout import FileReader
+    from repro.storage import cli as storage_cli
+
+    pol = CheckpointPolicy(engine=EnginePolicy(host_cache_bytes=1 << 24),
+                           providers=four_provider_registry(),
+                           delta=DeltaPolicy(keyframe_every=2))
+    state = big_state(1)
+    with CheckpointManager.from_policy(str(tmp_path), pol) as mgr:
+        mgr.save(1, state, blocking=True)
+        mgr.wait_for_commit(1)
+    sdir = step_dir(str(tmp_path), 1)
+    [f] = glob.glob(os.path.join(sdir, "*.dsllm"))
+    # aim the flip at the quantized optimizer tensor's first fused chunk
+    r = FileReader(f)
+    ent = next(t for t in r.tensors.values() if "int8q" in (t.codec or ""))
+    assert ent.enc_chunks and ent.enc_chunks[0][4] is not None
+    tamper_file(f, offset=ent.enc_chunks[0][0] + 5, nbytes=1)
+    assert storage_cli.main(["--root", str(tmp_path), "verify"]) == 1
+    with CheckpointManager.from_policy(str(tmp_path), pol) as mgr2:
+        with pytest.raises(Exception):   # digest/frame check mid-decode
+            mgr2.restore(big_state(0), step=1, domains=("optimizer",))
+        out = mgr2.restore(big_state(0), step=1, domains=("model",))
+        assert mgr2.last_restore_stats.bytes_read == MODEL_BYTES
+        np.testing.assert_array_equal(np.asarray(out["model"]["w"]),
+                                      np.asarray(state["model"]["w"]))
+
+
 def test_serving_goes_through_selective_restore(tmp_path):
     state = big_state(3)
     with CheckpointManager.from_policy(str(tmp_path)) as mgr:

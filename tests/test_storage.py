@@ -230,6 +230,55 @@ def test_verify_detects_bitrot(tmp_path):
                              "--fast"]) == 0  # sizes alone can't see it
 
 
+def test_streamed_checksums_commit_clean_and_catch_fused_tamper(tmp_path):
+    """The fused-encode pipeline streams the whole-file checksum at write
+    time and the commit lane reuses it instead of re-reading the shard:
+    the committed manifest hash must equal an independent read-back hash
+    for delta- and quantized-encoded shards alike, `verify` must pass
+    clean, and a post-commit byte flip inside a fused payload must fail
+    it — proving the reused (never re-read) hash still audits the disk."""
+    from faults import tamper_file
+    from repro.core import (CheckpointPolicy, DeltaPolicy,
+                            StateProviderRegistry)
+    from repro.core.layout import FileReader
+
+    rng = np.random.default_rng(0)
+    def state(i):
+        return {"model": {"w": jnp.asarray(
+                    rng.standard_normal(65_536).astype(np.float32)) + i},
+                "optimizer": {"m": jnp.asarray(
+                    rng.standard_normal(65_536).astype(np.float32))},
+                "meta": {"step": i}}
+
+    pol = CheckpointPolicy(
+        delta=DeltaPolicy(keyframe_every=2),
+        providers=(StateProviderRegistry()
+                   .add_rule(provider="quantized", domain="optimizer",
+                             dtype="float32")
+                   .add_rule(provider="auto")))
+    with CheckpointManager.from_policy(str(tmp_path), pol) as mgr:
+        mgr.save(1, state(1), blocking=True)   # keyframe + quantized
+        mgr.save(2, state(2), blocking=True)   # delta + quantized
+        mgr.wait_for_commit(2)
+        for s in (1, 2):
+            man = mgr.repository.manifest(s)
+            for fe in man.files:
+                path = os.path.join(step_dir(str(tmp_path), s), fe.name)
+                assert fe.checksum == file_checksum(path), (s, fe.name)
+    assert storage_cli.main(["--root", str(tmp_path), "verify"]) == 0
+    # flip a byte inside a fused-encoded chunk of the delta step's shard
+    sdir = step_dir(str(tmp_path), 2)
+    [f] = glob.glob(os.path.join(sdir, "*.dsllm"))
+    enc = [c for t in FileReader(f).tensors.values()
+           for c in (t.enc_chunks or ())]
+    assert enc and all(c[4] is not None for c in enc), \
+        "fused per-chunk digests missing from the footer"
+    tamper_file(f, offset=enc[0][0] + 3, nbytes=1)
+    assert storage_cli.main(["--root", str(tmp_path), "verify"]) == 1
+    assert storage_cli.main(["--root", str(tmp_path), "verify",
+                             "--step", "2"]) == 1
+
+
 # ------------------------------------------------------- cascade + restore
 def test_cascade_replicates_and_rehydrates(tmp_path):
     remote = Tier("peer", MemoryBackend())
