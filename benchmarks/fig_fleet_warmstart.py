@@ -1,0 +1,338 @@
+"""Fig (fleet warm-start): remote-tier bytes + p99 replica-ready time.
+
+A new model lands on the object-store tier and R serving replicas must
+warm-start *now*. The naive shape — every replica issues its own full
+tier read — multiplies remote-tier egress by R and serializes on the
+store's shared pipe. The fleet fabric (``repro.fleet``) collapses it:
+
+* small objects ride the shared read-through :class:`FleetCache`
+  (single-flight: R concurrent misses → one remote read);
+* large shard files are assembled through :class:`PeerExchange` — each
+  replica reads a disjoint ranged slice set (the restore planner's
+  ``plan_ranged_slices``) and swaps for the rest, bittorrent-style;
+* a fleet already holding step *k* pulls only the delta chain to the
+  new step, never a fresh keyframe (``fleet.delta_pull``).
+
+Scenarios, against one bandwidth-throttled shared-pipe
+:class:`ObjectStoreBackend` (each replica gets its own local tier, so
+every byte a replica ends up with was moved by remote read, peer
+exchange, or cache hit — nothing is shared through the filesystem):
+
+* ``cold``  × R ∈ {1, 8, 64} × {naive, fleet} — empty replicas restore
+  the keyframe step through ``load_params_for_serving``; measured:
+  remote ``bytes_out`` amplification (vs one checkpoint's bytes) and
+  p99 replica-ready time.
+* ``delta`` × R = 8 (fleet) — replicas already hold step 1 locally and
+  warm to the delta step 2; measured: remote bytes vs the delta step's
+  bytes (the chain bound) and vs the keyframe's bytes.
+
+``--check`` gates against ``benchmarks/baselines/
+fig_fleet_warmstart_baseline.json``: fleet amplification at R=64 stays
+≤ ~1.2× one checkpoint (naive measures ≈ R×), fleet p99 beats naive
+p99, and the delta pull moves only chain bytes. Every replica
+byte-compares its restored parameters, so a corrupt exchange can never
+pass as a win.
+
+    PYTHONPATH=src python -m benchmarks.run --quick --only fig_fleet_warmstart
+    PYTHONPATH=src python -m benchmarks.fig_fleet_warmstart --quick --check
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import shutil
+import sys
+import threading
+import time
+from typing import Dict, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (CheckpointManager, CheckpointPolicy, DeltaPolicy,
+                        EnginePolicy, StoragePolicy)
+from repro.fleet import FleetFabric
+from repro.serving.engine import load_params_for_serving
+from repro.storage import CheckpointRepository, ObjectStoreBackend, Tier
+
+from .common import RESULTS_DIR, TempDir, save_results
+
+REPLICAS = (1, 8, 64)
+N_TENSORS = 4
+SHAPE = (1024, 1024)          # 4 × 4 MiB fp32 = 16 MiB checkpoint
+SHAPE_QUICK = (512, 256)      # 4 × 512 KiB = 2 MiB (CI smoke)
+SLICE_BYTES = 256 << 10       # peer-exchange slice (quick: 128 KiB)
+SLICE_BYTES_QUICK = 128 << 10
+REMOTE_LATENCY_S = 0.002
+REMOTE_BANDWIDTH_MBPS = 400.0  # shared pipe: naive R=64 pays ~R× this
+KEYFRAME_EVERY = 4             # save 1 = keyframe, save 2 = delta
+MUTATE_ROWS = 101              # ~1% of rows move between saves
+BASELINE = os.path.join(os.path.dirname(__file__), "baselines",
+                        "fig_fleet_warmstart_baseline.json")
+
+
+def _initial_state(shape) -> Dict:
+    rng = np.random.default_rng(7)
+    model = {f"w{i:02d}": jnp.asarray(
+        rng.standard_normal(shape).astype(np.float32))
+        for i in range(N_TENSORS)}
+    return {"model": model, "meta": {"step": 0, "note": "fleet"}}
+
+
+def _mutate(state, step: int) -> Dict:
+    model = {k: v.at[::MUTATE_ROWS].add(np.float32(1e-3))
+             for k, v in state["model"].items()}
+    return {"model": model, "meta": {"step": step, "note": "fleet"}}
+
+
+def _expected(state) -> Dict[str, np.ndarray]:
+    return {k: np.asarray(v) for k, v in state["model"].items()}
+
+
+def _p99(times: List[float]) -> float:
+    s = sorted(times)
+    return s[max(0, math.ceil(0.99 * len(s)) - 1)]
+
+
+def _publish(d: str, remote: ObjectStoreBackend, shape,
+             step1_copy: str) -> Dict:
+    """Train-side: commit keyframe step 1 + delta step 2, cascade both to
+    the remote tier, and snapshot the local dir at step 1 (the delta
+    scenario's 'fleet already on step k' starting point)."""
+    state = _initial_state(shape)
+    payload = sum(v.nbytes for v in state["model"].values())
+    mgr = CheckpointManager.from_policy(
+        d, CheckpointPolicy(
+            engine=EnginePolicy(host_cache_bytes=payload * 3 + (64 << 20),
+                                flush_threads=2),
+            storage=StoragePolicy(tiers=(Tier("object", remote),)),
+            delta=DeltaPolicy(keyframe_every=KEYFRAME_EVERY)))
+    state = _mutate(state, 1)
+    mgr.save(1, state, blocking=True)
+    mgr.wait_for_commit(1)
+    mgr.repository.wait_cascaded()
+    shutil.copytree(d, step1_copy)  # quiescent: step 1 committed+cascaded
+    expected1 = _expected(state)
+    state = _mutate(state, 2)
+    mgr.save(2, state, blocking=True)
+    mgr.wait_for_commit(2)
+    mgr.repository.wait_cascaded()
+    out = {
+        "expected1": expected1, "expected2": _expected(state),
+        "keyframe_bytes": mgr.repository.manifest(1).total_bytes,
+        "delta_bytes": mgr.repository.manifest(2).total_bytes,
+    }
+    mgr.close()
+    return out
+
+
+def _fan_out(remote: ObjectStoreBackend, replicas: int, step: int,
+             expected: Dict[str, np.ndarray], fabric: Optional[FleetFabric],
+             seed_dir: Optional[str] = None) -> dict:
+    """R replica threads, each with its own local tier, restoring
+    ``step`` via ``load_params_for_serving`` — through ``fabric`` when
+    given, direct per-replica tier reads otherwise. Every replica
+    byte-compares the restored parameters against the training state."""
+    b0, r0 = remote.stats["bytes_out"], remote.stats["n_requests"]
+    times: List[Optional[float]] = [None] * replicas
+    errors: List[BaseException] = []
+    barrier = threading.Barrier(replicas)
+    with TempDir() as d:
+        def replica(i: int) -> None:
+            try:
+                rdir = os.path.join(d, f"replica{i:03d}")
+                if seed_dir is not None:
+                    shutil.copytree(seed_dir, rdir)
+                repo = CheckpointRepository(
+                    rdir, remote_tiers=[Tier("object", remote)],
+                    auto_cascade=False, auto_gc=False)
+                tpl = {k: np.empty(v.shape, v.dtype)
+                       for k, v in expected.items()}
+                barrier.wait()
+                t0 = time.perf_counter()
+                params, _stats = load_params_for_serving(
+                    rdir, tpl, step=step, threads=1, repository=repo,
+                    fleet=fabric)
+                times[i] = time.perf_counter() - t0
+                for k, v in expected.items():
+                    if not np.array_equal(np.asarray(params[k]), v):
+                        raise AssertionError(
+                            f"replica {i}: restored {k!r} differs from "
+                            f"the training state")
+                repo.close()
+            except BaseException as exc:  # noqa: BLE001 — re-raised below
+                errors.append(exc)
+                try:
+                    barrier.abort()
+                except Exception:  # noqa: BLE001
+                    pass
+
+        t_wall = time.perf_counter()
+        threads = [threading.Thread(target=replica, args=(i,), daemon=True)
+                   for i in range(replicas)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        if errors:
+            raise errors[0]
+    ready = [t for t in times if t is not None]
+    peer = 0
+    if fabric is not None:
+        st = fabric.step_stats().get(step, {})
+        peer = int(st.get("peer_bytes", 0))
+    return {
+        "remote_bytes": remote.stats["bytes_out"] - b0,
+        "remote_requests": remote.stats["n_requests"] - r0,
+        "peer_bytes": peer,
+        "ready_p99_s": _p99(ready),
+        "ready_mean_s": float(np.mean(ready)),
+        "wall_s": time.perf_counter() - t_wall,
+    }
+
+
+def run(quick: bool = False) -> List[dict]:
+    shape = SHAPE_QUICK if quick else SHAPE
+    slice_bytes = SLICE_BYTES_QUICK if quick else SLICE_BYTES
+    remote = ObjectStoreBackend(latency_s=REMOTE_LATENCY_S,
+                                bandwidth_mbps=REMOTE_BANDWIDTH_MBPS)
+    rows: List[dict] = []
+    with TempDir() as pub:
+        d = os.path.join(pub, "train")
+        step1_copy = os.path.join(pub, "fleet-at-step1")
+        info = _publish(d, remote, shape, step1_copy)
+        kf_bytes, delta_bytes = info["keyframe_bytes"], info["delta_bytes"]
+        for mode in ("naive", "fleet"):
+            for r in REPLICAS:
+                fabric = FleetFabric(slice_bytes=slice_bytes) \
+                    if mode == "fleet" else None  # cold cache per scenario
+                m = _fan_out(remote, r, 1, info["expected1"], fabric)
+                rows.append({
+                    "scenario": "cold", "mode": mode, "replicas": r,
+                    "ckpt_bytes": kf_bytes,
+                    "amplification": m["remote_bytes"] / kf_bytes,
+                    **m,
+                })
+        # fleet on step 1 warms to the delta step 2: chain bytes only
+        fabric = FleetFabric(slice_bytes=slice_bytes)
+        m = _fan_out(remote, 8, 2, info["expected2"], fabric,
+                     seed_dir=step1_copy)
+        rows.append({
+            "scenario": "delta", "mode": "fleet", "replicas": 8,
+            "ckpt_bytes": delta_bytes,
+            "amplification": m["remote_bytes"] / kf_bytes,
+            **m,
+        })
+    def _row(mode: str, r: int) -> dict:
+        return next(x for x in rows if x["scenario"] == "cold"
+                    and x["mode"] == mode and x["replicas"] == r)
+    meta = {
+        "replicas": list(REPLICAS),
+        "bandwidth_mbps": REMOTE_BANDWIDTH_MBPS,
+        "latency_s": REMOTE_LATENCY_S,
+        "slice_bytes": slice_bytes,
+        "keyframe_bytes": kf_bytes,
+        "delta_step_bytes": delta_bytes,
+        "amp_naive_64": _row("naive", 64)["amplification"],
+        "amp_fleet_64": _row("fleet", 64)["amplification"],
+        "p99_naive_64": _row("naive", 64)["ready_p99_s"],
+        "p99_fleet_64": _row("fleet", 64)["ready_p99_s"],
+        "delta_remote_bytes": rows[-1]["remote_bytes"],
+        "delta_fraction": rows[-1]["remote_bytes"] / kf_bytes,
+    }
+    save_results("fig_fleet_warmstart", rows, meta=meta)
+    return rows
+
+
+def check(quick: bool = True) -> int:
+    """Re-run the quick figure and gate the fleet's transfer bounds
+    against the committed baseline. Returns a process exit status."""
+    with open(BASELINE) as f:
+        bounds = json.load(f)
+    run(quick=quick)
+    with open(os.path.join(RESULTS_DIR, "fig_fleet_warmstart.json")) as f:
+        meta = json.load(f)["meta"]
+    problems: List[str] = []
+    if meta["amp_fleet_64"] > bounds["max_amp_fleet_64"]:
+        problems.append(
+            f"fleet remote-bytes amplification at 64 replicas is "
+            f"{meta['amp_fleet_64']:.3f}× one checkpoint, above the "
+            f"{bounds['max_amp_fleet_64']}× bound — the single-flight "
+            f"cache / peer exchange stopped de-duplicating remote reads")
+    if meta["amp_naive_64"] < bounds["min_amp_naive_64"]:
+        problems.append(
+            f"naive amplification at 64 replicas is only "
+            f"{meta['amp_naive_64']:.2f}× (expected ≥ "
+            f"{bounds['min_amp_naive_64']}×) — the baseline scenario no "
+            f"longer measures per-replica full reads, so the fleet "
+            f"comparison is meaningless")
+    if meta["amp_fleet_64"] >= meta["amp_naive_64"]:
+        problems.append(
+            f"fleet ({meta['amp_fleet_64']:.2f}×) did not beat naive "
+            f"({meta['amp_naive_64']:.2f}×) on remote bytes at 64 replicas")
+    if meta["p99_fleet_64"] > meta["p99_naive_64"] * bounds["max_p99_ratio"]:
+        problems.append(
+            f"fleet p99 replica-ready time "
+            f"({meta['p99_fleet_64'] * 1e3:.0f} ms) exceeds "
+            f"{bounds['max_p99_ratio']}× naive "
+            f"({meta['p99_naive_64'] * 1e3:.0f} ms) — de-duplicating "
+            f"remote reads must not slow the fleet down")
+    chain_bound = (meta["delta_step_bytes"] * bounds["delta_chain_overhead"]
+                   + bounds["delta_slack_bytes"])
+    if meta["delta_remote_bytes"] > chain_bound:
+        problems.append(
+            f"delta pull moved {meta['delta_remote_bytes']} B remote for "
+            f"a {meta['delta_step_bytes']} B delta step (bound "
+            f"{chain_bound:.0f} B) — a fleet on step k is re-reading "
+            f"more than the chain")
+    if meta["delta_fraction"] > bounds["max_delta_fraction"]:
+        problems.append(
+            f"delta pull cost {meta['delta_fraction']:.3f}× the keyframe "
+            f"bytes (max {bounds['max_delta_fraction']}) — the "
+            f"delta-aware path has degraded toward full re-reads")
+    if problems:
+        print("fig_fleet_warmstart REGRESSION:", file=sys.stderr)
+        for p in problems:
+            print(f"  - {p}", file=sys.stderr)
+        return 1
+    print(f"fig_fleet_warmstart check OK: amp_fleet_64="
+          f"{meta['amp_fleet_64']:.3f}x (naive {meta['amp_naive_64']:.1f}x) "
+          f"delta_pull={meta['delta_remote_bytes']} B for a "
+          f"{meta['delta_step_bytes']} B chain step")
+    return 0
+
+
+def summarize(rows) -> List[str]:
+    lines = []
+    for r in rows:
+        lines.append(
+            f"fig_fleet_warmstart/{r['scenario']}-{r['mode']}-"
+            f"{r['replicas']},"
+            f"{r['wall_s'] * 1e6:.0f},"
+            f"amp={r['amplification']:.2f} "
+            f"remote={r['remote_bytes'] >> 10}KiB "
+            f"peer={r['peer_bytes'] >> 10}KiB "
+            f"p99={r['ready_p99_s'] * 1e3:.0f}ms")
+    return lines
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--check", action="store_true",
+                    help="gate remote-bytes amplification, p99 ordering "
+                         "and the delta-chain transfer bound against the "
+                         "committed baseline (exit 1 on regression)")
+    args = ap.parse_args(argv)
+    if args.check:
+        return check(quick=True)
+    for line in summarize(run(quick=args.quick)):
+        print(line)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -19,8 +19,9 @@ import time
 from . import (fig04_serialization, fig07_throughput, fig08_iteration,
                fig09_end_to_end, fig12_dp_scaling, fig13_frequency,
                fig14_flush, fig15_timeline, fig_breakdown, fig_differential,
-               fig_encode, fig_multirank, fig_quantized, fig_restore,
-               fig_tiered, table1_heterogeneity, table3_breakdown)
+               fig_encode, fig_fleet_warmstart, fig_multirank, fig_quantized,
+               fig_restore, fig_tiered, table1_heterogeneity,
+               table3_breakdown)
 from .common import maybe_tracing
 
 MODULES = {
@@ -35,6 +36,7 @@ MODULES = {
     "fig_breakdown": fig_breakdown,
     "fig_differential": fig_differential,
     "fig_encode": fig_encode,
+    "fig_fleet_warmstart": fig_fleet_warmstart,
     "fig_multirank": fig_multirank,
     "fig_quantized": fig_quantized,
     "fig_restore": fig_restore,

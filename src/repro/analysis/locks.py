@@ -20,6 +20,10 @@ rank    lock                   owner
 20      barrier.cond           ``dist.barrier.CollectiveBarrier._cond``
 30      manager.delta_tracker  ``core.checkpoint._DeltaChainTracker._lock``
 40      repository.state       ``storage.repository.CheckpointRepository._lock``
+42      fleet.fabric           ``fleet.fabric.FleetFabric._lock``
+44      fleet.cache            ``fleet.cache.FleetCache._lock``
+46      fleet.exchange         ``fleet.peer.PeerExchange._lock``
+48      fleet.session          ``fleet.peer._SwapSession._cond``
 50      engine.save_progress   per-save closure lock in ``DataMovementEngine.submit``
 52      engine.file_state      ``core.engine._FileState.lock``
 54      snapshot.cache         ``core.state_provider.SnapshotCache._lock``

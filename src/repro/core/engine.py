@@ -510,6 +510,13 @@ class DataMovementEngine:
                     nb_written = len(payload)
                 else:
                     op.writer.write_at(chunk.offset, chunk.data)
+                    if chunk.digest is not None \
+                            and chunk.raw_range is not None:
+                        # keyframe/raw chunk saved under manifest
+                        # checksums: record the producer's per-chunk
+                        # digest so verify can localize a flipped chunk
+                        op.writer.record_raw_chunk(
+                            chunk.name, *chunk.raw_range, chunk.digest)
                 if nb_written is not None:
                     nb = nb_written
                 elif isinstance(chunk.data, bytes):

@@ -73,6 +73,12 @@ class TensorEntry:
     # ``None`` when the save ran without manifest checksums, or in footers
     # written before digests existed (legacy 4-tuples).
     enc_chunks: Optional[List[Tuple[int, int, int, int, Optional[int]]]] = None
+    # Raw (fixed-offset) tensors saved with manifest checksums:
+    # (raw_lo, raw_hi, digest) per write chunk — the keyframe/raw
+    # counterpart of ``enc_chunks`` digests, so verify can localize a
+    # flipped chunk inside a keyframe instead of only failing the whole
+    # file's checksum. ``None`` in legacy footers or checksum-less saves.
+    raw_chunks: Optional[List[Tuple[int, int, Optional[int]]]] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -147,6 +153,10 @@ class FileWriter:
         self._enc_meta: Dict[str, Dict[str, Any]] = {}
         self._enc_chunks: Dict[str, List[Tuple[int, int, int, int,
                                                Optional[int]]]] = {}
+        # Per-chunk digests of raw fixed-offset writes (keyframes/plain
+        # tensors under manifest checksums), recorded by the flush lanes.
+        self._raw_chunks: Dict[str, List[Tuple[int, int,
+                                               Optional[int]]]] = {}
         self._csum = None
         if track_checksum:
             from repro.storage.file_format import StreamingFileChecksum
@@ -217,6 +227,17 @@ class FileWriter:
                 (off, len(payload), int(raw_lo), int(raw_hi),
                  int(digest) if digest is not None else None))
 
+    def record_raw_chunk(self, name: str, raw_lo: int, raw_hi: int,
+                         digest: Optional[int]) -> None:
+        """Record the per-chunk digest of one raw fixed-offset write;
+        thread-safe (called from concurrent flush lanes). The footer gains
+        a ``raw_chunks`` list per tensor so verify can localize a flipped
+        chunk in a keyframe the same way it can in a delta."""
+        with self._append_lock:
+            self._raw_chunks.setdefault(name, []).append(
+                (int(raw_lo), int(raw_hi),
+                 int(digest) if digest is not None else None))
+
     def set_meta(self, key: str, value: Any) -> None:
         self._extra_meta[key] = value
 
@@ -250,8 +271,40 @@ class FileWriter:
                 enc_chunks=chunks))
         return entries
 
+    def _with_raw_chunks(self, entries: List[TensorEntry]
+                         ) -> List[TensorEntry]:
+        """Attach recorded raw-chunk digests to their fixed-offset entries
+        and fold them into a tensor-level checksum (same (i+1)-weighted
+        fold the encoded path uses) — no extra read of the payload."""
+        out = []
+        for t in entries:
+            chunks = self._raw_chunks.get(t.name)
+            if not chunks:
+                out.append(t)
+                continue
+            chunks = sorted(chunks, key=lambda c: c[0])
+            covered = 0
+            for lo, hi, _dig in chunks:
+                if lo != covered:
+                    break
+                covered = hi
+            if covered != t.nbytes:
+                raise ValueError(
+                    f"raw tensor {t.name!r}: digest records cover "
+                    f"{covered} of {t.nbytes} raw bytes — a flush lane "
+                    f"lost a chunk record")
+            csum = None
+            if all(c[2] is not None for c in chunks):
+                csum = 0
+                for i, c in enumerate(chunks):
+                    csum = (csum + (i + 1) * c[2]) % (1 << 32)
+            out.append(dataclasses.replace(t, raw_chunks=chunks,
+                                           checksum=csum))
+        return out
+
     def finalize(self, tensor_checksums: Optional[Dict[str, int]] = None) -> None:
-        tensors = self.layout.tensors + self._encoded_entries()
+        tensors = self._with_raw_chunks(self.layout.tensors) \
+            + self._encoded_entries()
         if tensor_checksums:
             tensors = [dataclasses.replace(t, checksum=tensor_checksums[t.name])
                        if t.name in tensor_checksums else t
@@ -328,7 +381,10 @@ class FileReader:
                 # sees one shape
                 "enc_chunks": ([tuple(c) + (None,) * (5 - len(c))
                                 for c in t["enc_chunks"]]
-                               if t.get("enc_chunks") is not None else None)})
+                               if t.get("enc_chunks") is not None else None),
+                # absent in footers written before raw-chunk digests
+                "raw_chunks": ([tuple(c) for c in t["raw_chunks"]]
+                               if t.get("raw_chunks") is not None else None)})
             for t in footer["tensors"]
         }
         self.objects: Dict[str, ObjectEntry] = {
@@ -418,6 +474,40 @@ class FileReader:
                 f"{name!r}: encoded chunks cover {covered} of {e.nbytes} "
                 f"raw bytes — corrupt or truncated footer")
         return out
+
+    def locate_corrupt_chunks(self) -> List[str]:
+        """Re-read every tensor chunk that carries a footer digest (raw
+        ``raw_chunks`` and encoded ``enc_chunks`` alike) and return a
+        human-readable locator per mismatch, e.g.
+        ``"w00 raw chunk [0:16777216)"``. Empty list = every digested
+        chunk verifies. Verify-time localization: when a file-level
+        checksum fails, this names the flipped chunk instead of leaving a
+        multi-GB haystack."""
+        from repro.core.codecs import payload_digest
+        from repro.core.reduction import _decompress
+        bad: List[str] = []
+        with open(self.path, "rb") as f:
+            for name, e in sorted(self.tensors.items()):
+                for lo, hi, dig in e.raw_chunks or ():
+                    if dig is None:
+                        continue
+                    f.seek(e.offset + lo)
+                    data = f.read(hi - lo)
+                    if len(data) != hi - lo \
+                            or payload_digest(data) != dig:
+                        bad.append(f"{name} raw chunk [{lo}:{hi})")
+                for off, comp_nb, lo, hi, dig in e.enc_chunks or ():
+                    if dig is None:
+                        continue
+                    f.seek(off)
+                    try:
+                        raw = _decompress(f.read(comp_nb))
+                    except Exception:
+                        bad.append(f"{name} {e.codec} chunk [{lo}:{hi})")
+                        continue
+                    if payload_digest(raw) != dig:
+                        bad.append(f"{name} {e.codec} chunk [{lo}:{hi})")
+        return bad
 
     def read_object_raw(self, name: str) -> bytes:
         """Serialized payload bytes (used by offline consolidation)."""

@@ -129,6 +129,19 @@ def _contiguous_runs(local_region: Region, shape: Tuple[int, ...],
             run_bytes
 
 
+def plan_ranged_slices(nbytes: int, slice_bytes: int = 16 << 20
+                       ) -> List[Tuple[int, int]]:
+    """``[(offset, nbytes), ...]`` fixed-cap slices covering ``[0, nbytes)``.
+
+    The ranged-read splitting discipline shared by the restore engine
+    (``_emit_tasks`` splits giant runs so they parallelize across the
+    thread pool) and the fleet's peer exchange (which deals the same
+    disjoint slices to concurrent replicas so each remote byte is read by
+    exactly one of them)."""
+    cap = max(1, int(slice_bytes))
+    return [(lo, min(cap, nbytes - lo)) for lo in range(0, nbytes, cap)]
+
+
 def _preadv_full(fd: int, mv: memoryview, offset: int) -> None:
     pos = 0
     end = len(mv)
@@ -541,12 +554,10 @@ class RestoreEngine:
         pos = 0
         cap = self.read_chunk_bytes
         for path, off, nb in ranges:
-            lo = 0
-            while lo < nb:  # split giant runs so they parallelize
-                piece = min(cap, nb - lo)
+            # split giant runs so they parallelize
+            for lo, piece in plan_ranged_slices(nb, cap):
                 mv = memoryview(out[pos + lo:pos + lo + piece])
                 tasks.append(self._make_pread_task(run, path, off + lo, mv))
-                lo += piece
             pos += nb
 
     def _make_pread_task(self, run: _Run, path: str, offset: int,

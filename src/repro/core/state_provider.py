@@ -46,7 +46,7 @@ from repro.obs.metrics import metrics as obs_metrics
 
 from .codecs import (DELTA_CODEC, INT8_CODEC, INT8_ROW_BYTES,
                      encode_delta_chunk, encode_int8_block,
-                     int8_encoded_nbytes)
+                     int8_encoded_nbytes, payload_digest)
 from .host_cache import HostCache, Reservation
 from .layout import FileLayout, align_up
 
@@ -241,6 +241,13 @@ class TensorStateProvider(StateProvider):
         self._staged = 0
         self._cond = threading.Condition()
         self._released = False
+        # Set by the engine when the save runs with manifest checksums:
+        # raw chunks then carry a per-chunk digest of their bytes,
+        # recorded in the file footer so verify can localize a flipped
+        # chunk inside a keyframe/raw tensor — not just fail the whole
+        # file. Encoded providers override the digest with their fused
+        # encoder's output instead.
+        self.checksum_chunks: bool = False
 
     # -- residency wiring ----------------------------------------------------
     @property
@@ -295,8 +302,19 @@ class TensorStateProvider(StateProvider):
                         self._cond.wait()
             yield Chunk(name=self.name, kind="tensor", data=view[pos:end],
                         offset=self.offset + pos if self.offset is not None else None,
-                        last=end >= n)
+                        raw_range=(pos, end), last=end >= n,
+                        digest=self._raw_digest(view[pos:end]))
             pos = end
+
+    def _raw_digest(self, data) -> Optional[int]:
+        """Per-chunk digest of a raw chunk's bytes while they are hot from
+        the staging copy. Deliberately *not* counted against
+        ``engine.bytes_encode_read`` — that counter is the encoded routes'
+        single-read-of-staged-bytes equality and raw chunks never encode."""
+        if not self.checksum_chunks:
+            return None
+        with obs.span("encode.digest", tensor=self.name, bytes=len(data)):
+            return payload_digest(np.frombuffer(data, dtype=np.uint8))
 
 
 def xor_bytes(cur: np.ndarray, prev: np.ndarray) -> np.ndarray:
@@ -360,10 +378,8 @@ class DeltaStateProvider(TensorStateProvider):
         # Set by the engine: bounds in-flight freshly-allocated XOR
         # payload bytes between producer and flush lanes.
         self.encode_budget: Optional[EncodeBudget] = None
-        # Set by the engine when the save runs with manifest checksums:
-        # the fused encoder then emits a per-chunk payload digest in the
-        # same pass that produced the delta.
-        self.checksum_chunks: bool = False
+        # checksum_chunks (inherited) additionally makes the fused encoder
+        # emit a per-chunk payload digest in the same pass as the delta.
         assert len(prev) == self.nbytes, (
             f"snapshot cache entry for {name} is {len(prev)} B, "
             f"tensor is {self.nbytes} B")
@@ -395,13 +411,17 @@ class DeltaStateProvider(TensorStateProvider):
                             self._cond.wait()
                 cur = np.frombuffer(view[pos:end], dtype=np.uint8)
                 if self.keyframe:
-                    # refresh the snapshot, stream the raw bytes
+                    # refresh the snapshot, stream the raw bytes; the
+                    # per-chunk digest rides the same pass while the bytes
+                    # are hot from the snapshot memcpy, closing the
+                    # keyframe half of the verify-localization story
                     prev[pos:end] = cur
                     yield Chunk(name=self.name, kind="tensor",
                                 data=view[pos:end],
                                 offset=self.offset + pos
                                 if self.offset is not None else None,
-                                last=end >= n)
+                                raw_range=(pos, end), last=end >= n,
+                                digest=self._raw_digest(view[pos:end]))
                 else:
                     nb = end - pos
                     budget = self.encode_budget
@@ -479,9 +499,8 @@ class QuantizedStateProvider(TensorStateProvider):
         # payload allocations are bounded by the engine's encode budget.
         self.capture_gate: Optional[threading.Event] = None
         self.encode_budget: Optional[EncodeBudget] = None
-        # see DeltaStateProvider: fused per-chunk payload digests, enabled
-        # by the engine when the save runs with manifest checksums
-        self.checksum_chunks: bool = False
+        # checksum_chunks (inherited): fused per-chunk payload digests,
+        # enabled by the engine when the save runs with manifest checksums
 
     @property
     def fixed_offset(self) -> bool:

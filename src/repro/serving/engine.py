@@ -23,7 +23,8 @@ def load_params_for_serving(directory: str, params_template: Any,
                             step: Optional[int] = None,
                             threads: Optional[int] = None,
                             throttle_mbps: Optional[float] = None,
-                            repository: Optional[Any] = None):
+                            repository: Optional[Any] = None,
+                            fleet: Optional[Any] = None):
     """Restore *model parameters only* straight into a serving process.
 
     Serving needs no optimizer state, so this restores the ``model``
@@ -41,6 +42,15 @@ def load_params_for_serving(directory: str, params_template: Any,
     :class:`~repro.storage.CheckpointRepository` configured with the
     training job's remote tiers) to serve from remote storage; otherwise a
     local-tier view of ``directory`` is used.
+
+    ``fleet`` attaches a :class:`~repro.fleet.FleetFabric` to the
+    repository for the fleet warm-start path: concurrent replicas loading
+    the same step share one remote read per object through the fabric's
+    read-through cache and peer slice exchange, and replicas already
+    holding the step's chain prefix pull only the delta chain. The fabric
+    stays attached (it is shared, idempotent state) so every replica
+    hitting this repository benefits; pass
+    ``repository.attach_fleet(None)`` to detach explicitly.
 
     Returns ``(params, stats)`` where ``stats`` is a
     :class:`~repro.core.restore.RestoreStats` (check ``bytes_read`` to see
@@ -61,6 +71,8 @@ def load_params_for_serving(directory: str, params_template: Any,
     if repo is None:
         repo = CheckpointRepository(directory, auto_cascade=False,
                                     auto_gc=False)
+    if fleet is not None:
+        repo.attach_fleet(fleet)
     engine = RestoreEngine(threads=threads, throttle_mbps=throttle_mbps)
     tree, stats, _step = restore_from_repository(
         repo, {"model": params_template}, step=step, engine=engine,

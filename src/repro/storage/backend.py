@@ -63,6 +63,17 @@ class StorageBackend:
     def size(self, key: str) -> int:
         raise NotImplementedError
 
+    # -- ranged reads --------------------------------------------------------
+    def get_range(self, key: str, offset: int, nbytes: int) -> bytes:
+        """Read ``nbytes`` of ``key`` starting at ``offset`` (slice
+        semantics: short reads past EOF return the available tail).
+
+        The fleet fabric's peer exchange is built on this — each replica
+        pulls a disjoint slice of a shard file, so the default whole-blob
+        fallback defeats the purpose; real tiers override it with a
+        byte-accurate path (``pread``, HTTP ``Range``)."""
+        return self.get(key)[offset:offset + nbytes]
+
     # -- file helpers (override where a cheaper path exists) -----------------
     def put_file(self, key: str, path: str,
                  part_bytes: int = DEFAULT_PART_BYTES) -> int:
@@ -151,6 +162,14 @@ class LocalBackend(StorageBackend):
         except OSError as exc:
             raise BackendError(f"no such key {key!r}") from exc
 
+    def get_range(self, key: str, offset: int, nbytes: int) -> bytes:
+        try:
+            with open(self._path(key), "rb") as f:
+                f.seek(offset)
+                return f.read(nbytes)
+        except FileNotFoundError as exc:
+            raise BackendError(f"no such key {key!r}") from exc
+
     def put_file(self, key: str, path: str,
                  part_bytes: int = DEFAULT_PART_BYTES) -> int:
         dst = self._path(key)
@@ -219,6 +238,13 @@ class MemoryBackend(StorageBackend):
     def size(self, key: str) -> int:
         return len(self.get(key))
 
+    def get_range(self, key: str, offset: int, nbytes: int) -> bytes:
+        with self._lock:
+            try:
+                return self._blobs[key][offset:offset + nbytes]
+            except KeyError as exc:
+                raise BackendError(f"no such key {key!r}") from exc
+
 
 # ---------------------------------------------------------------------------
 class ObjectStoreBackend(StorageBackend):
@@ -228,6 +254,15 @@ class ObjectStoreBackend(StorageBackend):
     remote store); ``bandwidth_mbps`` throttles payload transfer in both
     directions. Both default to "free" so tests run fast; benchmarks dial
     them in to model a throttled remote tier.
+
+    The bandwidth model is a **shared pipe**: concurrent requests split the
+    configured bandwidth, they do not each get a private copy of it. Each
+    transfer reserves the next window on a single pipe timeline (a
+    monotonic high-water mark advanced under the lock), so N concurrent
+    readers of one checkpoint collectively finish no sooner than
+    ``total_bytes / bandwidth`` — the contention the fleet-warmstart
+    benchmark exists to measure. Latency stays per-request (round trips
+    overlap across connections; bytes on the wire do not).
     """
 
     name = "object"
@@ -242,18 +277,28 @@ class ObjectStoreBackend(StorageBackend):
         self._blobs: Dict[str, bytes] = {}
         self._uploads: Dict[str, Tuple[str, Dict[int, bytes]]] = {}
         self._lock = threading.Lock()
+        self._pipe_free_at = 0.0  # monotonic time the shared pipe drains
         self.stats = {"n_requests": 0, "bytes_in": 0, "bytes_out": 0,
                       "n_multipart": 0}
 
     # -- simulation ----------------------------------------------------------
     def _simulate(self, nbytes: int, direction: str) -> None:
+        done_at = None
         with self._lock:
             self.stats["n_requests"] += 1
             self.stats["bytes_in" if direction == "in" else "bytes_out"] \
                 += nbytes
-        delay = self.latency_s
-        if self.bandwidth_mbps:
-            delay += nbytes / (self.bandwidth_mbps * 1e6)
+            if self.bandwidth_mbps and nbytes:
+                # reserve this transfer's slot on the shared pipe; the
+                # sleep itself happens outside the lock
+                start = max(time.monotonic(), self._pipe_free_at)
+                self._pipe_free_at = start \
+                    + nbytes / (self.bandwidth_mbps * 1e6)
+                done_at = self._pipe_free_at
+        if done_at is not None:
+            delay = (done_at - time.monotonic()) + self.latency_s
+        else:
+            delay = self.latency_s
         if delay > 0:
             time.sleep(delay)
 
@@ -294,6 +339,19 @@ class ObjectStoreBackend(StorageBackend):
                 return len(self._blobs[key])
             except KeyError as exc:
                 raise BackendError(f"no such key {key!r}") from exc
+
+    def get_range(self, key: str, offset: int, nbytes: int) -> bytes:
+        """HTTP ``Range``-style partial GET: only the requested slice
+        crosses the (simulated) wire — the fleet's peer exchange depends
+        on this being byte-accurate."""
+        with self._lock:
+            blob = self._blobs.get(key)
+        if blob is None:
+            self._simulate(0, "out")
+            raise BackendError(f"no such key {key!r}")
+        part = blob[offset:offset + nbytes]
+        self._simulate(len(part), "out")
+        return part
 
     # -- multipart upload ----------------------------------------------------
     def initiate_multipart(self, key: str) -> str:

@@ -2,7 +2,7 @@
 
     python -m repro.storage.cli --root CKPT_DIR ls
     python -m repro.storage.cli --root CKPT_DIR verify [--step N] [--fast]
-    python -m repro.storage.cli --root CKPT_DIR stats [--step N]
+    python -m repro.storage.cli --root CKPT_DIR stats [--step N] [--fleet]
     python -m repro.storage.cli --root CKPT_DIR pin 1200
     python -m repro.storage.cli --root CKPT_DIR unpin 1200
     python -m repro.storage.cli --root CKPT_DIR gc --keep-last 3 \\
@@ -133,11 +133,54 @@ def cmd_verify(args) -> int:
     return 1 if bad or orphans else 0
 
 
+def _cmd_stats_fleet(repo: CheckpointRepository, args) -> int:
+    """Fleet warm-start ledger: per-step remote bytes served vs. bytes
+    peer-exchanged between replicas, from ``.catalog/fleet-stats.json``
+    (persisted by ``repro.fleet.FleetFabric``)."""
+    import json
+    import os
+    path = os.path.join(repo.catalog_dir, "fleet-stats.json")
+    try:
+        with open(path) as f:
+            ledger = json.load(f)
+    except (OSError, ValueError):
+        print(f"(no fleet transfer ledger in {args.root} — attach a "
+              f"repro.fleet.FleetFabric and warm-start some replicas)")
+        return 0
+    steps = ledger.get("steps", {})
+    if args.step is not None:
+        steps = {k: v for k, v in steps.items() if int(k) == args.step}
+        if not steps:
+            print(f"step {args.step}: NOT FOUND — no fleet transfers "
+                  f"recorded")
+            return 1
+    for k in sorted(steps, key=int):
+        st = steps[k]
+        remote = int(st.get("remote_bytes", 0))
+        peer = int(st.get("peer_bytes", 0))
+        total = remote + peer
+        print(f"step {int(k):>10}  replicas={st.get('replicas', 0):<4} "
+              f"remote={_fmt_bytes(remote):>10}  "
+              f"peer={_fmt_bytes(peer):>10}  "
+              f"peer_share={peer / total if total else 0.0:.2f}  "
+              f"cache_hits={st.get('cache_hits', 0)}"
+              f"{'  [delta]' if st.get('delta') else ''}")
+    cache = ledger.get("cache") or {}
+    if cache:
+        print(f"cache: hits={cache.get('hits', 0)} "
+              f"misses={cache.get('misses', 0)} "
+              f"evictions={cache.get('evictions', 0)} "
+              f"remote={_fmt_bytes(int(cache.get('remote_bytes', 0)))}")
+    return 0
+
+
 def cmd_stats(args) -> int:
     """Per-step save/commit timings, bytes by codec and domain, and delta
     chain depth — read back from ``StepManifest`` metadata only, so it
     works on any existing repository with no training process around."""
     repo = _repo(args)
+    if getattr(args, "fleet", False):
+        return _cmd_stats_fleet(repo, args)
     steps = repo.steps()
     if args.step is not None:
         if args.step not in steps:
@@ -238,6 +281,10 @@ def main(argv: Optional[List[str]] = None) -> int:
                        help="per-step commit latency, bytes by codec/"
                             "domain, chain depth (from manifest metadata)")
     p.add_argument("--step", type=int, default=None)
+    p.add_argument("--fleet", action="store_true",
+                   help="fleet warm-start view: per-step remote bytes "
+                        "served vs. peer-exchanged bytes (from the "
+                        "fabric's .catalog/fleet-stats.json ledger)")
     p = sub.add_parser("pin", help="protect a step from GC")
     p.add_argument("step", type=int)
     p = sub.add_parser("unpin", help="remove a GC pin")

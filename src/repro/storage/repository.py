@@ -115,11 +115,16 @@ class VerifyResult:
     missing: List[str] = dataclasses.field(default_factory=list)
     size_mismatch: List[str] = dataclasses.field(default_factory=list)
     checksum_mismatch: List[str] = dataclasses.field(default_factory=list)
+    # per-chunk localization of checksum mismatches, e.g.
+    # "w00.dsllm: w00 raw chunk [0:16777216)" — only for container files
+    # whose footer carries per-chunk digests
+    chunk_mismatch: List[str] = dataclasses.field(default_factory=list)
 
     @property
     def problems(self) -> List[str]:
         return (self.missing + [f"{n} (size)" for n in self.size_mismatch]
-                + [f"{n} (checksum)" for n in self.checksum_mismatch])
+                + [f"{n} (checksum)" for n in self.checksum_mismatch]
+                + [f"{n} (chunk)" for n in self.chunk_mismatch])
 
 
 @dataclasses.dataclass
@@ -256,6 +261,7 @@ class CheckpointRepository:
             # completeness probe; catalog writes will fail loudly.
             pass
         self._local = LocalBackend(self.root)
+        self._fleet: Optional[Any] = None  # repro.fleet.FleetFabric
         self._lock = threading.Lock()  # declared: repository.state (r40)
         self._active: Set[int] = set()        # begun in this process
         self._mid_cascade: Set[int] = set()
@@ -565,8 +571,24 @@ class CheckpointRepository:
             if check_checksums and fe.checksum is not None \
                     and file_checksum(path) != fe.checksum:
                 res.checksum_mismatch.append(fe.name)
+                for loc in self._locate_chunks(path):
+                    res.chunk_mismatch.append(f"{fe.name}: {loc}")
         res.ok = not res.problems
         return res
+
+    @staticmethod
+    def _locate_chunks(path: str) -> List[str]:
+        """Narrow a whole-file checksum mismatch to the damaged chunk(s)
+        using the per-chunk digests in the container footer (raw/keyframe
+        and encoded routes both record them). Best-effort: a file too
+        damaged to parse stays localized at file granularity."""
+        if not path.endswith(".dsllm"):
+            return []
+        try:
+            from repro.core.layout import FileReader
+            return FileReader(path).locate_corrupt_chunks()
+        except Exception:  # noqa: BLE001 — footer itself may be damaged
+            return []
 
     def _local_complete(self, step: int) -> bool:
         """Catalog entry present and every file on disk at manifest size."""
@@ -692,6 +714,14 @@ class CheckpointRepository:
             self._cascade_q.join()
 
     # -------------------------------------------------------------- restore
+    def attach_fleet(self, fabric: Optional[Any]) -> None:
+        """Route this repository's remote re-hydration through a fleet
+        distribution fabric (``repro.fleet.FleetFabric``). The fabric's
+        cache/peer-exchange path replaces direct tier reads on restore
+        resolution; any fabric failure degrades back to direct tier
+        fetches. Pass ``None`` to detach."""
+        self._fleet = fabric
+
     def resolve_for_restore(self, step: int) -> str:
         """Local directory for ``step``, re-hydrating tier-by-tier.
 
@@ -706,6 +736,14 @@ class CheckpointRepository:
         if self._local_complete(step):
             return sdir
         fetch_exc: Optional[BaseException] = None
+        if self._fleet is not None:
+            try:
+                got = self._fleet.fetch_step(self, step)
+                if got is not None:
+                    return got
+            except (BackendError, OSError, ValueError) as exc:
+                # the fabric degrades to direct tier reads below
+                fetch_exc = exc
         for tier in self.remote_tiers:
             try:
                 if not self.tier_has_step(tier, step):
@@ -728,39 +766,61 @@ class CheckpointRepository:
     def _fetch_from_tier(self, tier: Tier, step: int) -> str:
         manifest = StepManifest.from_json_bytes(
             tier.backend.get(catalog_key(step)))
-        staging = os.path.join(self.catalog_dir, "staging",
-                               f"step-{step}-{uuid.uuid4().hex[:8]}")
-        os.makedirs(staging, exist_ok=True)
+        staging = self.new_staging_dir(step)
         try:
             for fe in manifest.files:
-                dst = os.path.join(staging, fe.name)
-                tier.backend.get_file(data_key(step, fe.name), dst)
-                if os.path.getsize(dst) != fe.nbytes:
-                    raise BackendError(
-                        f"tier {tier.name!r} returned {fe.name} with "
-                        f"{os.path.getsize(dst)} B, manifest says "
-                        f"{fe.nbytes} B")
-                if fe.checksum is not None \
-                        and file_checksum(dst) != fe.checksum:
-                    raise BackendError(
-                        f"tier {tier.name!r} returned {fe.name} with a "
-                        f"checksum mismatch (bitrot in remote storage?)")
-            sdir = self.step_dir(step)
-            if os.path.isdir(sdir):
-                shutil.rmtree(sdir)
-            # This IS the sanctioned rehydration helper: every file was
-            # size- and checksum-verified into a private staging dir, and
-            # the one-shot directory rename is the atomic publish step
-            # (manifest re-admission below still happens last).
-            os.replace(staging, sdir)  # ckptlint: disable=CKPT302
+                tier.backend.get_file(data_key(step, fe.name),
+                                      os.path.join(staging, fe.name))
+            return self.admit_fetched_step(step, manifest, staging,
+                                           source=f"tier {tier.name!r}")
         except BaseException:
             shutil.rmtree(staging, ignore_errors=True)
             raise
+
+    def new_staging_dir(self, step: int) -> str:
+        """Private staging directory for a step being re-hydrated (one per
+        fetch attempt; the caller owns cleanup on failure)."""
+        staging = os.path.join(self.catalog_dir, "staging",
+                               f"step-{step}-{uuid.uuid4().hex[:8]}")
+        os.makedirs(staging, exist_ok=True)
+        return staging
+
+    def admit_fetched_step(self, step: int, manifest: StepManifest,
+                           staging: str, *, source: str = "fetch") -> str:
+        """Verify a fully-staged fetch against its manifest and publish it
+        atomically. The single sanctioned re-hydration publish: direct
+        tier fetches and the fleet fabric both funnel through here, so
+        unverified bytes can never become a visible local step. Raises
+        (leaving ``staging`` for the caller to clean up) on any size or
+        checksum mismatch."""
+        for fe in manifest.files:
+            dst = os.path.join(staging, fe.name)
+            if not os.path.isfile(dst):
+                raise BackendError(
+                    f"{source} staged step {step} without {fe.name}")
+            if os.path.getsize(dst) != fe.nbytes:
+                raise BackendError(
+                    f"{source} returned {fe.name} with "
+                    f"{os.path.getsize(dst)} B, manifest says "
+                    f"{fe.nbytes} B")
+            if fe.checksum is not None \
+                    and file_checksum(dst) != fe.checksum:
+                raise BackendError(
+                    f"{source} returned {fe.name} with a checksum "
+                    f"mismatch (bitrot in remote storage?)")
+        sdir = self.step_dir(step)
+        if os.path.isdir(sdir):
+            shutil.rmtree(sdir)
+        # This IS the sanctioned rehydration helper: every file was
+        # size- and checksum-verified into a private staging dir, and
+        # the one-shot directory rename is the atomic publish step
+        # (manifest re-admission below still happens last).
+        os.replace(staging, sdir)  # ckptlint: disable=CKPT302
         # re-admit to the local catalog so the next resolve is a local hit
         self._local.put(catalog_key(step), manifest.to_json_bytes())
         with self._lock:
             self._manifest_cache[step] = manifest
-        return self.step_dir(step)
+        return sdir
 
     # -------------------------------------------------------------------- gc
     def local_footprint_bytes(self) -> int:

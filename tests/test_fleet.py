@@ -1,0 +1,460 @@
+"""Fleet warm-start fabric: read-through cache single-flight, capacity
+pressure under concurrent readers, peer slice exchange (including peers
+dying or corrupting slices mid-exchange), the shared-pipe object-store
+throttle, and the end-to-end fabric path through
+``load_params_for_serving`` + ``stats --fleet``."""
+
+import json
+import os
+import shutil
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (CheckpointManager, CheckpointPolicy, DeltaPolicy,
+                        EnginePolicy, StoragePolicy)
+from repro.fleet import (FLEET_STATS_KEY, ExchangeStats, FleetCache,
+                         FleetFabric, PeerExchange)
+from repro.fleet.peer import _digest
+from repro.serving.engine import load_params_for_serving
+from repro.storage import (BackendError, CheckpointRepository, MemoryBackend,
+                           ObjectStoreBackend, Tier)
+from repro.storage import cli as storage_cli
+
+
+def _fan(n, fn):
+    """Run ``fn(i)`` on n threads; re-raise the first failure."""
+    errors = []
+
+    def wrap(i):
+        try:
+            fn(i)
+        except BaseException as exc:  # noqa: BLE001 — surfaced below
+            errors.append(exc)
+
+    threads = [threading.Thread(target=wrap, args=(i,)) for i in range(n)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    if errors:
+        raise errors[0]
+
+
+# ------------------------------------------------------------- FleetCache
+def test_cache_single_flight_dedup():
+    """K concurrent restorers of one key cause exactly one remote read."""
+    cache = FleetCache(capacity_bytes=1 << 20)
+    calls = []
+
+    def fetch():
+        calls.append(1)
+        time.sleep(0.05)  # hold the flight open while waiters pile up
+        return b"x" * 1000
+
+    out = [None] * 8
+    _fan(8, lambda i: out.__setitem__(i, cache.get_through("k", fetch)))
+    assert sum(calls) == 1
+    assert all(o == b"x" * 1000 for o in out)
+    assert cache.stats["misses"] == 1
+    assert cache.stats["waits"] >= 1
+    # stragglers after the flight closes hit the cache, no new fetch
+    assert cache.get_through("k", fetch) == b"x" * 1000
+    assert sum(calls) == 1 and cache.stats["hits"] >= 1
+
+
+def test_cache_miss_fallthrough_and_lru_eviction():
+    cache = FleetCache(capacity_bytes=1000)
+    assert cache.peek("a") is None  # miss: no flight, no fabrication
+    cache.get_through("a", lambda: b"a" * 400)
+    cache.get_through("b", lambda: b"b" * 400)
+    assert cache.peek("a") == b"a" * 400  # freshens a in LRU order
+    cache.get_through("c", lambda: b"c" * 400)  # evicts b (LRU)
+    assert cache.stats["evictions"] == 1
+    assert cache.peek("b") is None
+    assert cache.peek("a") == b"a" * 400
+    assert cache.peek("c") == b"c" * 400
+    assert cache.used_bytes() <= 1000
+
+
+def test_cache_oversized_object_passes_through_uncached():
+    cache = FleetCache(capacity_bytes=100)
+    calls = []
+
+    def fetch():
+        calls.append(1)
+        time.sleep(0.02)
+        return b"z" * 5000
+
+    out = [None] * 4
+    _fan(4, lambda i: out.__setitem__(i, cache.get_through("big", fetch)))
+    # waiters share the leader's bytes even though nothing was cached
+    assert sum(calls) == 1
+    assert all(o == b"z" * 5000 for o in out)
+    assert cache.used_bytes() == 0
+    assert cache.stats["uncached"] >= 1
+
+
+def test_cache_failed_leader_wakes_waiters_who_retry():
+    """A leader whose fetch raises must not wedge the flight: the waiter
+    retries, becomes leader, and succeeds (cache-miss fallthrough)."""
+    cache = FleetCache(capacity_bytes=1 << 20)
+    first_in = threading.Event()
+    boom = [True]
+
+    def failing():
+        first_in.set()
+        time.sleep(0.05)
+        if boom[0]:
+            boom[0] = False
+            raise BackendError("remote flaked")
+        return b"ok"
+
+    results, errors = [], []
+
+    def caller(i):
+        if i == 1:
+            first_in.wait()  # guarantee thread 0 owns the flight
+        try:
+            results.append(cache.get_through("k", failing))
+        except BackendError as exc:
+            errors.append(exc)
+
+    _fan(2, caller)
+    assert len(errors) == 1        # the leader's caller sees the failure
+    assert results == [b"ok"]      # the waiter retried and succeeded
+    assert cache.get_through("k", failing) == b"ok"  # no stuck flight
+
+
+def test_cache_capacity_pressure_under_concurrent_readers():
+    """Readers racing evictions always see full, correct payloads — an
+    entry evicted mid-read is re-fetched through the flight path, never
+    returned torn."""
+    payloads = {f"k{i}": bytes([i]) * 700 for i in range(8)}
+    cache = FleetCache(capacity_bytes=2000)  # holds <3 entries: constant churn
+    def reader(i):
+        key = f"k{i % 8}"
+        for _ in range(30):
+            data = cache.get_through(key, lambda: payloads[key])
+            assert data == payloads[key]
+
+    _fan(8, reader)
+    assert cache.stats["evictions"] > 0  # the pressure was real
+    assert cache.used_bytes() <= 2000
+
+
+def test_memory_backend_capacity_and_concurrent_readers():
+    mem = MemoryBackend(capacity_bytes=1500)
+    mem.put("a", b"a" * 700)
+    with pytest.raises(BackendError, match="full"):
+        mem.put("b", b"b" * 1000)  # would overflow
+    mem.put("b", b"b" * 700)
+    assert mem.used_bytes() == 1400
+
+    stop = threading.Event()
+
+    def churn():
+        while not stop.is_set():
+            mem.delete("b")
+            try:
+                mem.put("b", b"b" * 700)
+            except BackendError:
+                pass
+
+    def reader(i):
+        if i == 0:
+            churn()
+            return
+        for _ in range(200):
+            try:
+                data = mem.get("b")
+            except BackendError:
+                continue  # clean miss mid-delete is fine
+            assert data == b"b" * 700  # never torn
+        if i == 3:
+            stop.set()
+
+    _fan(4, reader)
+    stop.set()
+    assert mem.get("a") == b"a" * 700
+
+
+# ----------------------------------------------------------- PeerExchange
+def test_peer_exchange_disjoint_slices_one_remote_copy():
+    """R replicas exchanging one object read each remote byte once."""
+    payload = os.urandom(1 << 20)
+    px = PeerExchange(slice_bytes=64 << 10)
+    served = [0]
+    lock = threading.Lock()
+
+    def read_range(off, nb):
+        with lock:
+            served[0] += nb
+        time.sleep(0.001)  # let every replica join before slices run out
+        return payload[off:off + nb]
+
+    out = [None] * 8
+    stats = [ExchangeStats() for _ in range(8)]
+
+    def replica(i):
+        out[i] = px.fetch("obj", len(payload), read_range, stats[i])
+
+    _fan(8, replica)
+    assert all(o == payload for o in out)
+    assert served[0] == len(payload)  # exactly 1x the object, fleet-wide
+    assert sum(s.remote_bytes for s in stats) == len(payload)
+    assert sum(s.peer_bytes for s in stats) == 7 * len(payload)
+    assert all(s.refetched_slices == 0 for s in stats)
+
+
+def test_peer_dying_mid_exchange_degrades_to_remote_reads():
+    """A peer that claims a slice and dies stops publishing; its claim
+    expires and a live replica reclaims it — no hang, no missing bytes."""
+    payload = os.urandom(256 << 10)
+    px = PeerExchange(slice_bytes=64 << 10, claim_timeout_s=0.2)
+    # the dying peer: joins the session, claims one slice, never publishes
+    sess = px._session("obj", len(payload))
+    dead_claim = sess.next_claim()
+    assert dead_claim is not None and dead_claim >= 0
+
+    def read_range(off, nb):
+        return payload[off:off + nb]
+
+    out = [None] * 2
+    stats = [ExchangeStats() for _ in range(2)]
+    t0 = time.monotonic()
+    _fan(2, lambda i: out.__setitem__(
+        i, px.fetch("obj", len(payload), read_range, stats[i])))
+    assert time.monotonic() - t0 < 5.0  # bounded by the claim timeout
+    assert all(o == payload for o in out)
+    assert sum(s.reclaimed_slices for s in stats) >= 1
+
+
+def test_peer_corrupt_slice_fails_digest_and_is_refetched():
+    """Digests are verified on every exchanged slice: a torn/bit-flipped
+    publish is discarded and that slice re-read from remote."""
+    payload = os.urandom(256 << 10)
+    px = PeerExchange(slice_bytes=64 << 10)
+    sess = px._session("obj", len(payload))
+    bad = sess.next_claim()
+    off, nb = sess.slices[bad]
+    good = payload[off:off + nb]
+    corrupt = bytes([good[0] ^ 0xFF]) + good[1:]
+    sess.publish(bad, corrupt, _digest(good))  # digest does not match bytes
+
+    def read_range(off, nb):
+        return payload[off:off + nb]
+
+    stats = ExchangeStats()
+    out = px.fetch("obj", len(payload), read_range, stats)
+    assert out == payload  # corrupt slice never reached the assembly
+    assert stats.refetched_slices == 1
+
+
+def test_peer_failed_remote_read_releases_claim():
+    """A claimer whose remote read raises gives the claim back, so a
+    healthy peer can finish the session."""
+    payload = os.urandom(128 << 10)
+    px = PeerExchange(slice_bytes=32 << 10)
+    fail_once = [True]
+
+    def flaky(off, nb):
+        if fail_once[0]:
+            fail_once[0] = False
+            raise BackendError("remote flaked")
+        return payload[off:off + nb]
+
+    with pytest.raises(BackendError, match="flaked"):
+        px.fetch("obj", len(payload), flaky)
+    out = px.fetch("obj", len(payload),
+                   lambda off, nb: payload[off:off + nb])
+    assert out == payload
+
+
+def test_short_remote_read_rejected():
+    payload = os.urandom(64 << 10)
+    px = PeerExchange(slice_bytes=32 << 10)
+    with pytest.raises(BackendError, match="returned"):
+        px.fetch("obj", len(payload),
+                 lambda off, nb: payload[off:off + nb - 1])
+
+
+# -------------------------------------------------- shared-pipe throttle
+@pytest.mark.slow
+def test_object_store_shared_pipe_aggregates_concurrent_readers():
+    """Concurrent reads split the configured bandwidth (one shared pipe),
+    they do not each get a private copy of it."""
+    be = ObjectStoreBackend(bandwidth_mbps=1.0)
+    be.bandwidth_mbps = None
+    be.put("blob", os.urandom(100_000))
+    be.bandwidth_mbps = 1.0
+    t0 = time.perf_counter()
+    _fan(2, lambda i: be.get("blob"))
+    wall = time.perf_counter() - t0
+    # 2 x 100 KB through a 1 MB/s pipe needs >= ~0.2 s in aggregate; the
+    # old per-request model finished in ~0.1 s
+    assert wall >= 0.18
+    assert be.stats["bytes_out"] == 200_000
+
+
+# ------------------------------------------------------------ end-to-end
+def _small_policy(remote, payload_bytes, delta=None):
+    return CheckpointPolicy(
+        engine=EnginePolicy(host_cache_bytes=payload_bytes * 3 + (32 << 20),
+                            flush_threads=1),
+        storage=StoragePolicy(tiers=(Tier("object", remote),)),
+        delta=delta)
+
+
+def _state(tag: float):
+    return {"model": {"w0": jnp.arange(8192, dtype=jnp.float32) + tag,
+                      "w1": jnp.ones((64, 64), jnp.float32) * tag},
+            "meta": {"step": int(tag)}}
+
+
+def test_fabric_end_to_end_amplification_and_ledger(tmp_path):
+    """8 replicas with private local tiers warm-start through one fabric:
+    remote egress stays ~1x one checkpoint, bytes are exact on every
+    replica, a warmed replica re-resolves locally, and the per-step
+    ledger reaches ``stats --fleet``."""
+    remote = ObjectStoreBackend()
+    state = _state(3.0)
+    payload = sum(np.asarray(v).nbytes for v in state["model"].values())
+    mgr = CheckpointManager.from_policy(
+        str(tmp_path / "train"), _small_policy(remote, payload))
+    mgr.save(3, state, blocking=True)
+    mgr.repository.wait_cascaded()
+    ckpt_bytes = mgr.repository.manifest(3).total_bytes
+    mgr.close()
+
+    fabric = FleetFabric(slice_bytes=16 << 10)
+    b0 = remote.stats["bytes_out"]
+    repos = []
+
+    def replica(i):
+        rdir = str(tmp_path / f"replica{i}")
+        repo = CheckpointRepository(rdir, remote_tiers=[Tier("object", remote)],
+                                    auto_cascade=False, auto_gc=False)
+        repos.append(repo)
+        tpl = {k: np.empty(np.asarray(v).shape, np.float32)
+               for k, v in state["model"].items()}
+        params, _ = load_params_for_serving(rdir, tpl, step=3, threads=1,
+                                            repository=repo, fleet=fabric)
+        for k, v in state["model"].items():
+            np.testing.assert_array_equal(np.asarray(params[k]),
+                                          np.asarray(v))
+
+    _fan(8, replica)
+    remote_bytes = remote.stats["bytes_out"] - b0
+    assert remote_bytes <= ckpt_bytes * 1.25  # ~1x, not 8x
+    st = fabric.step_stats()[3]
+    assert st["replicas"] == 8 and not st["delta"]
+    # the ledger counts fabric-moved bytes; the backend additionally sees
+    # each replica's direct manifest read from the restore chain walk
+    assert 0 < st["remote_bytes"] <= remote_bytes
+    assert remote_bytes - st["remote_bytes"] < 4096 * 8
+
+    # a warmed replica re-resolves locally: zero new remote bytes
+    b1 = remote.stats["bytes_out"]
+    assert repos[0].resolve_for_restore(3) is not None
+    assert remote.stats["bytes_out"] == b1
+
+    # the ledger landed in each replica's catalog for the admin CLI
+    ldir = repos[0].root
+    assert os.path.exists(os.path.join(ldir, FLEET_STATS_KEY))
+    rc = storage_cli.main(["--root", ldir, "stats", "--fleet"])
+    assert rc == 0
+    for repo in repos:
+        repo.close()
+
+
+def test_fabric_cli_stats_fleet_output(tmp_path, capsys):
+    remote = ObjectStoreBackend()
+    state = _state(1.0)
+    payload = sum(np.asarray(v).nbytes for v in state["model"].values())
+    mgr = CheckpointManager.from_policy(
+        str(tmp_path / "train"), _small_policy(remote, payload))
+    mgr.save(1, state, blocking=True)
+    mgr.repository.wait_cascaded()
+    mgr.close()
+    rdir = str(tmp_path / "replica")
+    repo = CheckpointRepository(rdir, remote_tiers=[Tier("object", remote)],
+                                auto_cascade=False, auto_gc=False)
+    repo.attach_fleet(FleetFabric())
+    assert repo.resolve_for_restore(1) is not None
+    repo.close()
+    capsys.readouterr()
+    assert storage_cli.main(["--root", rdir, "stats", "--fleet"]) == 0
+    out = capsys.readouterr().out
+    assert "replicas=" in out and "remote=" in out and "peer=" in out
+    # --step filter: present vs absent
+    assert storage_cli.main(["--root", rdir, "stats", "--fleet",
+                             "--step", "1"]) == 0
+    assert storage_cli.main(["--root", rdir, "stats", "--fleet",
+                             "--step", "99"]) == 1
+
+
+def test_fabric_cli_stats_fleet_without_ledger(tmp_path, capsys):
+    repo = CheckpointRepository(str(tmp_path), auto_cascade=False)
+    repo.close()
+    assert storage_cli.main(["--root", str(tmp_path),
+                             "stats", "--fleet"]) == 0
+    assert "no fleet transfer ledger" in capsys.readouterr().out
+
+
+def test_fabric_delta_pull_moves_only_chain_bytes(tmp_path):
+    """A fleet already on step 1 warming to delta step 2 transfers the
+    delta chain only — never a fresh keyframe."""
+    remote = ObjectStoreBackend()
+    state = _state(1.0)
+    payload = sum(np.asarray(v).nbytes for v in state["model"].values())
+    mgr = CheckpointManager.from_policy(
+        str(tmp_path / "train"),
+        _small_policy(remote, payload, delta=DeltaPolicy(keyframe_every=4)))
+    mgr.save(1, state, blocking=True)
+    mgr.wait_for_commit(1)
+    mgr.repository.wait_cascaded()
+    # snapshot the fleet's "already on step 1" local tier
+    seed = str(tmp_path / "fleet-at-1")
+    shutil.copytree(str(tmp_path / "train"), seed)
+    state2 = {"model": {k: v + np.float32(0.5)
+                        for k, v in state["model"].items()},
+              "meta": {"step": 2}}
+    mgr.save(2, state2, blocking=True)
+    mgr.wait_for_commit(2)
+    mgr.repository.wait_cascaded()
+    kf_bytes = mgr.repository.manifest(1).total_bytes
+    delta_bytes = mgr.repository.manifest(2).total_bytes
+    assert delta_bytes < kf_bytes  # the delta really is smaller
+    mgr.close()
+
+    fabric = FleetFabric(slice_bytes=16 << 10)
+    b0 = remote.stats["bytes_out"]
+    rdir = str(tmp_path / "replica")
+    shutil.copytree(seed, rdir)
+    repo = CheckpointRepository(rdir, remote_tiers=[Tier("object", remote)],
+                                auto_cascade=False, auto_gc=False)
+    tpl = {k: np.empty(np.asarray(v).shape, np.float32)
+           for k, v in state["model"].items()}
+    params, _ = load_params_for_serving(rdir, tpl, step=2, threads=1,
+                                        repository=repo, fleet=fabric)
+    for k, v in state2["model"].items():
+        np.testing.assert_array_equal(np.asarray(params[k]), np.asarray(v))
+    pulled = remote.stats["bytes_out"] - b0
+    assert pulled < kf_bytes            # not a keyframe re-read
+    assert pulled <= delta_bytes * 1.25 + 16384  # chain bytes + manifest
+    assert fabric.step_stats()[2]["delta"] is True
+    repo.close()
+
+
+def test_fabric_falls_back_when_no_remote_tier_has_step(tmp_path):
+    """A fabric with nothing to fetch defers to normal resolution (which
+    raises the usual not-on-any-tier error) instead of masking it."""
+    repo = CheckpointRepository(str(tmp_path), auto_cascade=False)
+    repo.attach_fleet(FleetFabric())
+    with pytest.raises(FileNotFoundError):
+        repo.resolve_for_restore(42)
+    repo.close()

@@ -230,6 +230,31 @@ def test_verify_detects_bitrot(tmp_path):
                              "--fast"]) == 0  # sizes alone can't see it
 
 
+def test_verify_localizes_tampered_raw_keyframe_chunk(tmp_path):
+    """Raw keyframes carry fused per-chunk digests too: when the
+    whole-file checksum fails, verify names the flipped chunk instead of
+    leaving a multi-GB haystack."""
+    from repro.core.layout import FileReader
+    with CheckpointManager(str(tmp_path)) as mgr:
+        mgr.save(1, tiny_state(1.0), blocking=True)
+        [f] = glob.glob(os.path.join(step_dir(str(tmp_path), 1), "*.dsllm"))
+        fr = FileReader(f)
+        name, e = sorted(fr.tensors.items())[0]
+        assert e.raw_chunks and all(d is not None
+                                    for _, _, d in e.raw_chunks)
+        lo, hi, _dig = e.raw_chunks[0]
+        with open(f, "r+b") as fh:  # flip a byte inside that chunk
+            fh.seek(e.offset + lo + (hi - lo) // 2)
+            b = fh.read(1)
+            fh.seek(e.offset + lo + (hi - lo) // 2)
+            fh.write(bytes([b[0] ^ 0xFF]))
+        res = mgr.repository.verify_step(1)
+        assert not res.ok and res.checksum_mismatch
+        assert any(f"{name} raw chunk [{lo}:{hi})" in m
+                   for m in res.chunk_mismatch)
+        assert any("(chunk)" in p for p in res.problems)
+
+
 def test_streamed_checksums_commit_clean_and_catch_fused_tamper(tmp_path):
     """The fused-encode pipeline streams the whole-file checksum at write
     time and the commit lane reuses it instead of re-reading the shard:
